@@ -1,0 +1,81 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every ``fig*.py`` module exposes ``run() -> List[Row]``; a Row is
+``(name, value, derived)`` where ``name`` identifies the measurement,
+``value`` is the primary number, and ``derived`` carries the comparison
+against the paper's claim (or context). ``benchmarks.run`` aggregates all
+figures into one CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sim import JobSpec, faults
+from repro.sim.runner import run_single, slowdown
+
+Row = Tuple[str, float, str]
+
+# Small representative subset of the suite for the heavier sweeps; the
+# overall figures use more benches. Chosen to span the MOF-ratio axis.
+FAST_BENCHES = ("terasort", "wordcount", "grep", "aggregation")
+SUITE = ("terasort", "wordcount", "secondarysort", "grep", "aggregation",
+         "join", "kmeans", "pagerank", "scan", "sort")
+
+CRASH_FRACS = (0.1, 0.4, 0.7, 1.0)   # paper: 10 %..100 % of map progress
+SEEDS = (1, 2)
+
+
+def crash_fault(frac: float) -> Callable:
+    def f(sim, job):
+        faults.crash_busiest_node_at_map_progress(sim, job, frac)
+    return f
+
+
+def mof_fault(frac: float) -> Callable:
+    def f(sim, job):
+        faults.lose_mof_at_map_progress(sim, job, frac)
+    return f
+
+
+def delay_fault(at: float, factor: float = 0.05,
+                duration: float = 180.0) -> Callable:
+    # factor strictly below GlanceConfig.threshold_slowdown (0.1): Eq. 3
+    # is a strict inequality, so a slowdown exactly AT the threshold is
+    # by definition not a straggler.
+    def f(sim, job):
+        # slow the node hosting the most of the job's work
+        def fire():
+            counts = {}
+            for t in job.maps:
+                for a in t.running_attempts():
+                    counts[a.node_id] = counts.get(a.node_id, 0) + 1
+            victim = max(sorted(counts), key=lambda n: counts[n]) \
+                if counts else sim.cluster.node_ids[0]
+            sim.set_node_speed(victim, factor)
+            sim.engine.after(duration, sim.set_node_speed, victim, 1.0)
+        sim.engine.at(at, fire)
+    return f
+
+
+def avg_slowdown(policy: str, input_gb: float, fault_for,
+                 benches: Sequence[str] = FAST_BENCHES,
+                 fracs: Sequence[float] = CRASH_FRACS,
+                 seeds: Sequence[int] = SEEDS,
+                 **policy_kwargs) -> Tuple[float, List[float]]:
+    """Average slowdown over benches × fault-points × seeds."""
+    sds: List[float] = []
+    for bench in benches:
+        for frac in fracs:
+            for seed in seeds:
+                sd, _ = slowdown(policy, JobSpec("j0", bench, input_gb),
+                                 fault_for(frac), seed=seed,
+                                 **policy_kwargs)
+                sds.append(sd)
+    return float(np.mean(sds)), sds
+
+
+def vs_paper(measured: float, paper: float) -> str:
+    return f"paper={paper:g} measured={measured:.2f}"

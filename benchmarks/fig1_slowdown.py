@@ -1,0 +1,23 @@
+"""Fig. 1: job slowdown caused by a single node failure under YARN's
+default speculation. Paper: 4.6×–9.2× for 1–10 GB jobs."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, avg_slowdown, crash_fault, vs_paper
+
+SIZES = (1.0, 2.0, 5.0, 10.0)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for gb in SIZES:
+        mean, _ = avg_slowdown("yarn", gb, crash_fault)
+        rows.append((f"fig1/yarn_slowdown_{gb:g}GB", mean,
+                     "paper band 4.6-9.2x for 1-10GB"))
+    small = [r[1] for r in rows]
+    rows.append(("fig1/yarn_slowdown_band_lo", min(small),
+                 vs_paper(min(small), 4.6)))
+    rows.append(("fig1/yarn_slowdown_band_hi", max(small),
+                 vs_paper(max(small), 9.2)))
+    return rows

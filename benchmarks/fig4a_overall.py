@@ -1,0 +1,21 @@
+"""Fig. 4(a): overall job execution time under node failures injected at
+10 %..100 % of map progress. Paper: Bino improves JCT 7.3× @1 GB and
+1.9× @10 GB vs YARN."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, avg_slowdown, crash_fault, vs_paper
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for gb, paper in ((1.0, 7.3), (10.0, 1.9)):
+        yarn, _ = avg_slowdown("yarn", gb, crash_fault)
+        bino, _ = avg_slowdown("bino", gb, crash_fault)
+        imp = yarn / bino
+        rows.append((f"fig4a/yarn_slowdown_{gb:g}GB", yarn, ""))
+        rows.append((f"fig4a/bino_slowdown_{gb:g}GB", bino, ""))
+        rows.append((f"fig4a/improvement_{gb:g}GB", imp,
+                     vs_paper(imp, paper)))
+    return rows

@@ -1,0 +1,34 @@
+"""Fig. 4(b): dependency-oblivious speculation — JCT when a completed map's
+MOF is lost (node stays healthy; no map task failure). Paper: YARN slows
+4.0× vs fault-free; Bino is 2.0× better than YARN.
+
+Scenario notes (§IV.B.2 "measurements were collected when there is at least
+one fetch failure of MOF"): the qualifying runs lose an EARLY map's MOF
+after the map phase drains, so most reducers already fetched it and only
+the shuffle stragglers hit fetch failures — few reporters means the AM's
+3-report fuse burns through multiple 180 s fetch cycles, which is the
+Hadoop stall the paper measures. Only shuffle-heavy applications produce
+the qualifying condition (light-shuffle jobs finish fetching the partition
+before the loss lands), hence the bench subset.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, avg_slowdown, mof_fault, vs_paper
+
+MOF_FRACS = (1.0,)  # lose the MOF once the map phase has drained
+SHUFFLE_HEAVY = ("terasort", "secondarysort", "join", "pagerank")
+
+
+def run() -> List[Row]:
+    yarn, _ = avg_slowdown("yarn", 10.0, mof_fault, fracs=MOF_FRACS,
+                           benches=SHUFFLE_HEAVY, seeds=(1, 2, 3))
+    bino, _ = avg_slowdown("bino", 10.0, mof_fault, fracs=MOF_FRACS,
+                           benches=SHUFFLE_HEAVY, seeds=(1, 2, 3))
+    imp = yarn / bino
+    return [
+        ("fig4b/yarn_slowdown_mof_loss", yarn, vs_paper(yarn, 4.0)),
+        ("fig4b/bino_slowdown_mof_loss", bino, ""),
+        ("fig4b/improvement", imp, vs_paper(imp, 2.0)),
+    ]

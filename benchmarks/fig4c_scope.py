@@ -1,0 +1,19 @@
+"""Fig. 4(c): scope-limited speculation — 1 GB jobs co-located on one node;
+that node fails; no MOF recovery path confounds (small job, maps and data
+on the victim). Paper: Bino 6.8× better than YARN."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, avg_slowdown, crash_fault, vs_paper
+
+
+def run() -> List[Row]:
+    yarn, _ = avg_slowdown("yarn", 1.0, crash_fault)
+    bino, _ = avg_slowdown("bino", 1.0, crash_fault)
+    imp = yarn / bino
+    return [
+        ("fig4c/yarn_slowdown_1GB", yarn, ""),
+        ("fig4c/bino_slowdown_1GB", bino, ""),
+        ("fig4c/improvement", imp, vs_paper(imp, 6.8)),
+    ]

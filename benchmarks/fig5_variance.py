@@ -1,0 +1,32 @@
+"""Fig. 5: distribution of job slowdown across the benchmark suite under a
+node failure. Paper: YARN mean ≈ 2.8 with σ = 0.61; Bino cuts the variance
+to σ = 0.107 (and the mean with it)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import (
+    Row, SUITE, avg_slowdown, crash_fault, vs_paper)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    stats = {}
+    for pol in ("yarn", "bino"):
+        _, sds = avg_slowdown(pol, 10.0, crash_fault, benches=SUITE,
+                              fracs=(0.4, 0.8), seeds=(1,))
+        # per-bench mean slowdown → distribution over applications
+        per_bench = np.asarray(sds).reshape(len(SUITE), -1).mean(axis=1)
+        stats[pol] = (float(per_bench.mean()), float(per_bench.std()))
+    rows.append(("fig5/yarn_mean_slowdown", stats["yarn"][0],
+                 vs_paper(stats["yarn"][0], 2.8)))
+    rows.append(("fig5/yarn_sigma", stats["yarn"][1],
+                 vs_paper(stats["yarn"][1], 0.61)))
+    rows.append(("fig5/bino_mean_slowdown", stats["bino"][0], ""))
+    rows.append(("fig5/bino_sigma", stats["bino"][1],
+                 vs_paper(stats["bino"][1], 0.107)))
+    rows.append(("fig5/sigma_reduction", stats["yarn"][1] / max(
+        stats["bino"][1], 1e-9), "paper: 0.61 -> 0.107 (5.7x)"))
+    return rows

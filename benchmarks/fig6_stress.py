@@ -1,0 +1,59 @@
+"""Fig. 6: system efficiency under stress — PACMan-mix workload (85 % 1 GB,
+8 % 10 GB, 5 % 50 GB, 2 % 100 GB), Poisson arrivals, injected task
+failures, node crashes (with later restore) and transient network delays.
+Paper: Bino decreases mean JCT of the whole workload by 30 %."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.sim import faults
+from repro.sim.runner import run_workload
+from repro.sim.workload import pacman_workload
+
+from benchmarks.common import Row, vs_paper
+
+N_JOBS = 36
+MEAN_INTERARRIVAL = 25.0
+
+
+def _fault_script(sim) -> None:
+    """Deterministic background fault load over the workload window."""
+    rng = np.random.default_rng(99)
+    horizon = N_JOBS * MEAN_INTERARRIVAL
+    nodes = sim.cluster.node_ids
+    # node crashes, restored after a few minutes (capacity returns)
+    for t in rng.uniform(60.0, horizon, size=9):
+        nid = nodes[int(rng.integers(len(nodes)))]
+        faults.crash_node_at(sim, nid, float(t), restore_after=180.0)
+    # transient slowdowns (below the Eq. 3 threshold so Bino can see them)
+    for t in rng.uniform(30.0, horizon, size=12):
+        nid = nodes[int(rng.integers(len(nodes)))]
+        faults.slow_node_at(sim, nid, float(t), 0.05,
+                            duration=float(rng.uniform(90, 240)))
+    # heartbeat outages (network delays)
+    for t in rng.uniform(30.0, horizon, size=10):
+        nid = nodes[int(rng.integers(len(nodes)))]
+        faults.heartbeat_outage_at(sim, nid, float(t),
+                                   float(rng.uniform(4, 15)))
+
+
+def run() -> List[Row]:
+    specs = pacman_workload(N_JOBS, mean_interarrival=MEAN_INTERARRIVAL,
+                            seed=7)
+    jcts = {}
+    for pol in ("yarn", "bino"):
+        results = run_workload(pol, specs, _fault_script, seed=11)
+        jcts[pol] = np.asarray([r.jct for r in results])
+    rows: List[Row] = []
+    for pol in ("yarn", "bino"):
+        rows.append((f"fig6/{pol}_mean_jct_s", float(jcts[pol].mean()), ""))
+        rows.append((f"fig6/{pol}_p50_jct_s",
+                     float(np.percentile(jcts[pol], 50)), ""))
+        rows.append((f"fig6/{pol}_p90_jct_s",
+                     float(np.percentile(jcts[pol], 90)), ""))
+    reduction = 1.0 - jcts["bino"].mean() / jcts["yarn"].mean()
+    rows.append(("fig6/mean_jct_reduction", reduction,
+                 vs_paper(reduction, 0.30)))
+    return rows

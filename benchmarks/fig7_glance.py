@@ -1,0 +1,123 @@
+"""Fig. 7: understanding neighborhood glance.
+
+(a) per-assessment ablation (spatial / temporal / failure only) against
+    node delay and node failure, small and large jobs;
+(b) Eq. 4 failure-assessment accuracy vs window length L under mixed
+    crash/transient-delay injections (the failure ratio sweep);
+(c) SIZE_NEIGHBOR sensitivity: job slowdown and #speculative tasks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core.glance import GlanceConfig
+from repro.core.speculator import BinoConfig, BinocularSpeculator
+from repro.sim import JobSpec, Simulation, faults
+from repro.sim.runner import slowdown
+
+from benchmarks.common import Row, crash_fault, delay_fault, vs_paper
+
+
+def _bino_factory(glance: GlanceConfig):
+    cfg = BinoConfig(glance=glance)
+    return lambda node_ids: BinocularSpeculator(node_ids, cfg)
+
+
+def _ablation() -> List[Row]:
+    rows: List[Row] = []
+    variants = {
+        "spatial": GlanceConfig(enable_temporal=False, enable_failure=False),
+        "temporal": GlanceConfig(enable_spatial=False, enable_failure=False),
+        "failure": GlanceConfig(enable_spatial=False, enable_temporal=False),
+        "all": GlanceConfig(),
+    }
+    for gb in (1.0, 10.0):
+        for fname, fault in (("fail", crash_fault(0.5)),
+                             ("delay", delay_fault(20.0))):
+            yarn_sd, _ = slowdown("yarn", JobSpec("j0", "terasort", gb),
+                                  fault, seed=1)
+            for vname, g in variants.items():
+                sd, _ = slowdown("bino", JobSpec("j0", "terasort", gb),
+                                 fault, seed=1,
+                                 policy_factory=_bino_factory(g))
+                rows.append((
+                    f"fig7a/{vname}_only_{fname}_{gb:g}GB",
+                    yarn_sd / sd,
+                    f"improvement over yarn (yarn {yarn_sd:.2f}x "
+                    f"-> bino {sd:.2f}x)"))
+    return rows
+
+
+def _accuracy() -> List[Row]:
+    """Eq. 4 window sweep: classify crashes vs transient outages.
+
+    Protocol: six victim nodes each experience three TEACHING transient
+    outages (lognormal durations — Eq. 4 learns each node's loss pattern),
+    then one TEST event: a permanent crash with probability
+    ``failure_ratio``, else one more transient. Accuracy = fraction of
+    test events classified correctly (crash ⇔ the policy declared the
+    node failed). Longer windows L smooth the outage-duration estimate;
+    higher failure ratios offer fewer confusable transients."""
+    rows: List[Row] = []
+    for L in (1, 2, 4, 8):
+        for ratio in (0.25, 0.5, 0.75, 1.0):
+            correct = total = 0
+            for seed in (1, 2, 3):
+                rng = np.random.default_rng(1000 * L + seed)
+                g = GlanceConfig(failure_window=L)
+                sim = Simulation(
+                    policy="bino", seed=seed,
+                    policy_factory=_bino_factory(g))
+                # staggered jobs keep the control plane alive through the
+                # whole injection schedule (the sim stops when idle)
+                for j in range(4):
+                    sim.submit(JobSpec(f"j{j}", "aggregation", 20.0,
+                                       submit_time=100.0 * j))
+                tests = []  # (node, t_test, is_crash)
+                victims = sim.cluster.node_ids[8:14]
+                for vi, nid in enumerate(victims):
+                    t = 20.0 + vi * 7.0
+                    for k in range(3):  # teaching outages
+                        dur = float(np.clip(rng.lognormal(2.0, 0.6),
+                                            2.0, 25.0))
+                        faults.heartbeat_outage_at(sim, nid, t, dur)
+                        t += 50.0
+                    if rng.uniform() < ratio:
+                        faults.crash_node_at(sim, nid, t)
+                        tests.append((nid, t, True))
+                    else:
+                        dur = float(np.clip(rng.lognormal(2.0, 0.6),
+                                            2.0, 25.0))
+                        faults.heartbeat_outage_at(sim, nid, t, dur)
+                        tests.append((nid, t, False))
+                sim.run()
+                calls = sim.policy_failed_calls
+                for nid, t, is_crash in tests:
+                    flagged = any(n == nid and ct >= t
+                                  for ct, n in calls)
+                    correct += int(flagged == is_crash)
+                    total += 1
+            acc = correct / max(total, 1)
+            rows.append((f"fig7b/accuracy_L{L}_ratio{ratio:g}", acc,
+                         "higher L and ratio -> higher accuracy"))
+    return rows
+
+
+def _neighborhood() -> List[Row]:
+    rows: List[Row] = []
+    for k in (2, 4, 6, 8):
+        g = GlanceConfig(size_neighbor=k)
+        sd, res = slowdown("bino", JobSpec("j0", "terasort", 10.0),
+                           delay_fault(20.0), seed=1,
+                           policy_factory=_bino_factory(g))
+        rows.append((f"fig7c/slowdown_k{k}", sd,
+                     f"n_spec={res.n_spec_attempts} (small k ⇒ limited "
+                     "spatial capacity; flat beyond)"))
+    return rows
+
+
+def run() -> List[Row]:
+    return _ablation() + _accuracy() + _neighborhood()

@@ -1,0 +1,37 @@
+"""Fig. 8: tuning collective speculation — COLL_INIT_NUM and COLL_MULTIPLY
+against a delayed node and a failed node. Paper: COLL_MULTIPLY has the
+bigger effect; COLL_INIT_NUM helps less; aggressive settings burn
+containers."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.collective import CollectiveConfig
+from repro.core.speculator import BinoConfig, BinocularSpeculator
+from repro.sim import JobSpec
+from repro.sim.runner import slowdown
+
+from benchmarks.common import Row, crash_fault, delay_fault
+
+
+def _factory(init: int, mult: int):
+    cfg = BinoConfig(collective=CollectiveConfig(
+        coll_init_num=init, coll_multiply=mult))
+    return lambda node_ids: BinocularSpeculator(node_ids, cfg)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    # A busy-ish cluster (12 workers) so the ramp actually gates launches.
+    for fname, fault in (("delay", delay_fault(20.0)),
+                         ("fail", crash_fault(0.5))):
+        for init, mult in ((1, 1), (1, 2), (1, 4), (2, 2), (4, 2)):
+            sd, res = slowdown(
+                "bino", JobSpec("j0", "terasort", 10.0), fault,
+                seed=1, n_workers=12,
+                policy_factory=_factory(init, mult))
+            rows.append((
+                f"fig8/{fname}_init{init}_mult{mult}", sd,
+                f"n_spec={res.n_spec_attempts} "
+                "(paper: COLL_MULTIPLY dominates)"))
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark aggregator: one module per paper figure, plus the dry-run
+roofline summary. Prints ``name,value,derived`` CSV rows.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run             # all figures
+    PYTHONPATH=src python -m benchmarks.run --only fig4a,fig9
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+FIGS = [
+    "fig1_slowdown",
+    "fig4a_overall",
+    "fig4b_dependency",
+    "fig4c_scope",
+    "fig5_variance",
+    "fig6_stress",
+    "fig7_glance",
+    "fig8_collective",
+    "fig9_rollback",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure prefixes (e.g. fig4a,fig9)")
+    args = ap.parse_args()
+    selected = FIGS
+    if args.only:
+        keys = [k.strip() for k in args.only.split(",")]
+        selected = [f for f in FIGS if any(f.startswith(k) for k in keys)]
+
+    print("name,value,derived")
+    failures = []
+    for mod_name in selected:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            rows = mod.run()
+        except Exception as e:
+            failures.append(mod_name)
+            print(f"{mod_name}/ERROR,nan,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+            continue
+        for name, value, derived in rows:
+            print(f"{name},{value:.4g},{derived}")
+        print(f"{mod_name}/wall_s,{time.time() - t0:.1f},", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""The paper in one terminal screen: a 1 GB Terasort job on a 20-node YARN
+cluster, one node crash at 50 % map progress, under both speculation
+policies — with the recovery timeline printed.
+
+    PYTHONPATH=src python examples/cluster_sim.py
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.types import AttemptState
+from repro.sim import JobSpec, Simulation, faults
+
+
+def run(policy: str, gb: float, frac: float, seed: int):
+    sim = Simulation(policy=policy, seed=seed)
+    job = sim.submit(JobSpec("demo", "terasort", gb))
+    faults.crash_busiest_node_at_map_progress(sim, job, frac)
+
+    timeline = []
+    orig = Simulation._start_attempt
+    def patched(self, req, node_id):
+        if req.speculative or req.rollback or req.reason:
+            timeline.append((self.engine.now, f"launch {req.task.task_id} "
+                             f"on {node_id} ({req.reason or 'speculative'}"
+                             f"{'+rollback' if req.rollback else ''})"))
+        return orig(self, req, node_id)
+    Simulation._start_attempt = patched
+    orig_nl = Simulation.node_lost
+    def pnl(self, node_id, by_policy=False):
+        timeline.append((self.engine.now,
+                         f"node {node_id} declared lost "
+                         f"({'policy Eq.4' if by_policy else 'NM expiry 600s'})"))
+        return orig_nl(self, node_id, by_policy=by_policy)
+    Simulation.node_lost = pnl
+    try:
+        sim.run()
+    finally:
+        Simulation._start_attempt = orig
+        Simulation.node_lost = orig_nl
+    return job.result, timeline
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gb", type=float, default=1.0)
+    ap.add_argument("--frac", type=float, default=0.5,
+                    help="map progress at which the node crashes")
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args()
+
+    # fault-free baseline
+    sim0 = Simulation(policy="yarn", seed=args.seed)
+    sim0.submit(JobSpec("demo", "terasort", args.gb))
+    base = sim0.run()[0].jct
+
+    print(f"=== {args.gb:g} GB terasort, node crash at "
+          f"{args.frac:.0%} map progress (fault-free JCT {base:.0f}s) ===")
+    for policy in ("yarn", "bino"):
+        res, timeline = run(policy, args.gb, args.frac, args.seed)
+        print(f"\n--- {policy.upper()} ---  JCT {res.jct:.0f}s "
+              f"({res.jct / base:.1f}x slowdown), "
+              f"{res.n_spec_attempts} speculative attempts")
+        for t, line in timeline[:12]:
+            print(f"  t={t:7.1f}s  {line}")
+        if len(timeline) > 12:
+            print(f"  ... {len(timeline) - 12} more events")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Sharded, atomic, async checkpointing.
+
+Semantics borrowed from the paper's §III.B "keep both outputs" rule: a
+speculative (shadow) writer and the primary may BOTH complete a step's
+checkpoint; both directories are retained until the commit barrier picks
+the first valid one — only then are losers garbage-collected. Commits are
+atomic (`os.rename` of a finished tmp dir), so a writer dying mid-save can
+never corrupt the latest checkpoint; restart always finds the newest
+manifest-complete step.
+
+Layout:
+    <dir>/step_000042/            committed
+    <dir>/step_000042.tmp-<tag>/  in-flight writer (primary or shadow)
+    each dir: manifest.json + one .npy per pytree leaf
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_pytree(dirpath: str, tree: Any, *, step: int,
+                metadata: Optional[Dict[str, Any]] = None,
+                tag: str = "primary") -> str:
+    """Write one checkpoint dir atomically; returns the committed path.
+    If another writer already committed this step, keeps ours as a shadow
+    copy (``step_N.shadow-<tag>``) — both outputs retained (§III.B)."""
+    final = os.path.join(dirpath, f"step_{step:09d}")
+    tmp = final + f".tmp-{tag}"
+    os.makedirs(tmp, exist_ok=True)
+    names = {}
+    for i, (key, leaf) in enumerate(_leaf_paths(tree)):
+        fname = f"leaf_{i:05d}.npy"
+        names[fname] = key
+        np.save(os.path.join(tmp, fname), np.asarray(leaf))
+    manifest = {"step": step, "leaves": names, "tag": tag,
+                "metadata": metadata or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    try:
+        os.rename(tmp, final)
+        return final
+    except OSError:
+        shadow = final + f".shadow-{tag}"
+        shutil.rmtree(shadow, ignore_errors=True)
+        os.rename(tmp, shadow)
+        return shadow
+
+
+def restore_pytree(dirpath: str, like: Any, *, step: Optional[int] = None
+                   ) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore the newest (or given) committed step into ``like``'s
+    structure. Returns (tree, step, metadata)."""
+    if step is None:
+        steps = sorted(
+            int(m.group(1)) for m in
+            (_STEP_RE.match(d) for d in os.listdir(dirpath)) if m)
+        if not steps:
+            raise FileNotFoundError(f"no committed checkpoints in {dirpath}")
+        step = steps[-1]
+    d = os.path.join(dirpath, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    arrays = []
+    for i, ref in enumerate(leaves):
+        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        if hasattr(ref, "dtype"):
+            arr = arr.astype(ref.dtype, copy=False)
+        arrays.append(arr)
+    return (jax.tree_util.tree_unflatten(treedef, arrays), step,
+            manifest.get("metadata", {}))
+
+
+class CheckpointManager:
+    """Async save + retention + commit-barrier GC of shadow copies."""
+
+    def __init__(self, dirpath: str, *, keep: int = 3):
+        self.dir = dirpath
+        self.keep = keep
+        os.makedirs(dirpath, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- writing --------------------------------------------------------
+    def save(self, tree: Any, step: int, *, tag: str = "primary",
+             metadata: Optional[Dict[str, Any]] = None) -> str:
+        path = save_pytree(self.dir, tree, step=step, tag=tag,
+                           metadata=metadata)
+        self._gc(step)
+        return path
+
+    def save_async(self, tree: Any, step: int, *, tag: str = "primary",
+                   metadata: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot on the caller's thread (cheap host copy), write on a
+        background thread — training continues during the disk write."""
+        self.wait()
+        snap = jax.tree.map(lambda x: np.array(x), tree)
+
+        def work():
+            try:
+                self.save(snap, step, tag=tag, metadata=metadata)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- reading --------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = [int(m.group(1)) for m in
+                 (_STEP_RE.match(d) for d in os.listdir(self.dir)) if m]
+        return max(steps) if steps else None
+
+    def restore(self, like: Any, *, step: Optional[int] = None):
+        self.wait()
+        return restore_pytree(self.dir, like, step=step)
+
+    # -- retention ------------------------------------------------------
+    def _gc(self, newest_step: int) -> None:
+        """Commit barrier: once step N is committed, shadow/tmp copies of
+        steps ≤ N have lost the race and old steps beyond ``keep`` go."""
+        for d in os.listdir(self.dir):
+            full = os.path.join(self.dir, d)
+            if ".shadow-" in d or ".tmp-" in d:
+                try:
+                    s = int(d.split("step_")[1].split(".")[0])
+                except (IndexError, ValueError):
+                    continue
+                if s <= newest_step - 1:
+                    shutil.rmtree(full, ignore_errors=True)
+        steps = sorted(int(m.group(1)) for m in
+                       (_STEP_RE.match(d) for d in os.listdir(self.dir))
+                       if m)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)

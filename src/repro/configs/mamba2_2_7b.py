@@ -1,0 +1,17 @@
+"""mamba2-2.7b — attention-free SSD (state-space duality) stack.
+[arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,  # pure mamba stack: no FFN slot
+    vocab_size=50280,
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, n_groups=1),
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,263 @@
+"""Neighborhood glance (§III.A): three independent assessments that expand
+the speculator's scope in space (Eq. 1), time (Eq. 2–3), and responsiveness
+(Eq. 4 adaptive failure threshold).
+
+Stateful pieces (per-node ζ history for Δ, per-node outage windows for
+Eq. 4) live here; the math is delegated to ``repro.core.metrics`` so the
+simulator and the JAX runtime assess identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core import metrics as M
+from repro.core.types import AttemptState, ClusterSnapshot, TaskKind, TaskState
+
+
+@dataclasses.dataclass(frozen=True)
+class GlanceConfig:
+    # Eq. 3 slowdown threshold (paper default 0.1).
+    threshold_slowdown: float = 0.1
+    # Eq. 4 window length L (paper tunes 1..8; larger = more accurate).
+    failure_window: int = 4
+    # Nodes per spatial neighborhood, including self (paper: ≥3 useful).
+    size_neighbor: int = 4
+    # Initial per-node unresponsiveness threshold (s) before any history —
+    # deliberately much shorter than YARN's 600 s NM expiry; Eq. 4 then
+    # adapts it per node. Floors/caps keep transient hiccups from flapping.
+    fail_threshold_init: float = 10.0
+    fail_threshold_min: float = 3.0
+    fail_threshold_max: float = 120.0
+    # Safety factor over the Eq. 4 estimate of the next outage duration.
+    fail_threshold_margin: float = 1.5
+    # A node is "responsive" when silent for less than this (≈1.5× the
+    # substrate's heartbeat period; the training runtime heartbeats every
+    # 50 ms and overrides accordingly).
+    responsive_window: float = 1.5
+    # Minimum seconds between Δ samples (Eq. 2 sampling period).
+    temporal_period: float = 3.0
+    # Eq. 1 must hold for this many consecutive assessments before a node
+    # is reported slow — mean−σ alone fires on the ~16 % Gaussian tail of
+    # ordinary execution noise, which burns containers on healthy clusters.
+    spatial_consecutive: int = 3
+    # Eq. 3 reference window: Δ|Ti is compared against the MAX of the last
+    # W samples, not just Δ|Ti−1 — with finite sampling a slowdown cliff
+    # always straddles one sample boundary, and the diluted transition
+    # sample would otherwise mask the drop from the strict ratio test.
+    temporal_window: int = 5
+    # Enable flags — Fig. 7(a) ablates these independently.
+    enable_spatial: bool = True
+    enable_temporal: bool = True
+    enable_failure: bool = True
+
+
+@dataclasses.dataclass
+class GlanceVerdict:
+    """One assessment tick's findings."""
+
+    # (job_id, node_id) pairs judged slow, with the assessment that fired.
+    slow_nodes: List[Tuple[str, str, str]]  # (job, node, reason)
+    # Nodes judged failed by the Eq. 4 monitor.
+    failed_nodes: List[str]
+
+
+class NeighborhoodGlance:
+    """Stateful tri-assessment over coordinator snapshots."""
+
+    def __init__(self, node_ids: Sequence[str], cfg: GlanceConfig = GlanceConfig(),
+                 topology: Optional[Dict[str, Sequence[str]]] = None):
+        self.cfg = cfg
+        self.node_ids: List[str] = list(node_ids)
+        self.node_index = {n: i for i, n in enumerate(self.node_ids)}
+        self._neighborhoods = self._build_neighborhoods(topology)
+        # Eq. 2 state per job: (T_{i-1}, {attempt_id: progress},
+        # Δ-history deque of shape (W, n_nodes)).
+        # ζ deltas are computed over attempts alive at BOTH samples — the
+        # paper's "only on-going tasks" guard against the end-of-wave
+        # ProgressScore decline, done per-attempt so wave transitions can
+        # never register as negative acceleration.
+        self._temporal: Dict[str, Tuple[float, Dict[str, float], List[np.ndarray]]] = {}
+        # Eq. 4 state: per node → outage-duration history (most recent last),
+        # current adaptive threshold, and outage bookkeeping.
+        self._outages: Dict[str, List[float]] = {n: [] for n in self.node_ids}
+        self._thresholds: Dict[str, float] = {
+            n: cfg.fail_threshold_init for n in self.node_ids}
+        self._lost_since: Dict[str, Optional[float]] = {
+            n: None for n in self.node_ids}
+        self._declared_failed: Set[str] = set()
+        # Debounce state: per (job, node) consecutive Eq. 1 hits.
+        self._spatial_streak: Dict[Tuple[str, str], int] = {}
+
+    # ------------------------------------------------------------------
+    # Topology: default = ring segments of size_neighbor (the ICI-torus
+    # segment / rack analogue); callers may pass an explicit adjacency.
+    # ------------------------------------------------------------------
+    def _build_neighborhoods(self, topology) -> np.ndarray:
+        n = len(self.node_ids)
+        k = min(self.cfg.size_neighbor, n)
+        if topology is not None:
+            rows = []
+            for nid in self.node_ids:
+                nh = [self.node_index[m] for m in topology[nid]][:k]
+                while len(nh) < k:  # pad with self
+                    nh.append(self.node_index[nid])
+                rows.append(nh)
+            return np.asarray(rows, dtype=int)
+        # Ring: node i's neighborhood = {i, i±1, ...} wrapped, k wide.
+        offsets = np.arange(k) - (k // 2)
+        idx = (np.arange(n)[:, None] + offsets[None, :]) % n
+        return idx.astype(int)
+
+    def neighbors_of(self, node_id: str) -> List[str]:
+        row = self._neighborhoods[self.node_index[node_id]]
+        return [self.node_ids[i] for i in row if self.node_ids[i] != node_id]
+
+    def threshold_of(self, node_id: str) -> float:
+        return self._thresholds[node_id]
+
+    # ------------------------------------------------------------------
+    # Assessment tick
+    # ------------------------------------------------------------------
+    def assess(self, snap: ClusterSnapshot) -> GlanceVerdict:
+        slow: List[Tuple[str, str, str]] = []
+        failed = self._assess_failure(snap) if self.cfg.enable_failure else []
+        for job_id in snap.job_ids():
+            if self.cfg.enable_spatial:
+                for node in self._assess_spatial(snap, job_id):
+                    slow.append((job_id, node, "spatial"))
+            if self.cfg.enable_temporal:
+                for node in self._assess_temporal(snap, job_id):
+                    slow.append((job_id, node, "temporal"))
+        return GlanceVerdict(slow_nodes=slow, failed_nodes=failed)
+
+    # --- Eq. 1 ---------------------------------------------------------
+    def _assess_spatial(self, snap: ClusterSnapshot, job_id: str) -> List[str]:
+        # Assessed PER PHASE: the paper's P(N^J) averages ρ over all of a
+        # job's tasks on the node, but map and reduce progress rates differ
+        # by an order of magnitude (the dichotomy, §II.B) — mixing them
+        # makes every reducer-hosting node look slow. See DESIGN.md §8.
+        hits: set = set()
+        for kind in (TaskKind.MAP, TaskKind.REDUCE):
+            prog, rt, nodes = [], [], []
+            for t in snap.tasks.values():
+                if t.job_id != job_id or t.state != TaskState.RUNNING \
+                        or t.kind != kind:
+                    continue
+                for a in t.attempts:
+                    if a.state != AttemptState.RUNNING:
+                        continue
+                    prog.append(a.progress)
+                    rt.append(max(snap.now - a.start_time, 1e-9))
+                    nodes.append(self.node_index[a.node_id])
+            if not prog:
+                continue
+            P = M.node_progress_rate_np(
+                np.asarray(prog), np.asarray(rt), np.asarray(nodes),
+                len(self.node_ids))
+            mask = M.spatial_slow_mask_np(P, self._neighborhoods)
+            hits |= {self.node_ids[i] for i in np.flatnonzero(mask)}
+        out = []
+        for nid in self.node_ids:
+            key = (job_id, nid)
+            if nid in hits:
+                streak = self._spatial_streak.get(key, 0) + 1
+                self._spatial_streak[key] = streak
+                if streak >= self.cfg.spatial_consecutive:
+                    out.append(nid)
+            else:
+                self._spatial_streak.pop(key, None)
+        return out
+
+    # --- Eq. 2–3 -------------------------------------------------------
+    def _assess_temporal(self, snap: ClusterSnapshot, job_id: str) -> List[str]:
+        n = len(self.node_ids)
+        cur: Dict[str, float] = {}
+        node_of: Dict[str, int] = {}
+        for t in snap.tasks.values():
+            if t.job_id != job_id or t.state != TaskState.RUNNING:
+                continue
+            for a in t.attempts:
+                if a.state == AttemptState.RUNNING:
+                    cur[a.attempt_id] = a.progress
+                    node_of[a.attempt_id] = self.node_index[a.node_id]
+        prev = self._temporal.get(job_id)
+        if prev is None:
+            self._temporal[job_id] = (snap.now, cur, [])
+            return []
+        t_prev, prev_prog, history = prev
+        dt = snap.now - t_prev
+        if dt < self.cfg.temporal_period:
+            return []
+        # ζ delta per node over attempts alive at both samples.
+        zeta_now = np.full(n, np.nan)
+        zeta_prev = np.full(n, np.nan)
+        for aid, p in cur.items():
+            if aid not in prev_prog:
+                continue
+            i = node_of[aid]
+            if np.isnan(zeta_now[i]):
+                zeta_now[i] = 0.0
+                zeta_prev[i] = 0.0
+            zeta_now[i] += p
+            zeta_prev[i] += prev_prog[aid]
+        # Peak-hold reference: the max Δ over the recent window.
+        if history:
+            stacked = np.stack(history)
+            any_valid = ~np.isnan(stacked).all(axis=0)
+            filled = np.where(np.isnan(stacked), -np.inf, stacked)
+            delta_ref = np.where(any_valid, filled.max(axis=0), np.nan)
+        else:
+            delta_ref = np.full(n, np.nan)
+        slow_mask, delta_now = M.temporal_slow_mask_np(
+            zeta_now, zeta_prev, dt, delta_ref,
+            threshold_slowdown=self.cfg.threshold_slowdown)
+        history.append(delta_now)
+        del history[:-self.cfg.temporal_window]
+        self._temporal[job_id] = (snap.now, cur, history)
+        return [self.node_ids[i] for i in np.flatnonzero(slow_mask)]
+
+    # --- Eq. 4 ---------------------------------------------------------
+    def _assess_failure(self, snap: ClusterSnapshot) -> List[str]:
+        newly_failed: List[str] = []
+        for nid, node in snap.nodes.items():
+            if nid not in self.node_index:
+                continue
+            silent = snap.now - node.last_heartbeat
+            lost_at = self._lost_since[nid]
+            if silent <= self.cfg.responsive_window:  # responsive this tick
+                if lost_at is not None:
+                    # A resuming heartbeat from a previously lost node:
+                    # record the outage duration R_n and adapt (Eq. 4).
+                    outage = snap.now - lost_at
+                    self._record_outage(nid, outage)
+                    self._lost_since[nid] = None
+                self._declared_failed.discard(nid)
+                continue
+            if lost_at is None:
+                self._lost_since[nid] = node.last_heartbeat
+            if nid in self._declared_failed or node.marked_failed:
+                continue
+            if silent > self._thresholds[nid]:
+                self._declared_failed.add(nid)
+                newly_failed.append(nid)
+        return newly_failed
+
+    def _record_outage(self, node_id: str, duration: float) -> None:
+        hist = self._outages[node_id]
+        hist.append(duration)
+        L = self.cfg.failure_window
+        del hist[:-L]
+        est = M.eq4_estimate_np(hist, L)
+        if est is not None:
+            self._thresholds[node_id] = float(np.clip(
+                est * self.cfg.fail_threshold_margin,
+                self.cfg.fail_threshold_min, self.cfg.fail_threshold_max))
+
+    # Substrate hook: a node confirmed dead externally resets its streak so a
+    # replacement with the same id starts from the configured default.
+    def reset_node(self, node_id: str) -> None:
+        self._lost_since[node_id] = None
+        self._declared_failed.discard(node_id)

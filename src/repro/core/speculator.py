@@ -1,0 +1,237 @@
+"""The two speculation policies the paper compares.
+
+``YarnLateSpeculator`` — the baseline: YARN's default LATE scheduler
+(Zaharia et al., OSDI'08) with its documented myopias kept intact:
+ * considers only RUNNING tasks (dependency-oblivious);
+ * needs progress-rate *variation* among tasks (scope-limited);
+ * serial — at most one speculative launch per assessment tick, with a
+   fixed delay between launches;
+ * capped speculative count; never resumes from partial progress.
+
+``BinocularSpeculator`` — the paper's contribution: neighborhood glance
+(Eq. 1–4) + collective speculation ramp + dependency-aware re-execution of
+completed producers + speculative rollback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.collective import CollectiveConfig, CollectiveSpeculation
+from repro.core.dependency import DependencyConfig, DependencyTracker
+from repro.core.glance import GlanceConfig, NeighborhoodGlance
+from repro.core.rollback import RollbackRegistry, plan_rollback
+from repro.core.types import (
+    Action,
+    AttemptState,
+    ClusterSnapshot,
+    KillAttempt,
+    MarkNodeFailed,
+    SpeculateTask,
+    TaskKind,
+    TaskState,
+    TaskView,
+)
+
+
+class Speculator:
+    """Common protocol: one assessment tick → actions."""
+
+    def assess(self, snap: ClusterSnapshot) -> List[Action]:  # pragma: no cover
+        raise NotImplementedError
+
+    def job_done(self, job_id: str) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Baseline: YARN default (LATE)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LateConfig:
+    # LATE defaults (OSDI'08): SpeculativeCap 10%, SlowTaskThreshold 25th
+    # percentile of progress rates, one launch per heartbeat round.
+    speculative_cap: float = 0.1
+    slow_task_percentile: float = 25.0
+    # Fixed delay between speculative launches (the "serial scheme ...
+    # with a fixed delay interval" of §II.C).
+    launch_delay: float = 15.0
+    # Don't speculate a task younger than this (YARN default guard).
+    min_runtime: float = 10.0
+
+
+class YarnLateSpeculator(Speculator):
+    def __init__(self, cfg: LateConfig = LateConfig()):
+        self.cfg = cfg
+        self._last_launch: Dict[str, float] = {}
+        self._spec_count: Dict[str, int] = {}
+
+    def assess(self, snap: ClusterSnapshot) -> List[Action]:
+        actions: List[Action] = []
+        # Kill redundant attempts whose sibling finished (standard YARN).
+        # Only for tasks still COMPLETED — a re-activated producer's fresh
+        # attempt must not be reaped against its stale completed sibling.
+        for t in snap.tasks.values():
+            if t.state != TaskState.COMPLETED:
+                continue
+            if any(a.state == AttemptState.COMPLETED for a in t.attempts):
+                for a in t.attempts:
+                    if a.state == AttemptState.RUNNING:
+                        actions.append(KillAttempt(a.attempt_id,
+                                                   "sibling completed"))
+        for job_id in snap.job_ids():
+            action = self._assess_job(snap, job_id)
+            if action is not None:
+                actions.append(action)
+        return actions
+
+    def _assess_job(self, snap: ClusterSnapshot,
+                    job_id: str) -> Optional[SpeculateTask]:
+        last = self._last_launch.get(job_id, -1e18)
+        if snap.now - last < self.cfg.launch_delay:
+            return None  # serial speculation with fixed delay
+        tasks = [t for t in snap.tasks.values()
+                 if t.job_id == job_id and t.state == TaskState.RUNNING]
+        n_total = sum(1 for t in snap.tasks.values() if t.job_id == job_id)
+        if self._spec_count.get(job_id, 0) >= max(
+                1, int(self.cfg.speculative_cap * n_total)):
+            return None
+        # Progress rates of all RUNNING attempts (completed tasks are
+        # invisible — the dependency myopia, faithfully reproduced).
+        rates: List[Tuple[float, float, TaskView]] = []
+        for t in tasks:
+            if t.has_speculative_running():
+                continue
+            run = t.running_attempts()
+            if not run:
+                continue
+            a = max(run, key=lambda a: a.progress)
+            if snap.now - a.start_time < self.cfg.min_runtime:
+                continue
+            rho = a.progress_rate(snap.now)
+            est_remaining = (1.0 - a.progress) / max(rho, 1e-9)
+            rates.append((rho, est_remaining, t))
+        if len(rates) < 2:
+            # LATE needs variation among tasks to rank stragglers — with
+            # zero or one candidate there is nothing to compare against
+            # (the scope-limited myopia, faithfully reproduced).
+            return None
+        rhos = np.asarray([r[0] for r in rates])
+        thresh = np.percentile(rhos, self.cfg.slow_task_percentile)
+        # STRICTLY below the percentile: with identical rates (a whole job
+        # frozen on one node) nothing qualifies — the scope-limited myopia.
+        slow = [r for r in rates if r[0] < thresh]
+        if not slow:
+            return None
+        # Speculate the slow task with the LONGEST estimated remaining time.
+        _, _, victim = max(slow, key=lambda r: r[1])
+        self._last_launch[job_id] = snap.now
+        self._spec_count[job_id] = self._spec_count.get(job_id, 0) + 1
+        return SpeculateTask(task_id=victim.task_id, reason="late")
+
+    def job_done(self, job_id: str) -> None:
+        self._last_launch.pop(job_id, None)
+        self._spec_count.pop(job_id, None)
+
+
+# ---------------------------------------------------------------------------
+# Binocular speculation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BinoConfig:
+    glance: GlanceConfig = dataclasses.field(default_factory=GlanceConfig)
+    collective: CollectiveConfig = dataclasses.field(
+        default_factory=CollectiveConfig)
+    dependency: DependencyConfig = dataclasses.field(
+        default_factory=DependencyConfig)
+    rollback_enabled: bool = True
+
+
+class BinocularSpeculator(Speculator):
+    def __init__(self, node_ids: Sequence[str],
+                 cfg: BinoConfig = BinoConfig(),
+                 topology: Optional[Dict[str, Sequence[str]]] = None):
+        self.cfg = cfg
+        self.glance = NeighborhoodGlance(node_ids, cfg.glance, topology)
+        self.collective = CollectiveSpeculation(cfg.collective)
+        self.dependency = DependencyTracker(cfg.dependency)
+        self.rollback = RollbackRegistry()
+        # Nodes currently assessed unhealthy (slow or failed).
+        self._unhealthy: Set[str] = set()
+
+    # ------------------------------------------------------------------
+    def assess(self, snap: ClusterSnapshot) -> List[Action]:
+        actions: List[Action] = []
+
+        # 1. Neighborhood glance: spatial + temporal + failure assessments.
+        verdict = self.glance.assess(snap)
+        failed = set(verdict.failed_nodes)
+        for nid in failed:
+            actions.append(MarkNodeFailed(nid, reason="glance:eq4"))
+            self.rollback.drop_node(nid)
+        slow_by_node: Dict[str, str] = {}
+        for _job, node, reason in verdict.slow_nodes:
+            slow_by_node.setdefault(node, reason)
+        self._unhealthy = failed | set(slow_by_node)
+
+        # 2. Dependency awareness: completed producers on dead nodes, and
+        #    fetch-failure streaks, trigger producer re-execution.
+        dep_actions = self.dependency.on_node_failed(snap, failed)
+        dep_actions += self.dependency.on_fetch_failures(
+            snap, snap.fetch_failures)
+
+        # 3. Straggler set: running tasks on slow/failed nodes.
+        stragglers: List[Tuple[TaskView, Optional[str], str]] = []
+        seen: Set[str] = set()
+        for t in snap.tasks.values():
+            if t.state != TaskState.RUNNING:
+                continue
+            for a in t.running_attempts():
+                if t.task_id in seen:
+                    break
+                if a.node_id in failed:
+                    stragglers.append((t, a.node_id, "glance:failure"))
+                    seen.add(t.task_id)
+                elif a.node_id in slow_by_node:
+                    stragglers.append(
+                        (t, a.node_id,
+                         "glance:" + slow_by_node[a.node_id]))
+                    seen.add(t.task_id)
+
+        # 4. Collective ramp over the straggler wave, neighborhood-first.
+        nh = {n: self.glance.neighbors_of(n) for n in
+              {v for _, v, _ in stragglers if v is not None}}
+        launches = self.collective.plan(snap, stragglers, nh)
+
+        # Dependency re-executions bypass the ramp: they gate job progress
+        # (a reducer is already blocked on the lost output).
+        launches = list(dep_actions) + launches
+
+        # 5. Rollback: race a resume-from-log attempt where the log's node
+        #    is healthy.
+        if self.cfg.rollback_enabled:
+            launches = plan_rollback(snap, self.rollback, launches,
+                                     self._unhealthy)
+        actions.extend(launches)
+
+        # 6. Reap siblings of completed attempts.
+        actions.extend(self.collective.reap_completed(snap))
+        return actions
+
+    # ------------------------------------------------------------------
+    # Substrate hooks
+    # ------------------------------------------------------------------
+    def record_progress_log(self, log) -> None:
+        self.rollback.record(log)
+
+    def note_fetch_ok(self, producer_task_id: str) -> None:
+        self.dependency.note_fetch_ok(producer_task_id)
+
+    def job_done(self, job_id: str) -> None:
+        self.collective.job_done(job_id)
+
+    @property
+    def unhealthy_nodes(self) -> Set[str]:
+        return set(self._unhealthy)

@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    DataState,
+    ShardedTokenPipeline,
+    TokenDataset,
+    global_batch_specs,
+)
+
+__all__ = ["DataState", "ShardedTokenPipeline", "TokenDataset",
+           "global_batch_specs"]

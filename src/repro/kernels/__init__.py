@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots, each shipped as a triple:
+
+- ``<name>.py``  -- ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
+- ``ops.py``     -- jit'd public wrapper (impl selection, custom_vjp)
+- ``ref.py``     -- pure-jnp oracle used for validation and as the
+                   autodiff-able fallback path on CPU
+
+Kernels: flash_attention (train/prefill), decode_attention (single-token
+query vs long KV), ssd (Mamba-2 chunked state-space dual scan).
+"""

@@ -1,0 +1,114 @@
+"""Pallas TPU decode-attention kernel (one new token vs. a long KV cache).
+
+Design: decode is HBM-bandwidth-bound (the KV cache read dominates), so the
+kernel's job is to stream KV blocks through VMEM exactly once while keeping
+the whole GQA query group resident. grid = (batch, kv_head, kv_blocks);
+the (group × head_dim) query tile and the online-softmax state stay in VMEM
+scratch across the sequential kv-block walk. The per-batch valid length
+(cache fill level) arrives via scalar-prefetch SMEM so masked tail blocks
+contribute zeros.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = valid_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < valid, s, NEG_INF)
+
+    m_prev = m_scr[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = jnp.broadcast_to(
+        corr * l_scr[:, :1] + jnp.sum(p, axis=1, keepdims=True), l_scr.shape)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_scr[:, :1]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, kv_valid_len: jax.Array, *,
+    scale: Optional[float] = None, block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """q: (b, h, d); k/v: (b, sk, hkv, d); kv_valid_len: (b,) int32."""
+    b, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    block_k = min(block_k, sk)
+    assert sk % block_k == 0
+    if interpret is None:
+        interpret = _interpret_default()
+
+    qg = q.reshape(b, hkv, group, d)
+    kt = k.transpose(0, 2, 1, 3)                      # (b, hkv, sk, d)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, hkv, sk // block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda b_, hk, ik, *_: (b_, hk, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, hk, ik, *_: (b_, hk, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, hk, ik, *_: (b_, hk, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda b_, hk, ik, *_: (b_, hk, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 128), jnp.float32),
+            pltpu.VMEM((group, 128), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        interpret=interpret,
+    )(kv_valid_len.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,26 @@
+"""Public decode-attention op (forward-only: serving path, no grads)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.decode_attention import ref as _ref
+from repro.kernels.decode_attention import decode_attention as _dec
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def decode_attention(q, k, v, kv_valid_len, *, scale: Optional[float] = None,
+                     impl: str = "ref", block_k: int = 512) -> jax.Array:
+    """q: (b, h, d) single-token queries; k/v: (b, sk, hkv, d) cache."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.decode_attention_reference(q, k, v, kv_valid_len,
+                                               scale=scale)
+    return _dec.decode_attention_pallas(q, k, v, kv_valid_len, scale=scale,
+                                        block_k=block_k)

@@ -1,0 +1,382 @@
+"""Pallas TPU flash attention (forward + backward), GQA-aware.
+
+TPU-native design notes (DESIGN.md §8):
+- grid iterations on TPU execute *sequentially*; the innermost grid dim
+  walks KV blocks while VMEM scratch (m, l, acc) carries the online-softmax
+  state across iterations — the TPU analogue of the CUDA inner loop.
+- BlockSpecs stage (block_q × head_dim) / (block_k × head_dim) tiles into
+  VMEM; block sizes default to 128/512 — multiples of the 128-wide MXU/VPU
+  lanes.
+- GQA is folded into the index maps (`h // group` on the KV operands), so
+  no materialized `jnp.repeat` of K/V ever reaches HBM.
+- backward = two kernels (dKV with Q innermost, dQ with KV innermost) so
+  every output block is written by consecutive grid steps only (TPU output
+  revisit rule); the GQA group dim rides the grid between the KV-block and
+  Q-block dims of the dKV kernel and is reduced in VMEM scratch.
+
+Validated in interpret mode on CPU against ``ref.attention_reference``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr,
+                *, scale: float, causal: bool, window: int,
+                block_q: int, block_k: int, kv_len: int, q_offset: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_offset
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # Static skip of fully-masked blocks: the causal upper triangle and,
+    # with a sliding window, blocks entirely below the band (their -inf
+    # rows would otherwise produce exp(-inf - -inf) = NaN).
+    run = True
+    if causal:
+        run = (ik * block_k) <= (iq * block_q + q_offset + block_q - 1)
+    if window:
+        live = ((ik + 1) * block_k - 1) > (iq * block_q + q_offset - window)
+        run = live if run is True else (run & live)
+
+    @pl.when(run if (causal or window) else True)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        mask = None
+        if causal:
+            mask = k_pos <= q_pos
+        if window:
+            w = k_pos > (q_pos - window)
+            mask = w if mask is None else (mask & w)
+        if mask is not None:
+            s = jnp.where(mask, s, -1e30)  # finite: keeps online softmax NaN-free
+
+        m_prev = m_scr[:, :1]                         # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_new = corr * l_scr[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_scr[:, :1]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_scr[:, 0] + jnp.log(l_safe[:, 0])).astype(lse_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0, scale: Optional[float] = None,
+    block_q: int = 128, block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (b, sq, h, d), lse (b, h, sq) float32)."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    if interpret is None:
+        interpret = _interpret_default()
+
+    # (b, s, h, d) -> (b, h, s, d) blocks
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, hq, sq // block_q, sk // block_k)
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, kv_len=sk, q_offset=sk - sq)
+
+    out, lse = _fwd_call(kernel, grid, b, hq, sq, sk, d, block_q, block_k,
+                         group, qt, kt, vt, q.dtype, interpret)
+    return out.transpose(0, 2, 1, 3), lse
+
+
+def _fwd_call(kernel, grid, b, hq, sq, sk, d, block_q, block_k, group,
+              qt, kt, vt, out_dtype, interpret):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h, iq, ik: (b_, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sq, d), out_dtype),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # m
+            pltpu.VMEM((block_q, 128), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+
+
+# ---------------------------------------------------------------------------
+# Backward: dKV kernel (grid: b, kv_head, kv_block, group, q_block)
+# ---------------------------------------------------------------------------
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr,
+                *, scale: float, causal: bool, window: int,
+                block_q: int, block_k: int, q_offset: int):
+    ikv = pl.program_id(2)
+    g = pl.program_id(3)
+    iq = pl.program_id(4)
+    ng = pl.num_programs(3)
+    nq = pl.num_programs(4)
+
+    @pl.when((g == 0) & (iq == 0))
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    run = True
+    if causal:
+        run = (ikv * block_k) <= (iq * block_q + q_offset + block_q - 1)
+    if window:
+        live = ((ikv + 1) * block_k - 1) > (iq * block_q + q_offset - window)
+        run = live if run is True else (run & live)
+
+    @pl.when(run if (causal or window) else True)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)       # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)     # (bq, d)
+        lse = lse_ref[0, 0].astype(jnp.float32)   # (bq,)
+        delta = delta_ref[0, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0) + q_offset
+        k_pos = ikv * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = None
+        if causal:
+            mask = k_pos <= q_pos
+        if window:
+            w = k_pos > (q_pos - window)
+            mask = w if mask is None else (mask & w)
+        p = jnp.exp(s - lse[:, None])
+        if mask is not None:
+            p = jnp.where(mask, p, 0.0)
+
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bk, d)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (bq, bk)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bk, d)
+
+    @pl.when((g == ng - 1) & (iq == nq - 1))
+    def _finish():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backward: dQ kernel (grid: b, head, q_block, kv_block)
+# ---------------------------------------------------------------------------
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+               dq_ref, dq_scr,
+               *, scale: float, causal: bool, window: int,
+               block_q: int, block_k: int, q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    run = True
+    if causal:
+        run = (ik * block_k) <= (iq * block_q + q_offset + block_q - 1)
+    if window:
+        live = ((ik + 1) * block_k - 1) > (iq * block_q + q_offset - window)
+        run = live if run is True else (run & live)
+
+    @pl.when(run if (causal or window) else True)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0].astype(jnp.float32)
+        delta = delta_ref[0, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0) + q_offset
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = None
+        if causal:
+            mask = k_pos <= q_pos
+        if window:
+            w = k_pos > (q_pos - window)
+            mask = w if mask is None else (mask & w)
+        p = jnp.exp(s - lse[:, None])
+        if mask is not None:
+            p = jnp.where(mask, p, 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dq_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(
+    q, k, v, out, lse, do, *,
+    causal: bool = True, window: int = 0, scale: Optional[float] = None,
+    block_q: int = 128, block_k: int = 512,
+    interpret: Optional[bool] = None,
+):
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if interpret is None:
+        interpret = _interpret_default()
+    q_offset = sk - sq
+
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1).transpose(0, 2, 1)  # (b, h, sq)
+
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    dot = do.transpose(0, 2, 1, 3)
+
+    # --- dK/dV: group dim on the grid, reduced in scratch -----------------
+    grid_kv = (b, hkv, sk // block_k, group, sq // block_q)
+    dkv_kernel = functools.partial(
+        _dkv_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, q_offset=q_offset)
+    dk_t, dv_t = pl.pallas_call(
+        dkv_kernel,
+        grid=grid_kv,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, hk, ikv, g, iq, G=group: (b_, hk * G + g, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, hk, ikv, g, iq: (b_, hk, ikv, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, hk, ikv, g, iq: (b_, hk, ikv, 0)),
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, hk, ikv, g, iq, G=group: (b_, hk * G + g, iq, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b_, hk, ikv, g, iq, G=group: (b_, hk * G + g, iq)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b_, hk, ikv, g, iq, G=group: (b_, hk * G + g, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, hk, ikv, g, iq: (b_, hk, ikv, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, hk, ikv, g, iq: (b_, hk, ikv, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, sk, d), k.dtype),
+            jax.ShapeDtypeStruct((b, hkv, sk, d), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, d), jnp.float32),
+            pltpu.VMEM((block_k, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, dot, lse, delta)
+
+    # --- dQ ----------------------------------------------------------------
+    grid_q = (b, hq, sq // block_q, sk // block_k)
+    dq_kernel = functools.partial(
+        _dq_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, q_offset=q_offset)
+    dq_t = pl.pallas_call(
+        dq_kernel,
+        grid=grid_q,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h, iq, ik: (b_, h, iq)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h, iq, ik: (b_, h, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype)],
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, dot, lse, delta)[0]
+
+    return (dq_t.transpose(0, 2, 1, 3),
+            dk_t.transpose(0, 2, 1, 3),
+            dv_t.transpose(0, 2, 1, 3))

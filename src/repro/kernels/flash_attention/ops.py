@@ -1,0 +1,75 @@
+"""Public attention op: impl selection + custom_vjp wiring.
+
+``impl``:
+- ``"ref"``    — pure-jnp oracle (autodiff-able; the CPU/test default)
+- ``"pallas"`` — Pallas TPU kernels (fwd + bwd), interpret=True off-TPU
+- ``"auto"``   — pallas on TPU, ref elsewhere
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _fa
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _pallas_attention(q, k, v, causal, window, scale, block_q, block_k):
+    out, _ = _fa.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k)
+    return out
+
+
+def _pallas_fwd(q, k, v, causal, window, scale, block_q, block_k):
+    out, lse = _fa.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _pallas_bwd(causal, window, scale, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    dq, dk, dv = _fa.flash_attention_bwd(
+        q, k, v, out, lse, do, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k)
+    return dq, dk, dv
+
+
+_pallas_attention.defvjp(_pallas_fwd, _pallas_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    kv_valid_len: Optional[jax.Array] = None,
+    impl: str = "ref",
+    block_q: int = 128,
+    block_k: int = 512,
+) -> jax.Array:
+    """(b, sq, h, d) × (b, sk, hkv, d)² → (b, sq, h, d)."""
+    impl = _resolve(impl)
+    if impl == "ref" or kv_valid_len is not None:
+        # the cache-masked decode path goes through the oracle (the
+        # dedicated decode kernel lives in kernels/decode_attention)
+        return _ref.attention_reference(
+            q, k, v, causal=causal, window=window, scale=scale,
+            kv_valid_len=kv_valid_len)
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    return _pallas_attention(q, k, v, causal, window, scale, block_q, block_k)

@@ -1,0 +1,93 @@
+"""Pure-jnp oracle for (GQA) attention. Shapes follow the framework-wide
+convention::
+
+    q: (batch, q_len, n_heads, head_dim)
+    k: (batch, kv_len, n_kv_heads, head_dim)
+    v: (batch, kv_len, n_kv_heads, head_dim)
+
+``n_heads`` must be a multiple of ``n_kv_heads`` (GQA broadcast). Masking:
+``causal`` lower-triangular (offset so the last q row attends to the last kv
+row — supports decode where q_len < kv_len), optional sliding ``window``,
+optional ``kv_valid_len`` for decode against a partially filled cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask(q_len: int, kv_len: int, causal: bool, window: int,
+          kv_valid_len: Optional[jax.Array]) -> Optional[jax.Array]:
+    rows = jnp.arange(q_len)[:, None] + (kv_len - q_len)  # global q positions
+    cols = jnp.arange(kv_len)[None, :]
+    m = None
+    if causal:
+        m = cols <= rows
+    if window:
+        w = cols > (rows - window)
+        m = w if m is None else (m & w)
+    if kv_valid_len is not None:
+        valid = cols < kv_valid_len  # may broadcast (batch,1,1,kv)
+        m = valid if m is None else (m & valid)
+    return m
+
+
+def attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    kv_valid_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+
+    # broadcast kv heads across the query group
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits.astype(jnp.float32) * scale
+
+    if kv_valid_len is not None and kv_valid_len.ndim == 1:
+        kv_valid_len = kv_valid_len[:, None, None, None]
+    m = _mask(sq, sk, causal, window,
+              kv_valid_len if kv_valid_len is not None else None)
+    if m is not None:
+        logits = jnp.where(m, logits, -jnp.inf)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def attention_reference_with_lse(q, k, v, *, causal=True, window=0,
+                                 scale=None):
+    """Reference that also returns the per-row logsumexp (used to validate
+    the Pallas forward's saved statistics)."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    m = _mask(sq, sk, causal, window, None)
+    if m is not None:
+        logits = jnp.where(m, logits, -jnp.inf)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)  # (b, h, q)
+    probs = jnp.exp(logits - lse[..., None])
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype), lse

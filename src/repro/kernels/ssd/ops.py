@@ -1,0 +1,64 @@
+"""Public SSD op: impl selection + custom_vjp.
+
+For ``impl="pallas"`` the forward runs the Pallas kernel; the backward is
+the VJP of the jnp oracle (identical math, so gradients are exact w.r.t.
+the reference semantics). A hand-written backward kernel is a possible
+future perf iteration — recorded in EXPERIMENTS.md §Perf candidates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.ssd import ref as _ref
+from repro.kernels.ssd import ssd as _ssd
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _pallas_ssd(x, dt, A, B, C, D, chunk):
+    y, _ = _ssd.ssd_pallas(x, dt, A, B, C, D, chunk=chunk)
+    return y
+
+
+def _pallas_ssd_fwd(x, dt, A, B, C, D, chunk):
+    y, _ = _ssd.ssd_pallas(x, dt, A, B, C, D, chunk=chunk)
+    return y, (x, dt, A, B, C, D)
+
+
+def _pallas_ssd_bwd(chunk, res, dy):
+    x, dt, A, B, C, D = res
+    _, vjp = jax.vjp(
+        lambda *a: _ref.ssd_reference(*a, chunk=chunk)[0], x, dt, A, B, C, D)
+    return vjp(dy)
+
+
+_pallas_ssd.defvjp(_pallas_ssd_fwd, _pallas_ssd_bwd)
+
+
+def ssd(x, dt, A, B, C, D, *, chunk: int = 128,
+        impl: str = "ref") -> jax.Array:
+    """Chunked SSD scan; returns y with x.shape (state discarded)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ssd_reference(x, dt, A, B, C, D, chunk=chunk)[0]
+    return _pallas_ssd(x, dt, A, B, C, D, chunk)
+
+
+def ssd_with_state(x, dt, A, B, C, D, *, chunk: int = 128,
+                   impl: str = "ref") -> Tuple[jax.Array, jax.Array]:
+    """Prefill entry point: returns (y, final_state) for decode handoff."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ssd_reference(x, dt, A, B, C, D, chunk=chunk)
+    return _ssd.ssd_pallas(x, dt, A, B, C, D, chunk=chunk)
+
+
+ssd_decode_step = _ref.ssd_decode_step

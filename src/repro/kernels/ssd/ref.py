@@ -1,0 +1,114 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space dual) chunked scan.
+
+Convention (matches the Pallas kernel and ``models/mamba2.py``)::
+
+    x  : (batch, seq, n_heads, head_dim)   -- pre-gated SSM input
+    dt : (batch, seq, n_heads)             -- positive step sizes (softplus'd)
+    A  : (n_heads,)                        -- negative decay rates
+    B  : (batch, seq, n_groups, d_state)
+    C  : (batch, seq, n_groups, d_state)
+    D  : (n_heads,)                        -- skip connection
+
+Returns (y, final_state) with y: x.shape and final_state:
+(batch, n_heads, head_dim, d_state) — the recurrent state handed to decode.
+
+Semantics are the discretized SSM recurrence
+``h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t·h_t + D x_t``,
+evaluated chunk-wise: quadratic attention-like intra-chunk term plus an
+inter-chunk state recurrence (the "dual form", arXiv:2405.21060).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunk_body(state, inputs, *, A, D):
+    """One chunk of the SSD dual form. state: (B, H, P, N) f32."""
+    x, dt, Bm, Cm = inputs  # (B,Q,H,P), (B,Q,H), (B,Q,H,N), (B,Q,H,N)
+    a = dt * A[None, None, :]                      # (B,Q,H) log-decay
+    a_cs = jnp.cumsum(a, axis=1)                   # inclusive cumsum
+    # intra-chunk ("diagonal") term: causal decay-weighted attention
+    # L[s->l] = exp(a_cs[l] - a_cs[s]) for s <= l
+    seg = a_cs[:, :, None, :] - a_cs[:, None, :, :]        # (B,l,s,H)
+    q = jnp.arange(x.shape[1])
+    causal = (q[:, None] >= q[None, :])[None, :, :, None]
+    # mask BEFORE exp: the anti-causal branch has positive seg that can
+    # overflow to inf, and where(…, inf, 0) still poisons the gradient
+    L = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+    scores = jnp.einsum("blhn,bshn->blsh", Cm, Bm) * L      # (B,l,s,H)
+    xdt = x * dt[..., None]
+    y_diag = jnp.einsum("blsh,bshp->blhp", scores, xdt)
+
+    # inter-chunk: contribution of the carried state
+    decay_out = jnp.exp(a_cs)                               # (B,Q,H)
+    y_off = jnp.einsum("blhn,bhpn->blhp", Cm, state) * decay_out[..., None]
+
+    # state update for the next chunk
+    total = a_cs[:, -1, :]                                  # (B,H)
+    decay_in = jnp.exp(total[:, None, :] - a_cs)            # (B,Q,H)
+    chunk_state = jnp.einsum("bshn,bshp->bhpn", Bm * (dt * decay_in)[..., None], x)
+    new_state = state * jnp.exp(total)[:, :, None, None] + chunk_state
+
+    y = y_diag + y_off + D[None, None, :, None] * x
+    return new_state, y
+
+
+def ssd_reference(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+    D: jax.Array, *, chunk: int = 64,
+    initial_state: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert h % g == 0
+    rep = h // g
+    # broadcast groups to heads
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    chunk = min(chunk, s)
+    if s % chunk:
+        # zero-pad the tail: dt=0 ⇒ exp(0)=1 decay (state preserved) and a
+        # zero input contribution, so padding is exactly identity.
+        pad = chunk - s % chunk
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = xf.shape[1] // chunk
+
+    def split(z):
+        return z.reshape(b, nc, chunk, *z.shape[2:]).swapaxes(0, 1)
+
+    xs = (split(xf), split(dtf), split(Bh), split(Ch))
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32)
+              if initial_state is None else initial_state.astype(jnp.float32))
+    import functools
+    final_state, ys = jax.lax.scan(
+        functools.partial(_chunk_body, A=A.astype(jnp.float32),
+                          D=D.astype(jnp.float32)),
+        state0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, nc * chunk, h, p)[:, :s].astype(x.dtype)
+    return y, final_state
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t, D):
+    """Single-token recurrence. state: (B,H,P,N); x_t: (B,H,P);
+    dt_t: (B,H); B_t/C_t: (B,G,N). Returns (new_state, y_t)."""
+    h = x_t.shape[1]
+    g = B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    xf = x_t.astype(jnp.float32)
+    decay = jnp.exp(dtf * A[None, :])                        # (B,H)
+    new_state = (state * decay[..., None, None]
+                 + jnp.einsum("bhn,bhp->bhpn", Bh * dtf[..., None], xf))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch) + D[None, :, None] * xf
+    return new_state, y.astype(x_t.dtype)

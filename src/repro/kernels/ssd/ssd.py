@@ -1,0 +1,132 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+TPU-native adaptation (DESIGN.md §8): the chunk recurrence maps onto the
+*sequential* TPU grid — grid = (batch, head, n_chunks) with the recurrent
+(head_dim × d_state) state living in VMEM scratch across chunk iterations.
+Each grid step computes the quadratic intra-chunk term on the MXU
+((chunk × chunk) decay-masked scores) plus the rank-N inter-chunk
+correction, then advances the state. Chunk=128–256 keeps every operand
+128-aligned for the MXU.
+
+Inputs are pre-arranged per head so the kernel never sees the group
+broadcast: B/C arrive group-indexed via their BlockSpec index maps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _ssd_kernel(a_ref, d_ref, x_ref, dt_ref, b_ref, c_ref,
+                y_ref, fs_ref, state_scr,
+                *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    A_h = a_ref[0]                                   # scalar decay rate
+    D_h = d_ref[0]
+    x = x_ref[0, 0, 0].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)         # (Q, 1) padded lane dim
+    Bm = b_ref[0, 0, 0].astype(jnp.float32)          # (Q, N)
+    Cm = c_ref[0, 0, 0].astype(jnp.float32)          # (Q, N)
+
+    a = dt[:, 0] * A_h                               # (Q,)
+    a_cs = jnp.cumsum(a)                             # (Q,)
+
+    # intra-chunk decay-masked scores
+    seg = a_cs[:, None] - a_cs[None, :]              # (Q, Q) l - s
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(row >= col, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * L       # (Q, Q)
+    xdt = x * dt                                      # (Q, P)
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # carried-state contribution: (Q,N) @ (N,P)
+    decay_out = jnp.exp(a_cs)[:, None]                # (Q, 1)
+    y += jax.lax.dot_general(Cm, state_scr[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) * decay_out
+
+    # state update: (N,Q) @ (Q,P) -> (N,P)
+    total = a_cs[chunk - 1]
+    decay_in = jnp.exp(total - a_cs)[:, None]         # (Q, 1)
+    chunk_state = jax.lax.dot_general(
+        Bm * (dt * decay_in), x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (N, P)
+    state_scr[...] = state_scr[...] * jnp.exp(total) + chunk_state
+
+    y_ref[0, 0, 0] = (y + D_h * x).astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        fs_ref[0, 0] = state_scr[...].astype(fs_ref.dtype)
+
+
+def ssd_pallas(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+    D: jax.Array, *, chunk: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Same contract as ``ref.ssd_reference`` (zero initial state)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert h % g == 0
+    rep = h // g
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    if interpret is None:
+        interpret = _interpret_default()
+
+    # head-major chunked layouts
+    xh = x.transpose(0, 2, 1, 3).reshape(b, h, nc, chunk, p)
+    dth = dt.transpose(0, 2, 1).reshape(b, h, nc, chunk, 1)
+    Bg = B.transpose(0, 2, 1, 3).reshape(b, g, nc, chunk, n)
+    Cg = C.transpose(0, 2, 1, 3).reshape(b, g, nc, chunk, n)
+
+    grid = (b, h, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, fstate = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, ic: (h_,)),          # A
+            pl.BlockSpec((1,), lambda b_, h_, ic: (h_,)),          # D
+            pl.BlockSpec((1, 1, 1, chunk, p), lambda b_, h_, ic: (b_, h_, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, 1), lambda b_, h_, ic: (b_, h_, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, n),
+                         lambda b_, h_, ic, r=rep: (b_, h_ // r, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, n),
+                         lambda b_, h_, ic, r=rep: (b_, h_ // r, ic, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, p), lambda b_, h_, ic: (b_, h_, ic, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, chunk, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), D.astype(jnp.float32), xh, dth, Bg, Cg)
+
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    # ref convention: final_state (b, h, p, n)
+    return y, fstate.transpose(0, 1, 3, 2)

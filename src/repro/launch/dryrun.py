@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax ---------------------------------------
+import argparse        # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ALL_SHAPES, ARCH_IDS, get_config, get_shape, skip_reason  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as MODEL  # noqa: E402
+from repro.models.inputs import input_axes, input_specs  # noqa: E402
+from repro.parallel import sharding as SH  # noqa: E402
+from repro.train.loop import (  # noqa: E402
+    TrainConfig,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    train_state_axes,
+    train_state_shapes,
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    size = 1
+    if dims:
+        for d in dims.split(","):
+            size *= int(d)
+    return size * _DTYPE_BYTES.get(tok_dtype, 4)
+
+
+def collect_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum the output bytes of every collective in the partitioned HLO.
+
+    Accounting: all-reduce counted 2× (ring = reduce-scatter + all-gather);
+    others 1× their output. These are per-device module bytes (the HLO is
+    the post-SPMD per-device program).
+    """
+    per_op: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        if not s.startswith("%") and not s[:1].isalpha():
+            continue
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.match(r"(?:\([^)]*\)|[\w\[\],{}: ]+?)\s*([a-z\-]+)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        if op not in _COLLECTIVES:
+            continue
+        shapes = _SHAPE_RE.findall(rhs.split("(")[0])
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        factor = 2 if op == "all-reduce" else 1
+        per_op[op] = per_op.get(op, 0) + nbytes * factor
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes_by_op": per_op, "counts": counts,
+            "total_bytes": sum(per_op.values())}
+
+
+def _named(tree_axes, tree_shapes, mesh, rules):
+    def one(axes, leaf):
+        return NamedSharding(
+            mesh, SH.physical_spec(leaf.shape, axes, rules, mesh))
+    return jax.tree.map(
+        one, tree_axes, tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def build_cell(cfg, shape, mesh, tc: TrainConfig):
+    """Returns (fn, arg_shapes tuple, in_shardings tuple). Sharding rules
+    come from the ACTIVE context (run_cell's use_mesh may override them —
+    the perf harness drives exactly that)."""
+    param_rules_ctx, act_rules_ctx = SH._current_rules()
+    # Donation: production semantics — the train state and the decode KV
+    # cache are updated in place (XLA buffer aliasing); without it the
+    # compiled module carries a full copy of the largest live buffer.
+    if shape.kind == "train":
+        fn = make_train_step(cfg, tc)
+        state = train_state_shapes(cfg, tc)
+        state_ax = train_state_axes(cfg, tc)
+        batch = input_specs(cfg, shape)
+        batch_ax = input_axes(cfg, shape)
+        args = (state, batch)
+        shardings = (_named(state_ax, state, mesh, param_rules_ctx),
+                     _named(batch_ax, batch, mesh, act_rules_ctx))
+        return fn, args, shardings, (0,)
+    params = MODEL.param_shapes(cfg)
+    params_ax = MODEL.param_axes(cfg)
+    if param_rules_ctx is SH.PARAM_RULES:
+        # serving default: no FSDP re-gathers per token (SERVE_PARAM_RULES)
+        param_rules_ctx = SH.SERVE_PARAM_RULES
+    p_shard = _named(params_ax, params, mesh, param_rules_ctx)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, tc)
+        batch = input_specs(cfg, shape)
+        batch_ax = input_axes(cfg, shape)
+        args = (params, batch)
+        shardings = (p_shard, _named(batch_ax, batch, mesh, act_rules_ctx))
+        return fn, args, shardings, ()
+    # decode
+    fn = make_serve_step(cfg, tc)
+    specs = input_specs(cfg, shape)
+    axes = input_axes(cfg, shape)
+    args = (params, specs["cache"], specs["tokens"], specs["pos"])
+    shardings = (p_shard,
+                 _named(axes["cache"], specs["cache"], mesh, act_rules_ctx),
+                 _named(axes["tokens"], specs["tokens"], mesh, act_rules_ctx),
+                 _named(axes["pos"], specs["pos"], mesh, act_rules_ctx))
+    return fn, args, shardings, (1,)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             tc: Optional[TrainConfig] = None,
+             out_dir: str = "results/dryrun",
+             save: bool = True,
+             act_rules=None, param_rules=None,
+             tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    reason = skip_reason(cfg, shape)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "tag": tag,
+    }
+    if reason is not None:
+        record["skipped"] = reason
+        _maybe_save(record, cell_id, out_dir, save)
+        return record
+
+    if tc is None:
+        # production defaults: full remat for big models' train steps
+        tc = TrainConfig(remat="full" if shape.kind == "train" else "none")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with SH.use_mesh(mesh, param_rules=param_rules, act_rules=act_rules):
+        fn, args, shardings, donate = build_cell(cfg, shape, mesh, tc)
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collect_collectives(hlo)
+
+    n_total, n_active = cfg.param_counts()
+    record.update({
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": cost.get("flops", -1.0),
+        "bytes_accessed_per_device": cost.get("bytes accessed", -1.0),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "params_total": n_total,
+        "params_active": n_active,
+        "n_devices": mesh.size,
+    })
+    _maybe_save(record, cell_id, out_dir, save)
+    return record
+
+
+def _maybe_save(record, cell_id, out_dir, save):
+    if not save:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="architecture id (or all)")
+    ap.add_argument("--shape", default=None, help="shape name (or all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer loops: exact cost probes (XLA cost "
+                         "analysis counts a scan body ONCE, so scanned "
+                         "records undercount FLOPs/collectives ~n_layers×; "
+                         "unrolled records carry tag='unroll')")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                label = f"{arch} × {shape_name} × {'2x16x16' if multi else '16x16'}"
+                tc = None
+                tag = ""
+                if args.remat or args.unroll:
+                    shape = get_shape(shape_name)
+                    remat = args.remat or (
+                        "full" if shape.kind == "train" else "none")
+                    tc = TrainConfig(remat=remat, unroll=args.unroll)
+                    tag = "unroll" if args.unroll else ""
+                try:
+                    rec = run_cell(arch, shape_name, multi, tc=tc,
+                                   out_dir=args.out, tag=tag)
+                except Exception as e:  # a failure here is a bug in the system
+                    failures.append((label, e))
+                    print(f"[FAIL] {label}: {type(e).__name__}: {e}")
+                    if args.verbose:
+                        traceback.print_exc()
+                    continue
+                if "skipped" in rec:
+                    print(f"[SKIP] {label}: {rec['skipped']}")
+                else:
+                    gb = rec["memory"]["argument_bytes"] / 2 ** 30
+                    print(f"[ OK ] {label}: flops/dev={rec['flops_per_device']:.3e} "
+                          f"args={gb:.2f}GiB coll={rec['collectives']['total_bytes']/2**20:.1f}MiB "
+                          f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nall requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Perf-iteration harness (§Perf of EXPERIMENTS.md).
+
+Each named VARIANT re-lowers one (arch × shape) cell with a config/sharding
+change, records the exact (unrolled) roofline terms, and prints the
+before/after delta against the baseline — one hypothesis→change→measure
+cycle per invocation.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch granite-20b \
+        --shape decode_32k --variant kv_seq_unsharded
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+from typing import Callable, Dict, Optional, Tuple  # noqa: E402
+
+from repro.launch.dryrun import run_cell             # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+from repro.launch.roofline import model_flops        # noqa: E402
+from repro.parallel import sharding as SH            # noqa: E402
+from repro.train.loop import TrainConfig             # noqa: E402
+
+
+def _rules(base: Dict, **overrides) -> Dict:
+    out = dict(base)
+    out.update(overrides)
+    return out
+
+
+# Each variant: name -> (tc_overrides, act_rules, param_rules), built lazily
+# so new ideas are one line. ``kind`` filters applicability.
+def variants(kind: str) -> Dict[str, Tuple[TrainConfig, Optional[Dict], Optional[Dict]]]:
+    train = kind == "train"
+    base_tc = TrainConfig(remat="full" if train else "none", unroll=True)
+    v: Dict[str, Tuple[TrainConfig, Optional[Dict], Optional[Dict]]] = {
+        "baseline": (base_tc, None, None),
+    }
+    if train:
+        v["remat_dots"] = (dataclasses.replace(base_tc, remat="dots"),
+                           None, None)
+        v["remat_dots_no_batch"] = (
+            dataclasses.replace(base_tc, remat="dots_no_batch"), None, None)
+        v["remat_none"] = (dataclasses.replace(base_tc, remat="none"),
+                           None, None)
+        v["ef_int8_grads"] = (
+            dataclasses.replace(base_tc, grad_compression=True), None, None)
+        v["microbatch4"] = (
+            dataclasses.replace(base_tc, microbatches=4), None, None)
+        # FSDP off: keep params replicated over data (pure TP)
+        v["no_fsdp"] = (base_tc, None, _rules(SH.PARAM_RULES, embed=None))
+        # TP off: pure DP+FSDP. For sub-1B models TP=16 is over-sharding —
+        # the per-layer activation all-reduces (95% of collective bytes on
+        # qwen0.5b train) vanish; only the grad reduction remains.
+        no_tp_act = _rules(SH.ACT_RULES, heads=None, kv_heads=None,
+                           mlp=None, vocab=None, expert=None,
+                           batch=("pod", "data", "model"))
+        no_tp_param = _rules(SH.PARAM_RULES, heads=None, kv_heads=None,
+                             mlp=None, vocab=None, expert=None,
+                             mamba_inner=None, mamba_heads=None)
+        v["no_tp"] = (base_tc, no_tp_act, no_tp_param)
+        # stack the winners: DP-only + grad accumulation shrinks live
+        # activation temps; dots-remat trades a little recompute for the
+        # rest (no TP ⇒ no activation all-reduces to duplicate)
+        v["no_tp_mb4_dots"] = (
+            dataclasses.replace(base_tc, remat="dots", microbatches=4),
+            no_tp_act, no_tp_param)
+        v["no_tp_mb8_full"] = (
+            dataclasses.replace(base_tc, microbatches=8),
+            no_tp_act, no_tp_param)
+        # shard the sequence dim of activations over model (context para.)
+        v["seq_shard"] = (base_tc,
+                          _rules(SH.ACT_RULES, seq="model", heads=None,
+                                 mlp=None, vocab=None),
+                          None)
+    else:
+        v["kv_seq_unsharded"] = (
+            base_tc, _rules(SH.ACT_RULES, kv_seq=None), None)
+        v["kv_batch_model"] = (
+            base_tc, _rules(SH.ACT_RULES, kv_seq=None,
+                            batch=("pod", "data", "model")), None)
+        # sequence-parallel decode: shard_map partial softmax over the
+        # seq-sharded cache (kernels/decode_attention/distributed.py)
+        v["dist_decode"] = (
+            dataclasses.replace(base_tc, impl="dist"), None, None)
+    # vocab over data instead of model (affects lm-head collective shape)
+    v["vocab_over_data"] = (
+        base_tc,
+        _rules(SH.ACT_RULES, vocab="data"),
+        _rules(SH.PARAM_RULES, vocab="data", embed="model"))
+    return v
+
+
+def terms(rec: Dict) -> Dict[str, float]:
+    mf = model_flops(rec["arch"], rec["shape"])
+    compute = rec["flops_per_device"] / PEAK_FLOPS_BF16
+    mem = rec["memory"]
+    memory = (mem["argument_bytes"] + mem["output_bytes"]
+              + 2 * mem["temp_bytes"]) / HBM_BW  # buffer-traffic LB
+    coll = rec["collectives"]["total_bytes"] / ICI_BW
+    step = max(compute, memory, coll)
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "bound": max((("compute", compute), ("memory", memory),
+                      ("collective", coll)), key=lambda kv: kv[1])[0],
+        "step_s": step,
+        "roofline_fraction": (mf / rec["n_devices"] / PEAK_FLOPS_BF16) / step,
+        "model_over_hlo": mf / (rec["flops_per_device"] * rec["n_devices"]),
+    }
+
+
+def run_variant(arch: str, shape: str, variant: str,
+                out_dir: str = "results/perf") -> Dict:
+    from repro.configs import get_shape
+    kind = get_shape(shape).kind
+    vs = variants("train" if kind == "train" else "serve")
+    if variant not in vs:
+        raise SystemExit(f"unknown variant {variant!r}; "
+                         f"have: {', '.join(vs)}")
+    tc, act_rules, param_rules = vs[variant]
+    rec = run_cell(arch, shape, False, tc=tc, out_dir=out_dir,
+                   act_rules=act_rules, param_rules=param_rules,
+                   tag=f"perf-{variant}")
+    rec["terms"] = terms(rec)
+    with open(os.path.join(
+            out_dir, f"{arch}__{shape}__{variant}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    args = ap.parse_args()
+    rec = run_variant(args.arch, args.shape, args.variant)
+    t = rec["terms"]
+    print(f"{args.arch} × {args.shape} × {args.variant}: "
+          f"compute {t['compute_s']*1e3:.2f}ms "
+          f"memory {t['memory_s']*1e3:.2f}ms "
+          f"collective {t['collective_s']*1e3:.2f}ms "
+          f"bound={t['bound']} "
+          f"roofline={t['roofline_fraction']:.2%} "
+          f"useful/hlo={t['model_over_hlo']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""``input_specs``: ShapeDtypeStruct stand-ins for every model input of an
+(architecture × shape) cell — weak-type-correct, shardable, zero device
+allocation. The dry-run lowers against these; tests materialize them with
+``materialize`` on reduced configs.
+
+Modality frontends are STUBS per the assignment: audio cells receive
+precomputed frame features, VLM cells receive precomputed patch embeddings
+(plus a shortened text stream so total seq == shape.seq_len).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import model as MODEL
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        specs["feats"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.frontend.feature_dim), jnp.float32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+    if cfg.family == "vlm":
+        n_p = cfg.frontend.n_prefix
+        specs["feats"] = jax.ShapeDtypeStruct(
+            (b, n_p, cfg.frontend.feature_dim), jnp.float32)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s - n_p), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels", None)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Decode lowers ``serve_step``: one new token against a cache of
+    ``shape.seq_len`` positions."""
+    b = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: MODEL.init_cache(cfg, b, shape.seq_len))
+    return {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+def input_axes(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Logical-axis tree matching ``input_specs``'s structure."""
+    if shape.kind == "train" or shape.kind == "prefill":
+        axes: Dict[str, Any] = {}
+        specs = input_specs(cfg, shape)
+        for name, leaf in specs.items():
+            axes[name] = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return axes
+    return {
+        "cache": MODEL.cache_axes(cfg),
+        "tokens": ("batch",),
+        "pos": ("batch",),
+    }
+
+
+def materialize(specs, key: jax.Array, vocab_size: int):
+    """Turn specs into concrete (seeded) arrays — smoke tests only."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    out = []
+    for i, leaf in enumerate(leaves):
+        sub = jax.random.fold_in(key, i)
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            out.append(jax.random.randint(
+                sub, leaf.shape, 0, max(2, vocab_size), dtype=leaf.dtype))
+        else:
+            out.append(jax.random.normal(sub, leaf.shape, leaf.dtype))
+    return jax.tree.unflatten(treedef, out)

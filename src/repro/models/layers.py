@@ -1,0 +1,240 @@
+"""Shared layer primitives: norms, RoPE, GQA attention, MLP.
+
+Parameter trees are plain nested dicts of ``jnp`` arrays; each ``init_*``
+returns ``(params, axes)`` where ``axes`` mirrors the tree with tuples of
+logical axis names consumed by ``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Small init helper that builds params + logical axes trees in lockstep.
+# ---------------------------------------------------------------------------
+class ParamFactory:
+    def __init__(self, key: jax.Array, dtype: jnp.dtype):
+        self._key = key
+        self.dtype = dtype
+
+    def next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def normal(self, shape, axes, scale: Optional[float] = None):
+        if scale is None:
+            scale = shape[0] ** -0.5  # fan-in
+        w = jax.random.normal(self.next_key(), shape, jnp.float32) * scale
+        return w.astype(self.dtype), axes
+
+    def zeros(self, shape, axes):
+        return jnp.zeros(shape, self.dtype), axes
+
+    def ones(self, shape, axes):
+        return jnp.ones(shape, self.dtype), axes
+
+    def const(self, value, axes):
+        return value.astype(self.dtype), axes
+
+
+def split_tree(pairs: Dict[str, Tuple[Any, Any]]) -> Tuple[Params, Params]:
+    """{'name': (param, axes) | (subparams, subaxes)} → (params, axes)."""
+    params, axes = {}, {}
+    for name, (p, a) in pairs.items():
+        params[name] = p
+        axes[name] = a
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, f: ParamFactory):
+    if cfg.norm == "layernorm":
+        return split_tree({
+            "scale": f.ones((cfg.d_model,), (None,)),
+            "bias": f.zeros((cfg.d_model,), (None,)),
+        })
+    return split_tree({"scale": f.ones((cfg.d_model,), (None,))})
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_1d(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_sin_cos(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (...,) int → sin/cos of shape (..., head_dim/2) f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (b, s, h, d); sin/cos: (b, s, d/2) or (s, d/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:
+        sin = sin[None]
+        cos = cos[None]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+def init_attention(cfg: ModelConfig, f: ParamFactory):
+    d, hq, hkv, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.resolved_head_dim())
+    pairs = {
+        "wq": f.normal((d, hq, hd), ("embed", "heads", "head_dim")),
+        "wk": f.normal((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": f.normal((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": f.normal((hq, hd, d), ("heads", "head_dim", "embed"),
+                       scale=(hq * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        pairs["bq"] = f.zeros((hq, hd), ("heads", "head_dim"))
+        pairs["bk"] = f.zeros((hkv, hd), ("kv_heads", "head_dim"))
+        pairs["bv"] = f.zeros((hkv, hd), ("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        pairs["q_norm"] = f.ones((hd,), (None,))
+        pairs["k_norm"] = f.ones((hd,), (None,))
+    return split_tree(pairs)
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    if cfg.qk_norm:
+        q = rms_norm_1d(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm_1d(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attention_block(
+    cfg: ModelConfig,
+    p: Params,
+    h: jax.Array,
+    *,
+    positions: jax.Array,
+    impl: str = "ref",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence (train/prefill) attention. Returns (residual output,
+    kv-cache contribution {'k','v'})."""
+    q, k, v = _project_qkv(cfg, p, h)
+    sin, cos = rope_sin_cos(positions, cfg.resolved_head_dim(), cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    attn = flash_attention(q, k, v, causal=cfg.causal, window=cfg.window,
+                           impl=impl)
+    out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    return constrain(out, "batch", "seq", "embed"), {"k": k, "v": v}
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: Params,
+    h: jax.Array,            # (b, 1, d)
+    cache: Dict[str, jax.Array],  # k/v: (b, S, kv, hd)
+    pos: jax.Array,          # (b,) int32 write positions
+    *,
+    impl: str = "ref",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b = h.shape[0]
+    q, k, v = _project_qkv(cfg, p, h)
+    sin, cos = rope_sin_cos(pos[:, None], cfg.resolved_head_dim(),
+                            cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    if impl == "dist":
+        # Sequence-parallel decode: masked local cache writeback + partial
+        # softmax per model-shard + tiny online-softmax combine — replaces
+        # the per-layer full-cache all-gather/re-shard of the XLA default
+        # (see kernels/decode_attention/distributed.py and §Perf).
+        from repro.kernels.decode_attention.distributed import (
+            dist_decode_update_attend)
+        attn, ck, cv = dist_decode_update_attend(
+            q[:, 0], k[:, 0], v[:, 0], cache["k"], cache["v"], pos)
+    else:
+        bidx = jnp.arange(b)
+        ck = cache["k"].at[bidx, pos].set(k[:, 0])
+        cv = cache["v"].at[bidx, pos].set(v[:, 0])
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+        attn = decode_attention(q[:, 0], ck, cv, pos + 1, impl=impl)
+    out = jnp.einsum("bhk,hkd->bd", attn, p["wo"])[:, None]
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, f: ParamFactory):
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        return split_tree({
+            "w_gate": f.normal((d, ff), ("embed", "mlp")),
+            "w_up": f.normal((d, ff), ("embed", "mlp")),
+            "w_down": f.normal((ff, d), ("mlp", "embed")),
+        })
+    return split_tree({
+        "w_in": f.normal((d, ff), ("embed", "mlp")),
+        "w_out": f.normal((ff, d), ("mlp", "embed")),
+    })
+
+
+def mlp_block(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlp_act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        y = constrain(jax.nn.silu(g) * u, "batch", "seq", "mlp")
+        out = jnp.einsum("bsf,fd->bsd", y, p["w_down"])
+    else:
+        y = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_in"]))
+        y = constrain(y, "batch", "seq", "mlp")
+        out = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return constrain(out, "batch", "seq", "embed")

@@ -1,0 +1,169 @@
+"""Mamba-2 (SSD) block: projections + causal depthwise conv + chunked SSD
+scan + gated RMSNorm + output projection, plus the single-token decode
+recurrence. The scan itself lives in ``repro.kernels.ssd``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ssd.ops import ssd, ssd_decode_step, ssd_with_state
+from repro.models.layers import ParamFactory, split_tree
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def init_mamba(cfg: ModelConfig, f: ParamFactory):
+    assert cfg.ssm is not None
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    nh = s.n_heads(d)
+    gs = s.n_groups * s.d_state
+    conv_dim = din + 2 * gs
+    pairs = {
+        "wz": f.normal((d, din), ("embed", "mamba_inner")),
+        "wx": f.normal((d, din), ("embed", "mamba_inner")),
+        "wB": f.normal((d, gs), ("embed", "mamba_group_state")),
+        "wC": f.normal((d, gs), ("embed", "mamba_group_state")),
+        "wdt": f.normal((d, nh), ("embed", "mamba_heads")),
+        "dt_bias": f.zeros((nh,), ("mamba_heads",)),
+        # A ∈ [-A_max, 0): init A_log ~ U(log 1, log 16) per mamba-2 defaults
+        "A_log": f.const(
+            jnp.log(jnp.linspace(1.0, 16.0, nh)), ("mamba_heads",)),
+        "D": f.ones((nh,), ("mamba_heads",)),
+        "conv_w": f.normal((s.conv_kernel, conv_dim), (None, None),
+                           scale=s.conv_kernel ** -0.5),
+        "conv_b": f.zeros((conv_dim,), (None,)),
+        "gate_norm": f.ones((din,), ("mamba_inner",)),
+        "wo": f.normal((din, d), ("mamba_inner", "embed")),
+    }
+    return split_tree(pairs)
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    s = cfg.ssm
+    din = s.d_inner(cfg.d_model)
+    gs = s.n_groups * s.d_state
+    x = xbc[..., :din]
+    B = xbc[..., din:din + gs]
+    C = xbc[..., din + gs:]
+    return x, B, C
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (b, s, c); w: (k, c); prev: (b, k-1, c)
+    carry-in state (decode/chunk handoff)."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    xpad = jnp.concatenate([prev, xbc], axis=1)
+    out = jnp.zeros_like(xbc, shape=xbc.shape).astype(jnp.float32)
+    for i in range(k):  # k is 4: unrolled taps beat a conv op at this size
+        out = out + xpad[:, i:i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float) -> jax.Array:
+    """RMSNorm(y * silu(z)) — the mamba-2 gated normalization."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_block(cfg: ModelConfig, p: Params, h: jax.Array, *,
+                impl: str = "ref", return_state: bool = False):
+    """Full-sequence mamba mixer. h: (b, s, d). Returns (out, cache|None)
+    where cache = {'conv': (b, k-1, c), 'state': (b, nh, hd, N)}."""
+    s = cfg.ssm
+    din = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+
+    z = jnp.einsum("bsd,di->bsi", h, p["wz"])
+    xr = jnp.einsum("bsd,di->bsi", h, p["wx"])
+    Br = jnp.einsum("bsd,dg->bsg", h, p["wB"])
+    Cr = jnp.einsum("bsd,dg->bsg", h, p["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["wdt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+
+    xbc = jnp.concatenate([xr, Br, Cr], axis=-1)
+    conv_tail = xbc[:, -(s.conv_kernel - 1):, :]
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x, B, C = _split_xbc(cfg, xbc)
+
+    bsz, slen = h.shape[0], h.shape[1]
+    x = constrain(x.reshape(bsz, slen, nh, s.head_dim),
+                  "batch", "seq", "mamba_heads", "head_dim")
+    B = B.reshape(bsz, slen, s.n_groups, s.d_state)
+    C = C.reshape(bsz, slen, s.n_groups, s.d_state)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if return_state:
+        y, state = ssd_with_state(x, dt, A, B, C, p["D"],
+                                  chunk=s.chunk_size, impl=impl)
+    else:
+        y = ssd(x, dt, A, B, C, p["D"], chunk=s.chunk_size, impl=impl)
+        state = None
+    y = y.reshape(bsz, slen, din)
+    y = _gated_norm(y, z, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"])
+    out = constrain(out, "batch", "seq", "embed")
+    cache = None
+    if return_state:
+        cache = {"conv": conv_tail, "state": state}
+    return out, cache
+
+
+def mamba_decode(cfg: ModelConfig, p: Params, h: jax.Array,
+                 cache: Dict[str, jax.Array]):
+    """Single-token step. h: (b, 1, d); cache from ``mamba_block``/init."""
+    s = cfg.ssm
+    din = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    b = h.shape[0]
+
+    z = jnp.einsum("bsd,di->bsi", h, p["wz"])[:, 0]
+    xr = jnp.einsum("bsd,di->bsi", h, p["wx"])[:, 0]
+    Br = jnp.einsum("bsd,dg->bsg", h, p["wB"])[:, 0]
+    Cr = jnp.einsum("bsd,dg->bsg", h, p["wC"])[:, 0]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["wdt"]).astype(jnp.float32)[:, 0]
+        + p["dt_bias"].astype(jnp.float32))
+
+    xbc_t = jnp.concatenate([xr, Br, Cr], axis=-1)       # (b, c)
+    window = jnp.concatenate([cache["conv"], xbc_t[:, None]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    x, B, C = _split_xbc(cfg, conv_out.astype(h.dtype))
+
+    x = x.reshape(b, nh, s.head_dim)
+    B = B.reshape(b, s.n_groups, s.d_state)
+    C = C.reshape(b, s.n_groups, s.d_state)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    new_state, y = ssd_decode_step(cache["state"], x, dt, A, B, C, p["D"])
+    y = y.reshape(b, din)
+    y = _gated_norm(y, z, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, p["wo"])[:, None]
+    new_cache = {"conv": window[:, 1:], "state": new_state}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    din = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = din + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,492 @@
+"""Model builder: one entry point for all ten assigned architectures.
+
+Families:
+- dense / moe / audio / vlm — homogeneous decoder/encoder stack, one
+  ``lax.scan`` over stacked layer params (compact HLO, fast compiles).
+- ssm — homogeneous Mamba-2 stack.
+- hybrid (Jamba) — ``lax.scan`` over *blocks* (block = ``block_len`` layers
+  with a fixed attn/mamba + dense/MoE pattern; pattern is static per block
+  because ``block_len`` is even and the MoE period divides it).
+
+``init_params`` materializes weights; ``param_shapes``/``param_axes``
+produce ShapeDtypeStruct / logical-axis trees of the SAME structure without
+allocating — the dry-run path for 400B-scale configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Abstract factory: same init code path, zero allocation.
+# ---------------------------------------------------------------------------
+class AbstractFactory(L.ParamFactory):
+    def __init__(self, dtype):
+        super().__init__(jax.random.PRNGKey(0), dtype)
+
+    def normal(self, shape, axes, scale=None):
+        return jax.ShapeDtypeStruct(shape, self.dtype), axes
+
+    def zeros(self, shape, axes):
+        return jax.ShapeDtypeStruct(shape, self.dtype), axes
+
+    def ones(self, shape, axes):
+        return jax.ShapeDtypeStruct(shape, self.dtype), axes
+
+    def const(self, value, axes):
+        return jax.ShapeDtypeStruct(value.shape, self.dtype), axes
+
+
+def _stack(leaves):
+    first = leaves[0]
+    n = len(leaves)
+    if isinstance(first, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct((n, *first.shape), first.dtype)
+    return jnp.stack(leaves)
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: _stack(list(xs)), *trees)
+
+
+def _prepend_axis(axes_tree, name="layers"):
+    return jax.tree.map(
+        lambda a: (name, *a),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+def _init_uniform_layer(cfg: ModelConfig, f: L.ParamFactory):
+    pairs = {"ln1": L.init_norm(cfg, f)}
+    if cfg.family == "ssm":
+        pairs["mixer"] = M.init_mamba(cfg, f)
+        return L.split_tree(pairs)
+    pairs["mixer"] = L.init_attention(cfg, f)
+    pairs["ln2"] = L.init_norm(cfg, f)
+    if cfg.moe is not None and cfg.moe.period == 1:
+        pairs["ffn"] = MOE.init_moe(cfg, f)
+    else:
+        pairs["ffn"] = L.init_mlp(cfg, f)
+    return L.split_tree(pairs)
+
+
+def _init_hybrid_block(cfg: ModelConfig, f: L.ParamFactory):
+    hb = cfg.hybrid
+    mambas, mamba_axes = [], None
+    ffns_mlp, ffns_moe = [], []
+    lns, ln_axes = [], None
+    pairs: Dict[str, Any] = {}
+    for j in range(hb.block_len):
+        ln1 = L.init_norm(cfg, f)
+        ln2 = L.init_norm(cfg, f)
+        lns.append(_stack_trees([ln1[0], ln2[0]]))
+        ln_axes = ln1[1]
+        if hb.layer_kind(j) == ATTN:
+            pairs["attn"] = L.init_attention(cfg, f)
+        else:
+            mp, ma = M.init_mamba(cfg, f)
+            mambas.append(mp)
+            mamba_axes = ma
+        if cfg.moe is not None and cfg.moe.is_moe_layer(j):
+            mo, moa = MOE.init_moe(cfg, f)
+            ffns_moe.append(mo)
+            moe_axes = moa
+        else:
+            ml, mla = L.init_mlp(cfg, f)
+            ffns_mlp.append(ml)
+            mlp_axes = mla
+    params = {
+        "attn": pairs["attn"][0],
+        "mamba": _stack_trees(mambas),
+        "moe": _stack_trees(ffns_moe),
+        "mlp": _stack_trees(ffns_mlp),
+        "lns": _stack_trees(lns),
+    }
+    axes = {
+        "attn": pairs["attn"][1],
+        "mamba": _prepend_axis(mamba_axes),
+        "moe": _prepend_axis(moe_axes),
+        "mlp": _prepend_axis(mlp_axes),
+        "lns": _prepend_axis(_prepend_axis(ln_axes, "norm_pair"), "layers"),
+    }
+    return params, axes
+
+
+def _build(cfg: ModelConfig, f: L.ParamFactory) -> Tuple[Params, Params]:
+    d, v = cfg.d_model, cfg.vocab_size
+    pairs: Dict[str, Any] = {}
+    pairs["embed"] = f.normal((v, d), ("vocab", "embed"), scale=1.0)
+    if cfg.frontend is not None:
+        pairs["frontend"] = L.split_tree({
+            "w": f.normal((cfg.frontend.feature_dim, d),
+                          ("frontend_feature", "embed")),
+        })
+    if cfg.hybrid is not None:
+        n_blocks = cfg.n_layers // cfg.hybrid.block_len
+        blocks = [_init_hybrid_block(cfg, f) for _ in range(n_blocks)]
+        pairs["blocks"] = (_stack_trees([b[0] for b in blocks]),
+                           _prepend_axis(blocks[0][1]))
+    else:
+        layers_ = [_init_uniform_layer(cfg, f) for _ in range(cfg.n_layers)]
+        pairs["layers"] = (_stack_trees([p for p, _ in layers_]),
+                           _prepend_axis(layers_[0][1]))
+    pairs["final_norm"] = L.init_norm(cfg, f)
+    if not cfg.tie_embeddings:
+        pairs["lm_head"] = f.normal((v, d), ("vocab", "embed"))
+    return L.split_tree(pairs)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    return _build(cfg, L.ParamFactory(key, dtype))[0]
+
+
+def param_shapes(cfg: ModelConfig) -> Params:
+    return _build(cfg, AbstractFactory(jnp.dtype(cfg.param_dtype)))[0]
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    return _build(cfg, AbstractFactory(jnp.dtype(cfg.param_dtype)))[1]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: Dict[str, Any]):
+    adt = jnp.dtype(cfg.activation_dtype)
+    if cfg.family == "audio":
+        h = jnp.einsum("bsf,fd->bsd", batch["feats"].astype(adt),
+                       params["frontend"]["w"])
+    elif cfg.family == "vlm":
+        text = params["embed"][batch["tokens"]].astype(adt)
+        patches = jnp.einsum("bpf,fd->bpd", batch["feats"].astype(adt),
+                             params["frontend"]["w"])
+        h = jnp.concatenate([patches, text], axis=1)
+    else:
+        h = params["embed"][batch["tokens"]].astype(adt)
+    return constrain(h, "batch", "seq", "embed")
+
+
+def _lm_head(cfg: ModelConfig, params: Params, h: jax.Array) -> jax.Array:
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", h, w)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _uniform_layer_fwd(cfg, impl, collect_cache, h, lp, positions):
+    aux = jnp.zeros((), jnp.float32)
+    x = L.apply_norm(cfg, lp["ln1"], h)
+    if cfg.family == "ssm":
+        out, cache = M.mamba_block(cfg, lp["mixer"], x, impl=impl,
+                                   return_state=collect_cache)
+        h = h + out
+        return h, aux, cache
+    out, kv = L.attention_block(cfg, lp["mixer"], x, positions=positions,
+                                impl=impl)
+    h = h + out
+    x2 = L.apply_norm(cfg, lp["ln2"], h)
+    if cfg.moe is not None and cfg.moe.period == 1:
+        ffn_out, aux = MOE.moe_block(cfg, lp["ffn"], x2)
+    else:
+        ffn_out = L.mlp_block(cfg, lp["ffn"], x2)
+    h = h + ffn_out
+    return h, aux, (kv if collect_cache else None)
+
+
+def _hybrid_block_fwd(cfg, impl, collect_cache, h, bp, positions):
+    hb = cfg.hybrid
+    aux = jnp.zeros((), jnp.float32)
+    caches: Dict[str, Any] = {"mamba": [], "attn": None}
+    mi = 0
+    n_moe = 0
+    n_mlp = 0
+    for j in range(hb.block_len):
+        lns = jax.tree.map(lambda x: x[j], bp["lns"])
+        x = L.apply_norm(cfg, jax.tree.map(lambda t: t[0], lns), h)
+        if hb.layer_kind(j) == ATTN:
+            out, kv = L.attention_block(cfg, bp["attn"], x,
+                                        positions=positions, impl=impl)
+            if collect_cache:
+                caches["attn"] = kv
+        else:
+            mp = jax.tree.map(lambda t: t[mi], bp["mamba"])
+            out, mc = M.mamba_block(cfg, mp, x, impl=impl,
+                                    return_state=collect_cache)
+            if collect_cache:
+                caches["mamba"].append(mc)
+            mi += 1
+        h = h + out
+        x2 = L.apply_norm(cfg, jax.tree.map(lambda t: t[1], lns), h)
+        if cfg.moe is not None and cfg.moe.is_moe_layer(j):
+            mo = jax.tree.map(lambda t: t[n_moe], bp["moe"])
+            ffn_out, a = MOE.moe_block(cfg, mo, x2)
+            aux = aux + a
+            n_moe += 1
+        else:
+            ml = jax.tree.map(lambda t: t[n_mlp], bp["mlp"])
+            ffn_out = L.mlp_block(cfg, ml, x2)
+            n_mlp += 1
+        h = h + ffn_out
+    if collect_cache and caches["mamba"]:
+        caches["mamba"] = _stack_trees(caches["mamba"])
+    return h, aux, (caches if collect_cache else None)
+
+
+_REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    batch: Dict[str, Any],
+    *,
+    impl: str = "ref",
+    remat: str = "none",
+    collect_cache: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[Any]]:
+    """Returns (logits (b,s,v), moe_aux_loss, caches|None).
+
+    ``unroll=True`` replaces the layer scan with a Python loop — used by the
+    dry-run's cost probes (XLA cost analysis counts a while-loop body once,
+    so probes must be loop-free) and available as a perf knob.
+    """
+    h = _embed_inputs(cfg, params, batch)
+    positions = jnp.arange(h.shape[1])
+
+    if cfg.hybrid is not None:
+        body_fn = functools.partial(_hybrid_block_fwd, cfg, impl,
+                                    collect_cache)
+        stacked = params["blocks"]
+        n_steps = cfg.n_layers // cfg.hybrid.block_len
+    else:
+        body_fn = functools.partial(_uniform_layer_fwd, cfg, impl,
+                                    collect_cache)
+        stacked = params["layers"]
+        n_steps = cfg.n_layers
+
+    def scan_body(carry, lp):
+        h, aux = carry
+        h, a, cache = body_fn(h, lp, positions)
+        return (h, aux + a), cache
+
+    if remat != "none":
+        policy = _REMAT_POLICIES[remat]
+        scan_body = jax.checkpoint(
+            scan_body, policy=policy, prevent_cse=False)
+
+    carry = (h, jnp.zeros((), jnp.float32))
+    if unroll:
+        caches_list = []
+        for i in range(n_steps):
+            lp = jax.tree.map(lambda x: x[i], stacked)
+            carry, cache = scan_body(carry, lp)
+            caches_list.append(cache)
+        caches = (_stack_trees(caches_list)
+                  if collect_cache and caches_list[0] is not None else None)
+        h, aux = carry
+    else:
+        (h, aux), caches = jax.lax.scan(scan_body, carry, stacked)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = _lm_head(cfg, params, h)
+    return logits, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+def _pad_kv(kv: Dict[str, jax.Array], max_len: int):
+    def pad(x):
+        pad_len = max_len - x.shape[2]
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pad_len), (0, 0), (0, 0)))
+    # kv leaves: (layers, b, s, kv_heads, hd)
+    return jax.tree.map(pad, kv)
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any], *,
+            max_len: Optional[int] = None, impl: str = "ref",
+            unroll: bool = False):
+    """Run the prompt through the model; returns (last-token logits, cache).
+
+    The attention KV cache is padded out to ``max_len`` so decode can append.
+    """
+    logits, _, caches = forward(cfg, params, batch, impl=impl,
+                                collect_cache=True, unroll=unroll)
+    seq_len = logits.shape[1]
+    if max_len is None:
+        max_len = seq_len
+    if cfg.hybrid is not None:
+        kv = caches["attn"]
+        kv = _pad_kv(kv, max_len) if max_len > seq_len else kv
+        cache = {"attn": kv, "mamba": caches["mamba"]}
+    elif cfg.family == "ssm":
+        cache = {"mamba": caches}
+    else:
+        kv = _pad_kv(caches, max_len) if max_len > seq_len else caches
+        cache = {"attn": kv}
+    return logits[:, -1], cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Zero-filled decode cache (the decode dry-run's input spec)."""
+    adt = jnp.dtype(cfg.activation_dtype)
+    hd = cfg.resolved_head_dim()
+
+    def kv(n):
+        return {
+            "k": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), adt),
+            "v": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), adt),
+        }
+
+    if cfg.hybrid is not None:
+        n_blocks = cfg.n_layers // cfg.hybrid.block_len
+        per_block_mamba = cfg.hybrid.block_len - 1
+        mc = M.init_mamba_cache(cfg, batch, adt)
+        mamba = jax.tree.map(
+            lambda x: jnp.zeros((n_blocks, per_block_mamba, *x.shape),
+                                x.dtype), mc)
+        return {"attn": kv(n_blocks), "mamba": mamba}
+    if cfg.family == "ssm":
+        mc = M.init_mamba_cache(cfg, batch, adt)
+        return {"mamba": jax.tree.map(
+            lambda x: jnp.zeros((cfg.n_layers, *x.shape), x.dtype), mc)}
+    return {"attn": kv(cfg.n_layers)}
+
+
+def cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Logical-axis tree matching ``init_cache``'s structure."""
+    kv = {"k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+          "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim")}
+    mamba = {"conv": ("batch", None, None),
+             "state": ("batch", "mamba_heads", "head_dim", "state")}
+    if cfg.hybrid is not None:
+        mamba2 = jax.tree.map(
+            lambda a: ("layers", "inner_layers", *a), mamba,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                e is None or isinstance(e, str) for e in x))
+        return {"attn": kv, "mamba": mamba2}
+    if cfg.family == "ssm":
+        return {"mamba": jax.tree.map(
+            lambda a: ("layers", *a), mamba,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                e is None or isinstance(e, str) for e in x))}
+    return {"attn": kv}
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Dict[str, Any],
+    tokens: jax.Array,   # (b,) int32
+    pos: jax.Array,      # (b,) int32 current write position
+    *,
+    impl: str = "ref",
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token for every sequence in the batch. Returns (logits (b, v),
+    updated cache)."""
+    adt = jnp.dtype(cfg.activation_dtype)
+    h = params["embed"][tokens].astype(adt)[:, None]   # (b, 1, d)
+    h = constrain(h, "batch", "seq", "embed")
+
+    def _maybe_unrolled_scan(body, carry, xs):
+        if not unroll:
+            return jax.lax.scan(body, carry, xs)
+        n = jax.tree.leaves(xs)[0].shape[0]
+        ys = []
+        for i in range(n):
+            carry, y = body(carry, jax.tree.map(lambda t: t[i], xs))
+            ys.append(y)
+        return carry, _stack_trees(ys)
+
+    if cfg.hybrid is not None:
+        def body(h, xs):
+            bp, bc = xs
+            aux_cache = {"mamba": [], "attn": None}
+            hb = cfg.hybrid
+            mi = 0
+            nm, nl = 0, 0
+            hh = h
+            for j in range(hb.block_len):
+                lns = jax.tree.map(lambda x: x[j], bp["lns"])
+                x = L.apply_norm(cfg, jax.tree.map(lambda t: t[0], lns), hh)
+                if hb.layer_kind(j) == ATTN:
+                    out, kv = L.attention_decode(cfg, bp["attn"], x,
+                                                 bc["attn"], pos, impl=impl)
+                    aux_cache["attn"] = kv
+                else:
+                    mp = jax.tree.map(lambda t: t[mi], bp["mamba"])
+                    mcache = jax.tree.map(lambda t: t[mi], bc["mamba"])
+                    out, nc = M.mamba_decode(cfg, mp, x, mcache)
+                    aux_cache["mamba"].append(nc)
+                    mi += 1
+                hh = hh + out
+                x2 = L.apply_norm(cfg, jax.tree.map(lambda t: t[1], lns), hh)
+                if cfg.moe is not None and cfg.moe.is_moe_layer(j):
+                    mo = jax.tree.map(lambda t: t[nm], bp["moe"])
+                    ffn_out, _ = MOE.moe_block(cfg, mo, x2)
+                    nm += 1
+                else:
+                    ml = jax.tree.map(lambda t: t[nl], bp["mlp"])
+                    ffn_out = L.mlp_block(cfg, ml, x2)
+                    nl += 1
+                hh = hh + ffn_out
+            aux_cache["mamba"] = _stack_trees(aux_cache["mamba"])
+            return hh, aux_cache
+
+        h, new_cache = _maybe_unrolled_scan(body, h, (params["blocks"], cache))
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            lp, lc = xs
+            x = L.apply_norm(cfg, lp["ln1"], h)
+            out, nc = M.mamba_decode(cfg, lp["mixer"], x, lc)
+            return h + out, nc
+
+        h, new_mamba = _maybe_unrolled_scan(body, h, (params["layers"],
+                                                    cache["mamba"]))
+        new_cache = {"mamba": new_mamba}
+    else:
+        def body(h, xs):
+            lp, lc = xs
+            x = L.apply_norm(cfg, lp["ln1"], h)
+            out, kv = L.attention_decode(cfg, lp["mixer"], x, lc, pos,
+                                         impl=impl)
+            h = h + out
+            x2 = L.apply_norm(cfg, lp["ln2"], h)
+            if cfg.moe is not None and cfg.moe.period == 1:
+                ffn_out, _ = MOE.moe_block(cfg, lp["ffn"], x2)
+            else:
+                ffn_out = L.mlp_block(cfg, lp["ffn"], x2)
+            return h + ffn_out, kv
+
+        h, new_kv = _maybe_unrolled_scan(body, h, (params["layers"], cache["attn"]))
+        new_cache = {"attn": new_kv}
+
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = _lm_head(cfg, params, h)[:, 0]
+    return logits, new_cache

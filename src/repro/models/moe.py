@@ -1,0 +1,110 @@
+"""Top-k routed mixture-of-experts, TPU-native "dropping" formulation.
+
+Dispatch is scatter-based (token → (expert, capacity-slot)) rather than the
+GShard dense-dispatch einsum: the (tokens × experts × capacity) one-hot of
+the einsum form is quadratic in tokens and cannot be materialized at
+1M-token global batches, whereas the scatter buffer is
+(experts × capacity × d_model) — linear — and shards as
+(expert → model, capacity → (pod, data)), turning the dispatch into an
+XLA-SPMD all-to-all across the data axis plus expert parallelism on the
+model axis. Overflow beyond capacity is dropped (standard "token dropping";
+capacity_factor controls the head-room).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamFactory, split_tree
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def init_moe(cfg: ModelConfig, f: ParamFactory):
+    assert cfg.moe is not None
+    m = cfg.moe
+    d, ff, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    pairs = {
+        "router": f.normal((d, e), ("embed", "expert"), scale=d ** -0.5),
+    }
+    if cfg.mlp_act == "swiglu":
+        pairs.update({
+            "w_gate": f.normal((e, d, ff), ("expert", "embed", "expert_mlp")),
+            "w_up": f.normal((e, d, ff), ("expert", "embed", "expert_mlp")),
+            "w_down": f.normal((e, ff, d), ("expert", "expert_mlp", "embed"),
+                               scale=ff ** -0.5),
+        })
+    else:
+        pairs.update({
+            "w_in": f.normal((e, d, ff), ("expert", "embed", "expert_mlp")),
+            "w_out": f.normal((e, ff, d), ("expert", "expert_mlp", "embed"),
+                              scale=ff ** -0.5),
+        })
+    return split_tree(pairs)
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    cap = int(math.ceil(m.top_k * n_tokens * m.capacity_factor / m.n_experts))
+    # keep the buffer shardable over the batch axes and lane-aligned
+    return max(128, -(-cap // 128) * 128)
+
+
+def moe_block(cfg: ModelConfig, p: Params, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (b, s, d) → (out (b, s, d), aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    cap = _capacity(t, cfg)
+
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (t, e)
+    gate, eid = jax.lax.top_k(probs, m.top_k)                      # (t, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)            # renorm
+
+    # Switch-style load-balance auxiliary loss.
+    me = jnp.mean(probs, axis=0)                                   # (e,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eid, m.n_experts, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+
+    # position of each (token, slot) within its expert queue
+    eflat = eid.reshape(-1)                                        # (t·k,)
+    onehot = jax.nn.one_hot(eflat, m.n_experts, dtype=jnp.int32)   # (t·k, e)
+    pos = jnp.cumsum(onehot, axis=0) - 1                           # (t·k, e)
+    pos = jnp.sum(pos * onehot, axis=-1)                           # (t·k,)
+    keep = pos < cap
+    slot = jnp.where(keep, pos, 0)
+
+    xk = jnp.repeat(xf[:, None, :], m.top_k, axis=1).reshape(-1, d)
+    buf = jnp.zeros((m.n_experts, cap, d), x.dtype)
+    buf = buf.at[eflat, slot].add(
+        jnp.where(keep[:, None], xk, 0).astype(x.dtype), mode="drop")
+    buf = constrain(buf, "expert", "expert_cap", None)
+
+    # expert FFN (batched over the expert dim)
+    if cfg.mlp_act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+        y = constrain(jax.nn.silu(g) * u, "expert", "expert_cap", None)
+        out_buf = jnp.einsum("ecf,efd->ecd", y, p["w_down"])
+    else:
+        y = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_in"]))
+        y = constrain(y, "expert", "expert_cap", None)
+        out_buf = jnp.einsum("ecf,efd->ecd", y, p["w_out"])
+    out_buf = constrain(out_buf, "expert", "expert_cap", None)
+
+    # combine: gather each slot back and weight by the (renormalized) gate
+    gathered = out_buf[eflat, slot]                                # (t·k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    gathered = gathered.reshape(t, m.top_k, d)
+    out = jnp.sum(gathered * gate[..., None].astype(x.dtype), axis=1)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,71 @@
+"""AdamW in pure JAX (no optax). Moments are fp32 regardless of param dtype;
+bf16 params are updated through an fp32 round-trip (no separate fp32 master
+copy — the memory/precision trade-off is recorded in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+OptState = Dict[str, Any]
+
+
+def adamw_init(params) -> OptState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads,
+    state: OptState,
+    params,
+    *,
+    lr: Union[float, jax.Array, Callable[[jax.Array], jax.Array]],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip_norm: float = 1.0,
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    count = state["count"] + 1
+    if callable(lr):
+        lr_t = lr(count)
+    else:
+        lr_t = jnp.asarray(lr, jnp.float32)
+
+    # global-norm clip (fp32 accumulation)
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    clip = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-12))
+
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * clip
+        m_new = b1 * m + (1.0 - b1) * gf
+        v_new = b2 * v + (1.0 - b2) * jnp.square(gf)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr_t * (step + weight_decay * pf)
+        return pf.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr_t}
+    return new_params, {"m": new_m, "v": new_v, "count": count}, metrics

@@ -1,0 +1,21 @@
+from repro.parallel.sharding import (
+    ACT_RULES,
+    PARAM_RULES,
+    ShardingRules,
+    constrain,
+    current_mesh,
+    physical_spec,
+    set_rules,
+    use_mesh,
+)
+
+__all__ = [
+    "ACT_RULES",
+    "PARAM_RULES",
+    "ShardingRules",
+    "constrain",
+    "current_mesh",
+    "physical_spec",
+    "set_rules",
+    "use_mesh",
+]

@@ -1,0 +1,10 @@
+"""Live training runtime: binocular speculation driving a JAX train loop
+over thread-simulated multi-host workers (real control plane — heartbeats,
+progress logs, speculative reassignment, rollback — with the model math
+running on the container's CPU device)."""
+from repro.runtime.coordinator import Coordinator, RuntimeConfig, StepReport
+from repro.runtime.hosts import GradMessage, HostDaemon, ProgressMessage, WorkItem
+from repro.runtime.trainer import TrainerRuntime
+
+__all__ = ["Coordinator", "GradMessage", "HostDaemon", "ProgressMessage",
+           "RuntimeConfig", "StepReport", "TrainerRuntime", "WorkItem"]

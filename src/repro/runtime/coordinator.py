@@ -1,0 +1,479 @@
+"""Training coordinator: the global speculator's seat (paper §III → live
+JAX training, DESIGN.md §2 mapping).
+
+One training step is a MapReduce round:
+- map tasks   — per-shard microbatch gradient production on host daemons,
+                streamed eagerly to the coordinator (the "MOF" is consumer-
+                side the moment it exists, so a producer's death loses only
+                its UNSTREAMED microbatches);
+- reduce task — the deterministic ordered gradient sum + optimizer apply,
+                dependent on every shard's stream (the barrier).
+
+The policy engine (``repro.core``) sees this through the same
+ClusterSnapshot/Action protocol as the MapReduce simulator. Recovery
+strategies:
+
+- ``bino``     — BinocularSpeculator: Eq. 4 adaptive failure detection,
+                 neighborhood/temporal straggler glance, collective shadow
+                 attempts, rollback resume from the (shard, mb, DataState)
+                 progress log. Only missing microbatches are re-executed.
+- ``restart``  — the gang-restart baseline: a silent host past the long
+                 timeout aborts the step; all partial gradients are
+                 discarded and the step re-runs on survivors.
+
+Exactly-once invariant: gradients are keyed by (shard, microbatch); the
+first arrival wins, duplicates from racing speculative attempts are
+dropped, and the final sum runs in sorted key order — a faulted run's model
+update is bit-identical to a fault-free run's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import (
+    AttemptState,
+    AttemptView,
+    BinoConfig,
+    BinocularSpeculator,
+    ClusterSnapshot,
+    KillAttempt,
+    MarkNodeFailed,
+    NodeView,
+    ProgressLog,
+    SpeculateTask,
+    TaskKind,
+    TaskState,
+    TaskView,
+)
+from repro.core.collective import CollectiveConfig
+from repro.core.glance import GlanceConfig
+from repro.data.pipeline import DataState
+from repro.runtime.hosts import GradMessage, HostDaemon, ProgressMessage, WorkItem
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    n_hosts: int = 4
+    microbatches_per_shard: int = 8
+    recovery: str = "bino"            # "bino" | "restart"
+    heartbeat_period: float = 0.05
+    spec_interval: float = 0.15
+    # gang-restart baseline: host silent past this ⇒ abort + restart step
+    restart_timeout: float = 6.0
+    # per-microbatch artificial compute time (gives tiny test models a
+    # realistic timeline; 0 for pure-throughput runs)
+    compute_delay: float = 0.05
+    checkpoint_every: int = 0         # 0 = off
+    checkpoint_dir: Optional[str] = None
+
+    def glance(self) -> GlanceConfig:
+        return GlanceConfig(
+            fail_threshold_init=1.0, fail_threshold_min=0.4,
+            fail_threshold_max=8.0, temporal_period=0.3,
+            size_neighbor=min(4, max(2, self.n_hosts)),
+            spatial_consecutive=3,
+            responsive_window=4 * self.heartbeat_period)
+
+
+@dataclasses.dataclass
+class _AttemptRec:
+    attempt_id: str
+    task_id: str
+    host_id: str
+    start: float
+    mb_start: int
+    mb_total: int
+    mb_done: int = 0
+    state: AttemptState = AttemptState.RUNNING
+    speculative: bool = False
+    rollback: bool = False
+    end: float = 0.0
+
+
+@dataclasses.dataclass
+class StepReport:
+    step: int
+    wall_s: float
+    mb_executed: int          # total microbatch executions incl. waste
+    mb_needed: int
+    recoveries: List[str]
+    restarts: int
+    metrics: Dict[str, float]
+
+
+class Coordinator:
+    def __init__(self, cfg: RuntimeConfig, *, grad_fn, apply_fn, batch_fn,
+                 init_state, datastates: Sequence[DataState]):
+        self.cfg = cfg
+        self.grad_fn = grad_fn
+        self.apply_fn = apply_fn          # (state, summed_grads) -> state
+        self.batch_fn = batch_fn
+        self.state = init_state
+        self.n_shards = len(datastates)
+        self.datastates: List[DataState] = list(datastates)
+        self.queue: "queue.Queue" = queue.Queue()
+        self.hosts: Dict[str, HostDaemon] = {}
+        self.heartbeats: Dict[str, float] = {}
+        self._hb_lock = threading.Lock()
+        self.dead_hosts: Set[str] = set()
+        self._aid = itertools.count()
+        host_ids = [f"h{i:02d}" for i in range(cfg.n_hosts)]
+        for hid in host_ids:
+            self._spawn_host(hid)
+        if cfg.recovery == "bino":
+            self.speculator = BinocularSpeculator(
+                host_ids,
+                BinoConfig(glance=cfg.glance(),
+                           collective=CollectiveConfig(check_period=0.2)))
+        else:
+            self.speculator = None
+        self.reports: List[StepReport] = []
+
+    # ------------------------------------------------------------------
+    def _spawn_host(self, hid: str) -> None:
+        h = HostDaemon(
+            hid, grad_fn=self.grad_fn, batch_fn=self.batch_fn,
+            out_queue=self.queue, heartbeat=self._on_heartbeat,
+            heartbeat_period=self.cfg.heartbeat_period,
+            compute_delay=self.cfg.compute_delay)
+        self.hosts[hid] = h
+        self.heartbeats[hid] = time.time()
+        h.start()
+
+    def _on_heartbeat(self, host_id: str, now: float) -> None:
+        with self._hb_lock:
+            self.heartbeats[host_id] = now
+
+    def live_hosts(self) -> List[str]:
+        return [h for h in self.hosts if h not in self.dead_hosts]
+
+    def shutdown(self) -> None:
+        for h in self.hosts.values():
+            h.shutdown()
+
+    # ------------------------------------------------------------------
+    # One training step
+    # ------------------------------------------------------------------
+    def run_step(self, step: int) -> StepReport:
+        t0 = time.time()
+        recoveries: List[str] = []
+        restarts = 0
+        mb_executed = 0
+        while True:
+            ok, mb_tried, metrics = self._try_step(step, recoveries)
+            mb_executed += mb_tried  # discarded work still counts as waste
+            if ok:
+                break
+            restarts += 1
+        report = StepReport(
+            step=step, wall_s=time.time() - t0,
+            mb_executed=mb_executed,
+            mb_needed=self.n_shards * self.cfg.microbatches_per_shard,
+            recoveries=recoveries, restarts=restarts, metrics=metrics)
+        self.reports.append(report)
+        return report
+
+    # -- step internals --------------------------------------------------
+    def _assign(self, tasks, attempts, task_id: str, shard: int,
+                host_id: str, mb_start: int, *, speculative: bool,
+                rollback: bool, data_state: DataState) -> None:
+        aid = f"{task_id}_a{next(self._aid)}"
+        M = self.cfg.microbatches_per_shard
+        rec = _AttemptRec(aid, task_id, host_id, time.time(), mb_start,
+                          M - mb_start, speculative=speculative,
+                          rollback=rollback)
+        attempts[aid] = rec
+        tasks[task_id]["attempts"].append(rec)
+        self.hosts[host_id].set_params(self.state["params"])
+        self.hosts[host_id].assign(WorkItem(
+            step=rec_step(task_id), task_id=task_id, shard_id=shard,
+            mb_start=mb_start, mb_end=M, data_state=data_state,
+            attempt_id=aid, speculative=speculative))
+
+    def _pick_host(self, tasks, exclude: Set[str],
+                   prefer: Sequence[str] = ()) -> Optional[str]:
+        """Least-loaded live host, placement hints first."""
+        busy: Dict[str, int] = {h: 0 for h in self.live_hosts()}
+        for t in tasks.values():
+            for a in t["attempts"]:
+                if a.state == AttemptState.RUNNING and a.host_id in busy:
+                    busy[a.host_id] += 1
+        for h in prefer:
+            if h in busy and h not in exclude:
+                return h
+        cands = [h for h in busy if h not in exclude]
+        if not cands:
+            cands = list(busy)  # nothing else: double up anywhere alive
+        if not cands:
+            return None
+        return min(cands, key=lambda h: (busy[h], h))
+
+    def _try_step(self, step: int, recoveries: List[str]
+                  ) -> Tuple[bool, int, Dict[str, float]]:
+        M = self.cfg.microbatches_per_shard
+        grads: Dict[Tuple[int, int], Any] = {}
+        metric_acc: Dict[str, float] = {}
+        mb_executed = 0
+        tasks: Dict[str, Dict[str, Any]] = {}
+        attempts: Dict[str, _AttemptRec] = {}
+        shard_states: Dict[int, DataState] = {}
+
+        live = self.live_hosts()
+        if not live:
+            raise RuntimeError("no live hosts remain")
+        for s in range(self.n_shards):
+            tid = f"s{step}_grad{s:03d}"
+            tasks[tid] = {"shard": s, "attempts": [], "done": False}
+            shard_states[s] = self.datastates[s]
+        reduce_tid = f"s{step}_apply"
+
+        # initial placement: shards round-robin over live hosts
+        for s in range(self.n_shards):
+            tid = f"s{step}_grad{s:03d}"
+            host = live[s % len(live)]
+            self._assign(tasks, attempts, tid, s, host, 0,
+                         speculative=False, rollback=False,
+                         data_state=shard_states[s])
+
+        last_tick = 0.0
+        deadline = time.time() + max(60.0, 30 * self.cfg.restart_timeout)
+        while len(grads) < self.n_shards * M:
+            if time.time() > deadline:
+                raise RuntimeError(f"step {step} wedged")
+            try:
+                msg = self.queue.get(timeout=0.02)
+            except queue.Empty:
+                msg = None
+            if isinstance(msg, GradMessage):
+                if msg.step != step:
+                    continue  # stale stream from a previous step's loser
+                key = (msg.shard_id, msg.mb_index)
+                mb_executed += 1
+                if key not in grads:  # exactly-once: first writer wins
+                    grads[key] = msg.grads
+                    for k, v in msg.metrics.items():
+                        metric_acc[k] = metric_acc.get(k, 0.0) + v
+            elif isinstance(msg, ProgressMessage):
+                if msg.step != step:
+                    continue
+                rec = attempts.get(msg.attempt_id)
+                if rec is not None and rec.state == AttemptState.RUNNING:
+                    rec.mb_done = msg.mb_done
+                    if msg.done:
+                        rec.state = AttemptState.COMPLETED
+                        rec.end = time.time()
+                        tasks[msg.task_id]["done"] = True
+                    # progress log: offset fraction + resumable data state
+                    if self.speculator is not None:
+                        self.speculator.record_progress_log(ProgressLog(
+                            task_id=msg.task_id, node_id=msg.host_id,
+                            offset=msg.mb_done / max(msg.mb_total, 1),
+                            handle=msg.data_state))
+
+            now = time.time()
+            if now - last_tick >= self.cfg.spec_interval:
+                last_tick = now
+                if self.speculator is not None:
+                    done = self._bino_tick(step, tasks, attempts, grads,
+                                           shard_states, recoveries)
+                else:
+                    aborted = self._restart_tick(tasks, attempts, recoveries)
+                    if aborted:
+                        return False, mb_executed, {}
+
+        # ---- reduce: deterministic ordered sum + optimizer apply -------
+        ordered = [grads[k] for k in sorted(grads)]
+        total = jax.tree.map(
+            lambda *xs: sum(x.astype(np.float32) if hasattr(x, "astype")
+                            else x for x in xs), *ordered)
+        denom = float(self.n_shards * M)
+        total = jax.tree.map(lambda x: x / denom, total)
+        self.state = self.apply_fn(self.state, total)
+        for s in range(self.n_shards):
+            self.datastates[s] = self.datastates[s].advance(M)
+        for h in self.live_hosts():
+            self.hosts[h].set_params(self.state["params"])
+        metrics = {k: v / denom for k, v in metric_acc.items()}
+        if self.speculator is not None:
+            self.speculator.job_done(f"step{step}")
+        return True, mb_executed, metrics
+
+    # -- bino recovery ----------------------------------------------------
+    def _snapshot(self, step, tasks, attempts, grads) -> ClusterSnapshot:
+        with self._hb_lock:
+            hb = dict(self.heartbeats)
+        nodes = {}
+        running_by_host: Dict[str, int] = {}
+        for a in attempts.values():
+            if a.state == AttemptState.RUNNING:
+                running_by_host[a.host_id] = \
+                    running_by_host.get(a.host_id, 0) + 1
+        for hid in self.hosts:
+            nodes[hid] = NodeView(
+                node_id=hid, last_heartbeat=hb.get(hid, 0.0),
+                total_containers=2,
+                free_containers=max(0, 2 - running_by_host.get(hid, 0)),
+                marked_failed=hid in self.dead_hosts)
+        tviews: Dict[str, TaskView] = {}
+        job_id = f"step{step}"
+        M = self.cfg.microbatches_per_shard
+        for tid, t in tasks.items():
+            shard = t["shard"]
+            avs = []
+            for a in t["attempts"]:
+                avs.append(AttemptView(
+                    attempt_id=a.attempt_id, task_id=tid,
+                    node_id=a.host_id, state=a.state, start_time=a.start,
+                    progress=a.mb_done / max(a.mb_total, 1),
+                    is_speculative=a.speculative,
+                    is_rollback=a.rollback))
+            have = sum(1 for (s, _m) in grads if s == shard)
+            tviews[tid] = TaskView(
+                task_id=tid, job_id=job_id, kind=TaskKind.MAP,
+                state=(TaskState.COMPLETED if have >= M
+                       else TaskState.RUNNING),
+                attempts=avs, output_available=have >= M,
+                output_nodes=("coord",))
+        return ClusterSnapshot(now=time.time(), nodes=nodes, tasks=tviews)
+
+    def _bino_tick(self, step, tasks, attempts, grads, shard_states,
+                   recoveries) -> None:
+        snap = self._snapshot(step, tasks, attempts, grads)
+        actions = self.speculator.assess(snap)
+        M = self.cfg.microbatches_per_shard
+        for act in actions:
+            if isinstance(act, MarkNodeFailed):
+                if act.node_id in self.dead_hosts:
+                    continue
+                self.dead_hosts.add(act.node_id)
+                recoveries.append(f"host {act.node_id} declared failed "
+                                  f"({act.reason})")
+                # fail its running attempts; reassignment happens via the
+                # straggler path below or immediately here
+                for a in list(attempts.values()):
+                    if a.host_id == act.node_id \
+                            and a.state == AttemptState.RUNNING:
+                        a.state = AttemptState.FAILED
+                        self._relaunch(step, tasks, attempts, grads,
+                                       shard_states, a.task_id,
+                                       reason="failure", recoveries=recoveries)
+            elif isinstance(act, SpeculateTask):
+                tid = act.task_id
+                if tid not in tasks or tasks[tid]["done"]:
+                    continue
+                running = [a for a in tasks[tid]["attempts"]
+                           if a.state == AttemptState.RUNNING]
+                if any(a.speculative for a in running) or len(running) >= 2:
+                    continue
+                self._relaunch(step, tasks, attempts, grads, shard_states,
+                               tid, reason=act.reason, recoveries=recoveries,
+                               speculative=bool(running),
+                               prefer=act.placement_hint)
+            elif isinstance(act, KillAttempt):
+                a = attempts.get(act.attempt_id)
+                if a is not None and a.state == AttemptState.RUNNING:
+                    a.state = AttemptState.KILLED
+                    self.hosts[a.host_id].cancel(a.attempt_id)
+        # Tail-straggler fallback (beyond-paper; DESIGN.md §10): once most
+        # map tasks have drained, Eq. 1 loses its comparison population (the
+        # paper's own small-job blind spot, §II.D.2) — so the coordinator
+        # adds a LATE-style estimated-remaining-time check against the
+        # completed population and shadow-executes the laggards.
+        completed = [a for a in attempts.values()
+                     if a.state == AttemptState.COMPLETED]
+        running = [t for t in tasks.values() if not t["done"]]
+        now = time.time()
+        if completed and running and \
+                len(running) <= max(1, len(tasks) // 4):
+            durations = sorted((a.end - a.start) for a in completed)
+            median = durations[len(durations) // 2]
+            for t in tasks.values():
+                if t["done"]:
+                    continue
+                live = [a for a in t["attempts"]
+                        if a.state == AttemptState.RUNNING]
+                if not live or any(a.speculative for a in live):
+                    continue
+                a = max(live, key=lambda a: a.mb_done)
+                frac = a.mb_done / max(a.mb_total, 1)
+                rate = frac / max(now - a.start, 1e-6)
+                est_remaining = (1.0 - frac) / max(rate, 1e-6)
+                if est_remaining > max(1.5 * median, 4 * self.cfg.spec_interval):
+                    tid = [k for k, v in tasks.items() if v is t][0]
+                    self._relaunch(step, tasks, attempts, grads,
+                                   shard_states, tid,
+                                   reason="tail-straggler",
+                                   recoveries=recoveries, speculative=True)
+
+    def _relaunch(self, step, tasks, attempts, grads, shard_states, tid,
+                  *, reason: str, recoveries: List[str],
+                  speculative: bool = False,
+                  prefer: Sequence[str] = ()) -> None:
+        shard = tasks[tid]["shard"]
+        M = self.cfg.microbatches_per_shard
+        # Rollback: resume past every microbatch already streamed (the
+        # consumer-side MOF survives the producer) — exactly-once keeps
+        # racing duplicates harmless anyway.
+        have = sorted(m for (s, m) in grads if s == shard)
+        resume = 0
+        for m in have:
+            if m == resume:
+                resume += 1
+            else:
+                break
+        if resume >= M:
+            return
+        exclude = {a.host_id for a in tasks[tid]["attempts"]
+                   if a.state == AttemptState.RUNNING} | self.dead_hosts
+        host = self._pick_host(tasks, exclude, prefer)
+        if host is None:
+            return
+        st = self.datastates[shard]
+        for _ in range(resume):
+            st = st.advance()
+        self._assign(tasks, attempts, tid, shard, host, resume,
+                     speculative=speculative,
+                     rollback=resume > 0, data_state=st)
+        recoveries.append(
+            f"{tid}: {reason} -> {'spec' if speculative else 'relaunch'} "
+            f"on {host} from mb {resume}")
+
+    # -- gang-restart baseline ---------------------------------------------
+    def _restart_tick(self, tasks, attempts, recoveries) -> bool:
+        now = time.time()
+        with self._hb_lock:
+            hb = dict(self.heartbeats)
+        for hid in self.live_hosts():
+            if now - hb.get(hid, 0.0) > self.cfg.restart_timeout:
+                self.dead_hosts.add(hid)
+                recoveries.append(
+                    f"host {hid} timed out ({self.cfg.restart_timeout}s) "
+                    "-> gang restart of step")
+                # abort: cancel everything, discard partials
+                for a in attempts.values():
+                    if a.state == AttemptState.RUNNING:
+                        a.state = AttemptState.KILLED
+                        if a.host_id not in self.dead_hosts:
+                            self.hosts[a.host_id].cancel(a.attempt_id)
+                self._drain()
+                return True
+        return False
+
+    def _drain(self) -> None:
+        try:
+            while True:
+                self.queue.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def rec_step(task_id: str) -> int:
+    return int(task_id.split("_")[0][1:])

@@ -1,0 +1,182 @@
+"""Host daemons: thread-simulated TPU hosts with a real control plane.
+
+Each ``HostDaemon`` executes assigned *map work* — microbatch gradient
+production for a data shard — and streams results + progress reports to
+the coordinator. Fault injection mirrors the simulator's vocabulary:
+``freeze()`` (crash: heartbeats and compute stop), ``slow(factor)``
+(straggler), ``mute(duration)`` (transient network outage: compute
+continues, heartbeats vanish).
+
+The JAX computation itself runs in-process (one CPU device stands in for
+every host's chip); what is REAL here is the control plane the paper is
+about: heartbeats, progress logs, speculative reassignment, rollback.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.data.pipeline import DataState
+
+
+@dataclasses.dataclass
+class WorkItem:
+    """One map task: produce grads for microbatches [mb_start, mb_end) of
+    ``shard`` at ``step``. ``data_state`` pins the exact batches."""
+
+    step: int
+    task_id: str
+    shard_id: int
+    mb_start: int
+    mb_end: int
+    data_state: DataState
+    attempt_id: str = ""
+    speculative: bool = False
+
+
+@dataclasses.dataclass
+class GradMessage:
+    """One microbatch's contribution, streamed eagerly (the 'MOF' lives on
+    the consumer side the moment it exists — eager shuffle)."""
+
+    step: int
+    task_id: str
+    attempt_id: str
+    shard_id: int
+    mb_index: int
+    grads: Any
+    metrics: Dict[str, float]
+    host_id: str
+
+
+@dataclasses.dataclass
+class ProgressMessage:
+    step: int
+    task_id: str
+    attempt_id: str
+    host_id: str
+    mb_done: int
+    mb_total: int
+    data_state: DataState
+    done: bool = False
+
+
+class HostDaemon(threading.Thread):
+    def __init__(self, host_id: str, *, grad_fn: Callable,
+                 batch_fn: Callable[[DataState], Dict[str, Any]],
+                 out_queue: "queue.Queue", heartbeat: Callable[[str, float], None],
+                 heartbeat_period: float = 0.05,
+                 compute_delay: float = 0.0):
+        super().__init__(daemon=True, name=f"host-{host_id}")
+        self.host_id = host_id
+        self.grad_fn = grad_fn
+        self.batch_fn = batch_fn
+        self.out = out_queue
+        self.heartbeat_cb = heartbeat
+        self.heartbeat_period = heartbeat_period
+        # artificial per-microbatch delay: makes tiny test models behave
+        # like real work so stragglers/failures have visible timelines
+        self.compute_delay = compute_delay
+        self._work: "queue.Queue[Optional[WorkItem]]" = queue.Queue()
+        self._params = None
+        self._params_lock = threading.Lock()
+        # fault state
+        self._frozen = threading.Event()
+        self._speed = 1.0
+        self._mute_until = 0.0
+        self._stop = threading.Event()
+        self._cancelled: set = set()
+
+    # -- control ---------------------------------------------------------
+    def set_params(self, params) -> None:
+        with self._params_lock:
+            self._params = params
+
+    def assign(self, item: WorkItem) -> None:
+        self._work.put(item)
+
+    def cancel(self, attempt_id: str) -> None:
+        self._cancelled.add(attempt_id)
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        self._work.put(None)
+
+    # -- fault injection ---------------------------------------------------
+    def freeze(self) -> None:
+        """Crash: no heartbeats, no compute, in-flight work lost."""
+        self._frozen.set()
+
+    def unfreeze(self) -> None:
+        self._frozen.clear()
+
+    def slow(self, factor: float) -> None:
+        """Straggler: microbatches take ``factor×`` longer."""
+        self._speed = max(factor, 1e-3)
+
+    def mute(self, duration: float) -> None:
+        """Transient outage: heartbeats vanish, compute continues."""
+        self._mute_until = time.time() + duration
+
+    @property
+    def frozen(self) -> bool:
+        return self._frozen.is_set()
+
+    # -- main loop --------------------------------------------------------
+    def _hb_loop(self) -> None:
+        """NodeManager heartbeat thread: independent of task work (a busy
+        or compiling host still heartbeats — only crash/outage silences)."""
+        while not self._stop.is_set():
+            now = time.time()
+            if not self._frozen.is_set() and now >= self._mute_until:
+                self.heartbeat_cb(self.host_id, now)
+            time.sleep(self.heartbeat_period)
+
+    def run(self) -> None:
+        threading.Thread(target=self._hb_loop, daemon=True,
+                         name=f"hb-{self.host_id}").start()
+        while not self._stop.is_set():
+            try:
+                item = self._work.get(timeout=self.heartbeat_period)
+            except queue.Empty:
+                continue
+            if item is None:
+                return
+            self._execute(item)
+
+    def _execute(self, item: WorkItem) -> None:
+        state = item.data_state
+        for mb in range(item.mb_start, item.mb_end):
+            # crash = stop mid-task, silently
+            while self._frozen.is_set():
+                if self._stop.is_set():
+                    return
+                time.sleep(0.01)
+            if item.attempt_id in self._cancelled or self._stop.is_set():
+                return
+            batch = self.batch_fn(state)
+            with self._params_lock:
+                params = self._params
+            grads, metrics = self.grad_fn(params, batch)
+            delay = self.compute_delay * self._speed
+            if delay > 0:
+                time.sleep(delay)
+            if self._frozen.is_set():
+                return  # crashed during compute: result lost with the host
+            state = state.advance()
+            self.out.put(GradMessage(
+                step=item.step, task_id=item.task_id,
+                attempt_id=item.attempt_id, shard_id=item.shard_id,
+                mb_index=mb, grads=grads,
+                metrics={k: float(v) for k, v in metrics.items()},
+                host_id=self.host_id))
+            self.out.put(ProgressMessage(
+                step=item.step, task_id=item.task_id,
+                attempt_id=item.attempt_id, host_id=self.host_id,
+                mb_done=mb + 1 - item.mb_start,
+                mb_total=item.mb_end - item.mb_start,
+                data_state=state,
+                done=(mb == item.mb_end - 1)))

@@ -1,0 +1,17 @@
+"""Deterministic discrete-event MapReduce simulator — the faithful-semantics
+substrate for reproducing the paper's experiments (Figs. 1–9). The policy
+engine under test is ``repro.core``; the simulator supplies YARN 2.7.1
+execution semantics (NM expiry, shuffle fetch-failure cycles, slowstart,
+container packing) and seeded fault injection.
+"""
+from repro.sim.cluster import Cluster, SimNode
+from repro.sim.engine import Engine
+from repro.sim.job import BENCHMARKS, BenchProfile, JobResult, JobSpec
+from repro.sim.mapreduce import BINO_PARAMS, SimParams, Simulation
+from repro.sim import faults, runner, workload
+
+__all__ = [
+    "BENCHMARKS", "BINO_PARAMS", "BenchProfile", "Cluster", "Engine",
+    "JobResult", "JobSpec", "SimNode", "SimParams", "Simulation",
+    "faults", "runner", "workload",
+]

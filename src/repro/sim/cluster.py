@@ -1,0 +1,96 @@
+"""Simulated cluster: nodes with containers, disks, NICs, heartbeats.
+
+Calibrated to the paper's testbed (§IV.A): 21 nodes (one dedicated to
+RM/NameNode → 20 workers), 1 GbE, one 500 GB disk, 24 GB RAM / 24 cores
+per node. Containers default to 8 per worker — the YARN 2.7-era
+(24 GB, 2–3 GB/container) sizing that lets an 8-map 1 GB job land entirely
+on ONE node, which is exactly the co-location behind the paper's
+scope-limited myopia (§II.D.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set
+
+# 1 GbE effective goodput and a single SATA disk.
+NIC_BW = 117e6          # bytes/s
+DISK_BW = 100e6         # bytes/s (local MOF read)
+HEARTBEAT_PERIOD = 1.0  # NodeManager → ResourceManager (s)
+
+
+@dataclasses.dataclass
+class SimNode:
+    node_id: str
+    n_containers: int = 8
+    # Execution-speed multiplier: 1 = healthy, <1 = delayed, 0 = dead.
+    speed: float = 1.0
+    alive: bool = True
+    # Containers in use (attempt ids).
+    busy: Set[str] = dataclasses.field(default_factory=set)
+    # MOFs present on the local disk: producer task_id → bytes.
+    mofs: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # Spill logs for speculative rollback: task_id → offset fraction.
+    spill_logs: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # Active network flows touching this node (for bandwidth sharing).
+    active_flows: int = 0
+    last_heartbeat: float = 0.0
+    # Transient network outage: heartbeats suppressed until this time
+    # (node keeps computing — the Fig. 7(b) delay-vs-crash confusion).
+    hb_suppressed_until: float = 0.0
+
+    def heartbeat_suppressed(self, now: float) -> bool:
+        return now < self.hb_suppressed_until
+
+    @property
+    def free_containers(self) -> int:
+        if not self.alive:
+            return 0
+        return self.n_containers - len(self.busy)
+
+    def fail(self) -> None:
+        """Node crash: heartbeats stop, local MOFs and spill logs are gone."""
+        self.alive = False
+        self.speed = 0.0
+        self.mofs.clear()
+        self.spill_logs.clear()
+
+    def restore(self) -> None:
+        self.alive = True
+        self.speed = 1.0
+        self.busy.clear()
+        self.active_flows = 0
+
+
+class Cluster:
+    def __init__(self, n_workers: int = 20, n_containers: int = 8):
+        self.nodes: Dict[str, SimNode] = {
+            f"n{i:02d}": SimNode(f"n{i:02d}", n_containers)
+            for i in range(n_workers)
+        }
+        self.node_ids: List[str] = list(self.nodes)
+
+    def fetch_throughput(self, src: str, dst: str) -> float:
+        """Quasi-static per-flow rate for a shuffle fetch, decided at flow
+        start: local reads hit the disk, remote fetches share each NIC
+        across that node's active flows."""
+        if src == dst:
+            return DISK_BW / max(1, self.nodes[src].active_flows + 1)
+        s = NIC_BW / max(1, self.nodes[src].active_flows + 1)
+        d = NIC_BW / max(1, self.nodes[dst].active_flows + 1)
+        return min(s, d)
+
+    def pick_container(self, preference: List[str],
+                       exclude: Optional[Set[str]] = None) -> Optional[str]:
+        """First node with a free container: preference order first, then
+        pack-first over the cluster (deterministic; co-locates small jobs)."""
+        exclude = exclude or set()
+        for nid in preference:
+            n = self.nodes.get(nid)
+            if n is not None and n.alive and nid not in exclude \
+                    and n.free_containers > 0:
+                return nid
+        for nid in self.node_ids:
+            n = self.nodes[nid]
+            if n.alive and nid not in exclude and n.free_containers > 0:
+                return nid
+        return None

@@ -1,0 +1,143 @@
+"""Fault injectors (§IV.A: "To emulate temporary system faults, we
+introduce delays in the progress of MapReduce tasks. To emulate node
+failures, we disconnect the targeted compute nodes.").
+
+All injectors are deterministic given the simulation's seed; triggers can
+fire at absolute times or at job map-progress fractions (Fig. 4a injects a
+node failure at 10 %..100 % of map progress).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.types import TaskState
+from repro.sim.mapreduce import SimJob, Simulation
+
+
+def crash_node_at(sim: Simulation, node_id: str, at: float,
+                  restore_after: Optional[float] = None) -> None:
+    sim.engine.at(at, sim.crash_node, node_id)
+    if restore_after is not None:
+        sim.engine.at(at + restore_after, sim.restore_node, node_id)
+
+
+def slow_node_at(sim: Simulation, node_id: str, at: float, factor: float,
+                 duration: Optional[float] = None) -> None:
+    sim.engine.at(at, sim.set_node_speed, node_id, factor)
+    if duration is not None:
+        sim.engine.at(at + duration, sim.set_node_speed, node_id, 1.0)
+
+
+def heartbeat_outage_at(sim: Simulation, node_id: str, at: float,
+                        duration: float) -> None:
+    """Transient network delay: the node keeps computing but its heartbeats
+    vanish for ``duration`` — indistinguishable from a crash until it
+    resumes (the Fig. 7(b) confusion matrix)."""
+    def start():
+        sim.cluster.nodes[node_id].hb_suppressed_until = \
+            sim.engine.now + duration
+    sim.engine.at(at, start)
+
+
+def crash_busiest_node_at_map_progress(sim: Simulation, job: SimJob,
+                                       frac: float,
+                                       restore_after: Optional[float] = None
+                                       ) -> None:
+    """Fig. 1/4a scenario: when ``job`` reaches ``frac`` of map completions,
+    disconnect the node hosting the most of its map work (attempts first,
+    then MOFs) — the co-located small-job killer."""
+    def fire():
+        counts = {}
+        for t in job.maps:
+            for a in t.running_attempts():
+                counts[a.node_id] = counts.get(a.node_id, 0) + 1
+            for n in t.output_nodes:
+                counts[n] = counts.get(n, 0) + 1
+        if not counts:  # map phase fully drained; hit a MOF holder
+            for t in job.maps:
+                for n in t.output_nodes:
+                    counts[n] = counts.get(n, 0) + 1
+        if not counts:
+            return
+        victim = max(sorted(counts), key=lambda n: counts[n])
+        sim.crash_node(victim)
+        if restore_after is not None:
+            sim.engine.after(restore_after, sim.restore_node, victim)
+    if frac <= 0.0:
+        # fire as soon as the job has placed its attempts
+        sim.engine.at(job.spec.submit_time + 1.0, fire)
+    else:
+        job.map_progress_triggers.append((frac, fire))
+
+
+def lose_mof_at_map_progress(sim: Simulation, job: SimJob, frac: float,
+                             max_stragglers: int = 2) -> None:
+    """Fig. 4b scenario: silently delete one completed map's MOF (node stays
+    healthy) — pure dependency-oblivious territory.
+
+    The paper post-selects runs "when there is at least one fetch failure of
+    MOF but no map task failure": qualifying losses are ones some reducer
+    still needs. We pre-select deterministically: the victim is a completed
+    map whose partition ≥1 but ≤``max_stragglers`` running reducers have not
+    fetched yet — few reporters means the AM's 3-report fuse burns through
+    multiple full fetch cycles, the Hadoop stall behind the 4× slowdown.
+    If no qualifying map exists yet, the injector re-arms shortly after.
+    """
+    def fire():
+        # Wait until the shuffle is mostly drained, then hit the map with
+        # the fewest (≥1) still-waiting reducers.
+        need = done = 0
+        for r in job.reduces:
+            for a in r.running_attempts():
+                need += len(a.task.deps)
+                done += len(a.fetched)
+        unfinished = any(r.state != TaskState.COMPLETED
+                         for r in job.reduces)
+        if need == 0 or done / need < 0.75:
+            if unfinished:
+                sim.engine.after(1.0, fire)
+            return
+        best = None
+        for t in job.maps:
+            if t.state != TaskState.COMPLETED or not t.output_nodes:
+                continue
+            waiting = 0
+            for r in job.reduces:
+                for a in r.running_attempts():
+                    # only original consumers count: a speculative copy
+                    # that dies with its sibling can't produce the paper's
+                    # qualifying fetch-failure condition
+                    if not a.is_speculative and t.task_id not in a.fetched:
+                        waiting += 1
+            if waiting >= 1 and (best is None or waiting < best[0]):
+                best = (waiting, t)
+        if best is None:
+            if unfinished:
+                sim.engine.after(1.0, fire)
+            return
+        sim.lose_mof(best[1])
+    job.map_progress_triggers.append((frac, fire))
+
+
+def disk_exception_on_map(sim: Simulation, job: SimJob, map_index: int,
+                          at_spill: int) -> None:
+    """Fig. 9 scenario: the map's attempt dies with a disk write exception
+    right after producing ``at_spill`` spills (progress log survives)."""
+    n = job.spec.n_spills
+    # fail just past the at_spill-th spill boundary
+    frac = min((at_spill + 0.02) / n, 0.999)
+
+    def arm():
+        if map_index >= len(job.maps):
+            return
+        t = job.maps[map_index]
+        t.inject_disk_exception_at = frac
+        # The first attempt may already be running (dispatch happens in the
+        # submit event): inject directly and recompute its milestones.
+        for a in t.running_attempts():
+            if a.disk_exception_at is None:
+                a.disk_exception_at = frac
+                t.inject_disk_exception_at = None
+                sim._schedule_map_milestone(a)
+            break
+    sim.engine.at(job.spec.submit_time, arm)

@@ -1,0 +1,924 @@
+"""YARN MapReduce execution semantics over the discrete-event engine.
+
+Faithfully models the YARN 2.7.1 behaviours that drive the paper's effects:
+
+- NodeManager liveness: RM expires a silent node after ``nm_expiry``
+  (default 600 s) — the long fuse behind Fig. 1's small-job slowdowns;
+- on node expiry the AM re-runs completed MAP tasks whose MOFs lived only
+  there (standard YARN), and reschedules running attempts;
+- shuffle fetch failures: a reducer fetching a lost MOF burns a
+  ``fetch_cycle`` (Hadoop's 180 s connect/read timeout), reports to the AM,
+  and retries; the AM re-runs the producer map after
+  ``am_fetch_threshold`` (3) reports — the dependency-oblivious stall;
+- reduce slowstart at 5 % map completion; parallel fetchers per reducer;
+- speculative attempts ride the pluggable policy (``repro.core``):
+  YarnLateSpeculator reproduces the baseline, BinocularSpeculator the paper.
+
+The policy sees the cluster only through ``ClusterSnapshot`` ticks and acts
+only through SpeculateTask/KillAttempt/MarkNodeFailed — the same interface
+the live training runtime drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.rollback import ProgressLog
+from repro.core.speculator import BinocularSpeculator, Speculator
+from repro.core.types import (
+    AttemptState,
+    AttemptView,
+    ClusterSnapshot,
+    FetchFailure,
+    KillAttempt,
+    MarkNodeFailed,
+    NodeView,
+    SpeculateTask,
+    TaskKind,
+    TaskState,
+    TaskView,
+)
+from repro.sim.cluster import Cluster, HEARTBEAT_PERIOD
+from repro.sim.engine import Engine, EventHandle
+from repro.sim.job import JobResult, JobSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    """YARN-calibrated timing constants (overridden per policy)."""
+
+    nm_expiry: float = 600.0          # RM NodeManager liveness expiry
+    expiry_check: float = 10.0
+    heartbeat: float = HEARTBEAT_PERIOD
+    spec_interval: float = 1.0        # speculator tick
+    slowstart: float = 0.05           # reduce slowstart (fraction of maps)
+    am_startup: float = 12.0          # AM negotiation before first launch
+    task_overhead: float = 3.0        # container + JVM spin-up per attempt
+    fetch_cycle: float = 180.0        # one failed-fetch timeout+report cycle
+    am_fetch_threshold: int = 3       # AM re-runs map after N reports...
+    # ...but only once ≥ this fraction of the job's RUNNING reduce tasks
+    # have reported (Hadoop's too-many-fetch-failures quorum). With few
+    # stragglers the quorum shrinks to the running set — the slow fuse.
+    am_fetch_quorum: float = 0.5
+    # A reduce attempt aborts itself after this many failed fetch cycles
+    # (Shuffle EXCEEDED_MAX_FAILURES) — its re-attempt re-shuffles from
+    # scratch and "cannot help but wait and encounter several fetch
+    # failures again" (§II.D.1).
+    reduce_abort_cycles: int = 2
+    parallel_fetches: int = 5         # fetchers per reduce attempt
+    work_noise: float = 0.08          # lognormal σ on per-attempt work
+    max_running_attempts: int = 2     # original + 1 speculative copy
+    sim_time_cap: float = 36_000.0
+
+
+# Binocular speculation pairs its dependency-aware re-execution with
+# aggressive shuffle timeouts ("short timeouts", §IV.B.1): a false positive
+# only costs one map re-run, whereas YARN's 180 s default guards its
+# whole-job churn. The AM threshold stays at YARN's 3; Bino's dependency
+# tracker fires first at 2 consecutive failures.
+BINO_PARAMS = SimParams(fetch_cycle=60.0)
+
+
+_SHUFFLE_FRAC = 1.0 / 3.0  # reduce progress: 1/3 shuffle, 2/3 sort+reduce
+
+
+class SimAttempt:
+    _ids = itertools.count()
+
+    def __init__(self, sim: "Simulation", task: "SimTask", node_id: str,
+                 *, speculative: bool, rollback: bool, start_offset: float):
+        self.sim = sim
+        self.task = task
+        self.attempt_id = f"{task.task_id}_a{next(SimAttempt._ids)}"
+        self.node_id = node_id
+        self.state = AttemptState.RUNNING
+        self.start_time = sim.engine.now
+        self.is_speculative = speculative
+        self.is_rollback = rollback
+        noise = float(np.exp(sim.rng.normal(0.0, sim.params.work_noise)))
+        self.work_total = task.work_seconds * noise + sim.params.task_overhead
+        self.work_done = start_offset * self.work_total
+        self.last_sync = sim.engine.now
+        self._milestone: Optional[EventHandle] = None
+        # Map-only: progress point where an injected disk exception fires.
+        self.disk_exception_at: Optional[float] = None
+        # Reduce-only shuffle state.
+        self.fetched: Set[str] = set()
+        self.inflight: Dict[str, EventHandle] = {}
+        self.fail_cycles: Dict[str, EventHandle] = {}
+        self.fetch_srcs: Dict[str, str] = {}
+        self.compute_started = False
+        self.failed_cycles = 0  # shuffle failure cycles burned (reduce)
+        self.end_time: Optional[float] = None  # completion/failure/kill
+
+    # ------------------------------------------------------------------
+    @property
+    def node(self):
+        return self.sim.cluster.nodes[self.node_id]
+
+    def sync(self) -> None:
+        if self.state != AttemptState.RUNNING:
+            return  # progress (and last_sync) frozen at end state
+        now = self.sim.engine.now
+        if self.task.kind == TaskKind.MAP or self.compute_started:
+            self.work_done += (now - self.last_sync) * self.node.speed
+            self.work_done = min(self.work_done, self.work_total)
+        self.last_sync = now
+
+    def progress(self) -> float:
+        self.sync()
+        if self.task.kind == TaskKind.MAP:
+            return self.work_done / self.work_total
+        n_deps = max(1, len(self.task.deps))
+        shuffle = len(self.fetched) / n_deps
+        compute = self.work_done / self.work_total
+        return _SHUFFLE_FRAC * shuffle + (1 - _SHUFFLE_FRAC) * compute
+
+    def view(self) -> AttemptView:
+        return AttemptView(
+            attempt_id=self.attempt_id, task_id=self.task.task_id,
+            node_id=self.node_id, state=self.state,
+            start_time=self.start_time, progress=self.progress(),
+            is_speculative=self.is_speculative,
+            is_rollback=self.is_rollback)
+
+
+class SimTask:
+    def __init__(self, sim: "Simulation", job: "SimJob", kind: TaskKind,
+                 index: int, work_seconds: float,
+                 deps: Tuple[str, ...] = ()):
+        self.sim = sim
+        self.job = job
+        self.kind = kind
+        self.index = index
+        self.task_id = f"{job.spec.job_id}_{kind.value}{index:04d}"
+        self.work_seconds = work_seconds
+        self.deps = deps
+        self.state = TaskState.PENDING
+        self.attempts: List[SimAttempt] = []
+        self.output_nodes: List[str] = []
+        self.output_available = False
+        self.first_start: Optional[float] = None
+        self.completed_at: Optional[float] = None
+        # AM-side fetch-failure reports against this producer.
+        self.fetch_reports = 0
+        # One-shot injected disk exception: (progress_fraction,) or None.
+        self.inject_disk_exception_at: Optional[float] = None
+
+    def running_attempts(self) -> List[SimAttempt]:
+        return [a for a in self.attempts if a.state == AttemptState.RUNNING]
+
+    def view(self) -> TaskView:
+        return TaskView(
+            task_id=self.task_id, job_id=self.job.spec.job_id,
+            kind=self.kind, state=self.state,
+            attempts=[a.view() for a in self.attempts],
+            deps=self.deps, output_nodes=tuple(self.output_nodes),
+            output_available=self.output_available)
+
+
+class SimJob:
+    def __init__(self, sim: "Simulation", spec: JobSpec):
+        self.sim = sim
+        self.spec = spec
+        self.maps: List[SimTask] = []
+        self.reduces: List[SimTask] = []
+        self.reduces_scheduled = False
+        self.done = False
+        self.result: Optional[JobResult] = None
+        self.n_spec_attempts = 0
+        self.n_attempts = 0
+        self.n_fetch_failures = 0
+        # Map-progress triggers for fault injection (fraction → callbacks).
+        self.map_progress_triggers: List[Tuple[float, Callable]] = []
+
+    @property
+    def tasks(self) -> List[SimTask]:
+        return self.maps + self.reduces
+
+    def maps_completed(self) -> int:
+        return sum(1 for t in self.maps if t.state == TaskState.COMPLETED)
+
+    def map_phase_progress(self) -> float:
+        if not self.maps:
+            return 1.0
+        total = 0.0
+        for t in self.maps:
+            if t.state == TaskState.COMPLETED:
+                total += 1.0
+            elif t.running_attempts():
+                total += max(a.progress() for a in t.running_attempts())
+        return total / len(self.maps)
+
+
+@dataclasses.dataclass
+class LaunchRequest:
+    task: SimTask
+    placement: Tuple[str, ...] = ()
+    speculative: bool = False
+    rollback: bool = False
+    rollback_node: Optional[str] = None
+    reason: str = ""
+
+
+class Simulation:
+    """One cluster + one speculation policy + any number of jobs."""
+
+    def __init__(self, *, policy: str = "yarn",
+                 policy_factory: Optional[Callable[[Sequence[str]], Speculator]] = None,
+                 n_workers: int = 20, n_containers: int = 8,
+                 params: Optional[SimParams] = None, seed: int = 0):
+        self.engine = Engine()
+        self.cluster = Cluster(n_workers, n_containers)
+        self.rng = np.random.default_rng(seed)
+        self.policy_name = policy
+        if params is None:
+            params = BINO_PARAMS if policy == "bino" else SimParams()
+        self.params = params
+        if policy_factory is not None:
+            self.speculator = policy_factory(self.cluster.node_ids)
+        elif policy == "bino":
+            self.speculator = BinocularSpeculator(self.cluster.node_ids)
+        else:
+            from repro.core.speculator import YarnLateSpeculator
+            self.speculator = YarnLateSpeculator()
+        self.jobs: Dict[str, SimJob] = {}
+        self.active_jobs: Dict[str, SimJob] = {}
+        self.pending: List[LaunchRequest] = []
+        self.attempts: Dict[str, SimAttempt] = {}
+        self._fetch_failures: List[FetchFailure] = []
+        self._marked_failed: Set[str] = set()
+        self.results: List[JobResult] = []
+        # ground truth for the Fig. 7(b) accuracy metric
+        self.truth_crashed: Set[str] = set()
+        self.policy_failed_calls: List[Tuple[float, str]] = []
+        self._started = False
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+    def _start_background(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        for nid in self.cluster.node_ids:
+            self.cluster.nodes[nid].last_heartbeat = self.engine.now
+        self.engine.after(self.params.heartbeat, self._heartbeat_tick)
+        self.engine.after(self.params.spec_interval, self._speculator_tick)
+        self.engine.after(self.params.expiry_check, self._expiry_tick)
+
+    def submit(self, spec: JobSpec) -> SimJob:
+        job = SimJob(self, spec)
+        self.jobs[spec.job_id] = job
+        self.engine.at(spec.submit_time, self._launch_job, job)
+        return job
+
+    def _launch_job(self, job: SimJob) -> None:
+        self._start_background()
+        self.active_jobs[job.spec.job_id] = job
+        for i in range(job.spec.n_maps):
+            t = SimTask(self, job, TaskKind.MAP, i,
+                        job.spec.map_work_seconds())
+            job.maps.append(t)
+        map_ids = tuple(t.task_id for t in job.maps)
+        for i in range(job.spec.reduces):
+            t = SimTask(self, job, TaskKind.REDUCE, i,
+                        job.spec.reduce_work_seconds(), deps=map_ids)
+            job.reduces.append(t)
+        def go():
+            for t in job.maps:
+                self._enqueue(LaunchRequest(t))
+            self._dispatch()
+        # AM container negotiation + startup before the first task launches
+        self.engine.after(self.params.am_startup, go)
+
+    def run(self) -> List[JobResult]:
+        self.engine.run(until=self.params.sim_time_cap,
+                        stop=lambda: not self.active_jobs and
+                        len(self.results) == len(self.jobs))
+        return self.results
+
+    # ------------------------------------------------------------------
+    # Scheduling
+    # ------------------------------------------------------------------
+    def _enqueue(self, req: LaunchRequest) -> None:
+        if req.task.state == TaskState.COMPLETED and not req.speculative:
+            # re-execution of a completed producer
+            req.task.state = TaskState.RUNNING
+            req.task.output_available = bool(req.task.output_nodes)
+        self.pending.append(req)
+
+    def _dispatch(self) -> None:
+        still: List[LaunchRequest] = []
+        for req in self.pending:
+            task = req.task
+            if task.job.done or task.state == TaskState.COMPLETED:
+                continue
+            if len(task.running_attempts()) >= self.params.max_running_attempts:
+                continue
+            exclude = {a.node_id for a in task.running_attempts()}
+            exclude |= self._marked_failed
+            node_id = self.cluster.pick_container(list(req.placement),
+                                                  exclude=exclude)
+            if node_id is None:
+                still.append(req)
+                continue
+            self._start_attempt(req, node_id)
+        self.pending = still
+
+    def _start_attempt(self, req: LaunchRequest, node_id: str) -> None:
+        task = req.task
+        offset = 0.0
+        rollback = False
+        if req.rollback and req.rollback_node == node_id:
+            node = self.cluster.nodes[node_id]
+            offset = node.spill_logs.get(task.task_id, 0.0)
+            rollback = offset > 0.0
+        a = SimAttempt(self, task, node_id, speculative=req.speculative,
+                       rollback=rollback, start_offset=offset)
+        if task.kind == TaskKind.MAP and task.inject_disk_exception_at is not None:
+            a.disk_exception_at = task.inject_disk_exception_at
+            task.inject_disk_exception_at = None  # one-shot
+        task.attempts.append(a)
+        self.attempts[a.attempt_id] = a
+        if task.state == TaskState.PENDING:
+            task.state = TaskState.RUNNING
+        if task.first_start is None:
+            task.first_start = self.engine.now
+        task.job.n_attempts += 1
+        if req.speculative:
+            task.job.n_spec_attempts += 1
+        self.cluster.nodes[node_id].busy.add(a.attempt_id)
+        if task.kind == TaskKind.MAP:
+            self._schedule_map_milestone(a)
+        else:
+            self._try_start_fetches(a)
+
+    # ------------------------------------------------------------------
+    # Map execution: spill milestones, disk exceptions, completion
+    # ------------------------------------------------------------------
+    def _map_milestones(self, a: SimAttempt) -> List[Tuple[float, str]]:
+        n = a.task.job.spec.n_spills
+        pts = [(k / n, "spill") for k in range(1, n)]
+        if a.disk_exception_at is not None:
+            pts.append((a.disk_exception_at, "disk_exception"))
+        pts.append((1.0, "complete"))
+        return sorted(pts)
+
+    def _schedule_map_milestone(self, a: SimAttempt) -> None:
+        if a._milestone is not None:
+            a._milestone.cancel()
+            a._milestone = None
+        if a.state != AttemptState.RUNNING:
+            return
+        a.sync()
+        speed = a.node.speed
+        if speed <= 0.0:
+            return  # frozen; node death/expiry will clean up
+        frac_done = a.work_done / a.work_total
+        for frac, kind in self._map_milestones(a):
+            if frac > frac_done + 1e-12:
+                dt = (frac * a.work_total - a.work_done) / speed
+                a._milestone = self.engine.after(
+                    dt, self._map_milestone_fired, a, frac, kind)
+                return
+        # everything already passed (e.g. rollback at 100%): complete now
+        a._milestone = self.engine.after(0.0, self._map_milestone_fired,
+                                         a, 1.0, "complete")
+
+    def _map_milestone_fired(self, a: SimAttempt, frac: float, kind: str) -> None:
+        if a.state != AttemptState.RUNNING:
+            return
+        a.sync()
+        if a.work_done + 1e-9 < frac * a.work_total:
+            # node slowed down since this event was scheduled; recompute
+            self._schedule_map_milestone(a)
+            return
+        a.work_done = max(a.work_done, frac * a.work_total)
+        if kind == "spill":
+            a.node.spill_logs[a.task.task_id] = max(
+                a.node.spill_logs.get(a.task.task_id, 0.0), frac)
+            if isinstance(self.speculator, BinocularSpeculator):
+                self.speculator.record_progress_log(ProgressLog(
+                    task_id=a.task.task_id, node_id=a.node_id, offset=frac))
+            self._schedule_map_milestone(a)
+        elif kind == "disk_exception":
+            self._attempt_failed(a, reason="disk_exception")
+        else:
+            self._map_completed(a)
+
+    def _map_completed(self, a: SimAttempt) -> None:
+        task = a.task
+        a.state = AttemptState.COMPLETED
+        a.end_time = self.engine.now
+        a.node.busy.discard(a.attempt_id)
+        a.node.mofs[task.task_id] = task.job.spec.mof_bytes()
+        if a.node_id not in task.output_nodes:
+            task.output_nodes.append(a.node_id)
+        first_completion = task.state != TaskState.COMPLETED
+        task.state = TaskState.COMPLETED
+        task.output_available = True
+        task.fetch_reports = 0
+        if task.completed_at is None:
+            task.completed_at = self.engine.now
+        self._kill_siblings(task, keep=a.attempt_id)
+        # notify reducers (fresh MOF ⇒ waiting fetchers go again)
+        for r in task.job.reduces:
+            for ra in r.running_attempts():
+                self._on_producer_available(ra, task.task_id)
+                self._try_start_fetches(ra)
+        if first_completion:
+            self._maybe_schedule_reduces(task.job)
+            self._check_map_progress_triggers(task.job)
+        self._dispatch()
+
+    # ------------------------------------------------------------------
+    # Reduce execution: shuffle fetches, failure cycles, compute
+    # ------------------------------------------------------------------
+    def _maybe_schedule_reduces(self, job: SimJob) -> None:
+        if job.reduces_scheduled or not job.reduces:
+            return
+        frac = job.maps_completed() / max(1, len(job.maps))
+        if frac + 1e-12 >= self.params.slowstart:
+            job.reduces_scheduled = True
+            for t in job.reduces:
+                self._enqueue(LaunchRequest(t))
+            self._dispatch()
+
+    def _fetch_candidates(self, a: SimAttempt) -> List[str]:
+        return [m for m in a.task.deps
+                if m not in a.fetched and m not in a.inflight
+                and m not in a.fail_cycles]
+
+    def _try_start_fetches(self, a: SimAttempt) -> None:
+        if a.state != AttemptState.RUNNING or a.compute_started:
+            return
+        budget = self.params.parallel_fetches - len(a.inflight) \
+            - len(a.fail_cycles)
+        if budget <= 0:
+            return
+        for m in self._fetch_candidates(a):
+            if budget <= 0:
+                break
+            prod = self._task(m)
+            if prod is None or prod.state != TaskState.COMPLETED:
+                continue  # not produced yet; map completion will notify
+            src = self._mof_source(prod)
+            if src is None:
+                # MOF is supposed to exist but no live copy: failure cycle.
+                a.fail_cycles[m] = self.engine.after(
+                    self.params.fetch_cycle, self._fetch_failed, a, m)
+                budget -= 1
+                continue
+            size = prod.job.spec.partition_bytes()
+            rate = self.cluster.fetch_throughput(src, a.node_id)
+            self.cluster.nodes[src].active_flows += 1
+            self.cluster.nodes[a.node_id].active_flows += 1
+            a.fetch_srcs[m] = src
+            a.inflight[m] = self.engine.after(
+                max(size / rate, 1e-3), self._fetch_done, a, m, src)
+            budget -= 1
+
+    def _mof_source(self, prod: SimTask) -> Optional[str]:
+        for nid in prod.output_nodes:
+            node = self.cluster.nodes[nid]
+            if node.alive and prod.task_id in node.mofs \
+                    and nid not in self._marked_failed:
+                return nid
+        return None
+
+    def _fetch_done(self, a: SimAttempt, m: str, src: str) -> None:
+        self._end_flow(a, m, src)
+        if a.state != AttemptState.RUNNING:
+            return
+        a.fetched.add(m)
+        if isinstance(self.speculator, BinocularSpeculator):
+            self.speculator.note_fetch_ok(m)
+        if len(a.fetched) == len(a.task.deps):
+            self._start_compute(a)
+        else:
+            self._try_start_fetches(a)
+
+    def _fetch_failed(self, a: SimAttempt, m: str) -> None:
+        a.fail_cycles.pop(m, None)
+        if a.state != AttemptState.RUNNING:
+            return
+        a.task.job.n_fetch_failures += 1
+        a.failed_cycles += 1
+        prod = self._task(m)
+        self._fetch_failures.append(FetchFailure(
+            time=self.engine.now, consumer_task_id=a.task.task_id,
+            producer_task_id=m))
+        if prod is not None:
+            prod.fetch_reports += 1
+            running_reduces = sum(
+                1 for t in a.task.job.reduces
+                if t.state == TaskState.RUNNING)
+            quorum = max(self.params.am_fetch_threshold,
+                         int(self.params.am_fetch_quorum * running_reduces))
+            if prod.fetch_reports >= quorum and not prod.running_attempts():
+                # AM finally gives up on the MOF and re-runs the map.
+                prod.fetch_reports = 0
+                self._enqueue(LaunchRequest(prod, reason="am-fetch-failures"))
+                self._dispatch()
+        # Shuffle self-abort: the reduce attempt declares itself failed and
+        # a fresh attempt re-shuffles — into the same missing MOF.
+        if a.failed_cycles >= self.params.reduce_abort_cycles:
+            self._attempt_failed(a, reason="shuffle-exceeded-failures")
+            return
+        # retry (or go back to waiting if the producer restarted)
+        self._try_start_fetches(a)
+
+    def _on_producer_available(self, a: SimAttempt, m: str) -> None:
+        """Fresh MOF: cancel a pending failure cycle so the retry is
+        immediate rather than waiting out the timeout."""
+        h = a.fail_cycles.pop(m, None)
+        if h is not None:
+            h.cancel()
+
+    def _start_compute(self, a: SimAttempt) -> None:
+        a.compute_started = True
+        a.last_sync = self.engine.now
+        self._schedule_reduce_completion(a)
+
+    def _schedule_reduce_completion(self, a: SimAttempt) -> None:
+        if a._milestone is not None:
+            a._milestone.cancel()
+            a._milestone = None
+        if a.state != AttemptState.RUNNING or not a.compute_started:
+            return
+        a.sync()
+        speed = a.node.speed
+        if speed <= 0.0:
+            return
+        dt = (a.work_total - a.work_done) / speed
+        a._milestone = self.engine.after(dt, self._reduce_completed, a)
+
+    def _reduce_completed(self, a: SimAttempt) -> None:
+        if a.state != AttemptState.RUNNING:
+            return
+        a.sync()
+        if a.work_done < a.work_total - 1e-9:
+            self._schedule_reduce_completion(a)
+            return
+        task = a.task
+        a.state = AttemptState.COMPLETED
+        a.end_time = self.engine.now
+        a.node.busy.discard(a.attempt_id)
+        task.state = TaskState.COMPLETED
+        if task.completed_at is None:
+            task.completed_at = self.engine.now
+        self._kill_siblings(task, keep=a.attempt_id)
+        self._check_job_done(task.job)
+        self._dispatch()
+
+    # ------------------------------------------------------------------
+    # Failure/kill handling
+    # ------------------------------------------------------------------
+    def _attempt_failed(self, a: SimAttempt, reason: str) -> None:
+        if a.state != AttemptState.RUNNING:
+            return
+        a.state = AttemptState.FAILED
+        a.end_time = self.engine.now
+        self._teardown_attempt(a)
+        task = a.task
+        if task.state == TaskState.COMPLETED or task.job.done:
+            return
+        if not task.running_attempts():
+            # AM failover: policy decides the recovery shape (rollback
+            # race for Bino, plain re-attempt for YARN).
+            for req in self._recovery_requests(task, a, reason):
+                self._enqueue(req)
+            self._dispatch()
+
+    def _recovery_requests(self, task: SimTask, failed: SimAttempt,
+                           reason: str) -> List[LaunchRequest]:
+        node = self.cluster.nodes[failed.node_id]
+        use_rollback = (
+            isinstance(self.speculator, BinocularSpeculator)
+            and self.speculator.cfg.rollback_enabled
+            and task.kind == TaskKind.MAP
+            and node.alive
+            and failed.node_id not in self._marked_failed
+            and node.spill_logs.get(task.task_id, 0.0) > 0.0)
+        if use_rollback:
+            return [
+                LaunchRequest(task, placement=(failed.node_id,),
+                              rollback=True, rollback_node=failed.node_id,
+                              reason=reason + "+rollback"),
+                LaunchRequest(task, reason=reason),
+            ]
+        return [LaunchRequest(task, reason=reason)]
+
+    def _kill_attempt(self, a: SimAttempt, reason: str = "") -> None:
+        if a.state != AttemptState.RUNNING:
+            return
+        a.state = AttemptState.KILLED
+        a.end_time = self.engine.now
+        self._teardown_attempt(a)
+
+    def _kill_siblings(self, task: SimTask, keep: str) -> None:
+        for a in task.attempts:
+            if a.attempt_id != keep:
+                self._kill_attempt(a, "sibling completed")
+
+    def _teardown_attempt(self, a: SimAttempt) -> None:
+        a.node.busy.discard(a.attempt_id)
+        if a._milestone is not None:
+            a._milestone.cancel()
+            a._milestone = None
+        for m, h in list(a.inflight.items()):
+            h.cancel()
+            self._end_flow(a, m, a.fetch_srcs.get(m))
+        for h in a.fail_cycles.values():
+            h.cancel()
+        a.inflight.clear()
+        a.fail_cycles.clear()
+
+    def _end_flow(self, a: SimAttempt, m: str, src: Optional[str]) -> None:
+        if a.inflight.pop(m, None) is not None and src is not None:
+            self.cluster.nodes[src].active_flows = max(
+                0, self.cluster.nodes[src].active_flows - 1)
+            self.cluster.nodes[a.node_id].active_flows = max(
+                0, self.cluster.nodes[a.node_id].active_flows - 1)
+        a.fetch_srcs.pop(m, None)
+
+    # ------------------------------------------------------------------
+    # Node lifecycle (RM view)
+    # ------------------------------------------------------------------
+    def node_lost(self, node_id: str, *, by_policy: bool = False) -> None:
+        """RM declares a node dead (NM expiry or MarkNodeFailed action)."""
+        if node_id in self._marked_failed:
+            return
+        self._marked_failed.add(node_id)
+        if by_policy:
+            self.policy_failed_calls.append((self.engine.now, node_id))
+        node = self.cluster.nodes[node_id]
+        # Running attempts there are gone.
+        for a in list(self.attempts.values()):
+            if a.node_id == node_id and a.state == AttemptState.RUNNING:
+                self._attempt_failed(a, reason="node-lost")
+            # In-flight fetches FROM the dead node fail over to a cycle.
+            if a.state == AttemptState.RUNNING:
+                for m, src in list(a.fetch_srcs.items()):
+                    if src == node_id:
+                        h = a.inflight.get(m)
+                        if h is not None:
+                            h.cancel()
+                        self._end_flow(a, m, src)
+                        self._try_start_fetches(a)
+        # Completed maps whose only MOF copies lived there must re-run
+        # (standard YARN on node expiry) — unless every reducer already
+        # fetched that partition.
+        for job in self.active_jobs.values():
+            for t in job.maps:
+                if t.state != TaskState.COMPLETED:
+                    continue
+                t.output_nodes = [n for n in t.output_nodes if n != node_id]
+                if not t.output_nodes:
+                    t.output_available = False
+                    if self._someone_still_needs(t) and \
+                            not t.running_attempts():
+                        self._enqueue(LaunchRequest(
+                            t, reason="node-lost-mof"))
+        node.mofs.clear()
+        node.spill_logs.clear()
+        if isinstance(self.speculator, BinocularSpeculator):
+            self.speculator.rollback.drop_node(node_id)
+        self._dispatch()
+
+    def lose_mof(self, prod: SimTask) -> None:
+        """Silently delete every copy of a completed map's MOF (disk-level
+        loss; the node stays healthy). In-flight transfers of that
+        partition abort; task bookkeeping still believes the output exists
+        — only subsequent fetches discover the loss."""
+        for nid in list(prod.output_nodes):
+            self.cluster.nodes[nid].mofs.pop(prod.task_id, None)
+        for a in list(self.attempts.values()):
+            if a.state != AttemptState.RUNNING or prod.task_id not in a.inflight:
+                continue
+            h = a.inflight.get(prod.task_id)
+            if h is not None:
+                h.cancel()
+            self._end_flow(a, prod.task_id, a.fetch_srcs.get(prod.task_id))
+            self._try_start_fetches(a)  # rediscovers via a failure cycle
+
+    def _someone_still_needs(self, prod: SimTask) -> bool:
+        for r in prod.job.reduces:
+            if r.state == TaskState.COMPLETED:
+                continue
+            for a in r.running_attempts():
+                if prod.task_id not in a.fetched:
+                    return True
+            if not r.running_attempts():
+                return True  # a future attempt will need everything
+        return False
+
+    def set_node_speed(self, node_id: str, speed: float) -> None:
+        """Sync every hosted attempt at the OLD speed, flip, reschedule."""
+        node = self.cluster.nodes[node_id]
+        hosted = [a for a in self.attempts.values()
+                  if a.node_id == node_id and a.state == AttemptState.RUNNING]
+        for a in hosted:
+            a.sync()
+        node.speed = speed
+        for a in hosted:
+            if a.task.kind == TaskKind.MAP:
+                self._schedule_map_milestone(a)
+            elif a.compute_started:
+                self._schedule_reduce_completion(a)
+
+    def crash_node(self, node_id: str) -> None:
+        """Ground-truth crash: heartbeats stop, disk contents gone.
+        Attempts keep their frozen progress; RM/policy must DISCOVER the
+        death (that discovery latency is the paper's whole subject)."""
+        node = self.cluster.nodes[node_id]
+        self.truth_crashed.add(node_id)
+        self.set_node_speed(node_id, 0.0)
+        node.fail()
+        # The crashed host's own in-flight fetches stall out silently.
+        for a in self.attempts.values():
+            if a.node_id == node_id and a.state == AttemptState.RUNNING:
+                for m, h in list(a.inflight.items()):
+                    h.cancel()
+                    self._end_flow(a, m, a.fetch_srcs.get(m))
+        # Fetches streaming FROM the crashed node stall into failure cycles.
+        for a in self.attempts.values():
+            if a.state != AttemptState.RUNNING or a.node_id == node_id:
+                continue
+            for m, src in list(a.fetch_srcs.items()):
+                if src == node_id:
+                    h = a.inflight.get(m)
+                    if h is not None:
+                        h.cancel()
+                    self._end_flow(a, m, src)
+                    self._try_start_fetches(a)
+
+    def restore_node(self, node_id: str) -> None:
+        node = self.cluster.nodes[node_id]
+        # Whatever was running there is long gone.
+        for a in list(self.attempts.values()):
+            if a.node_id == node_id and a.state == AttemptState.RUNNING:
+                self._attempt_failed(a, reason="node-restarted")
+        node.restore()
+        node.last_heartbeat = self.engine.now
+        self._marked_failed.discard(node_id)
+        self.truth_crashed.discard(node_id)
+        if hasattr(self.speculator, "glance"):
+            self.speculator.glance.reset_node(node_id)
+        self._dispatch()
+
+    # ------------------------------------------------------------------
+    # Background ticks
+    # ------------------------------------------------------------------
+    def _heartbeat_tick(self) -> None:
+        now = self.engine.now
+        for node in self.cluster.nodes.values():
+            if node.alive and not node.heartbeat_suppressed(now):
+                node.last_heartbeat = now
+                if node.node_id in self._marked_failed:
+                    # transient outage misjudged as failure: NM rejoins
+                    self._marked_failed.discard(node.node_id)
+        if self.active_jobs or len(self.results) < len(self.jobs):
+            self.engine.after(self.params.heartbeat, self._heartbeat_tick)
+
+    def _expiry_tick(self) -> None:
+        now = self.engine.now
+        for node in self.cluster.nodes.values():
+            if node.node_id in self._marked_failed:
+                continue
+            if now - node.last_heartbeat > self.params.nm_expiry:
+                self.node_lost(node.node_id)
+        if self.active_jobs or len(self.results) < len(self.jobs):
+            self.engine.after(self.params.expiry_check, self._expiry_tick)
+
+    def _speculator_tick(self) -> None:
+        self._watchdog()
+        snap = self._snapshot()
+        actions = self.speculator.assess(snap)
+        self._fetch_failures.clear()
+        for act in actions:
+            if isinstance(act, MarkNodeFailed):
+                self.node_lost(act.node_id, by_policy=True)
+            elif isinstance(act, KillAttempt):
+                a = self.attempts.get(act.attempt_id)
+                if a is not None:
+                    self._kill_attempt(a, act.reason)
+            elif isinstance(act, SpeculateTask):
+                self._apply_speculate(act)
+        self._dispatch()
+        if self.active_jobs or len(self.results) < len(self.jobs):
+            self.engine.after(self.params.spec_interval,
+                              self._speculator_tick)
+
+    def _apply_speculate(self, act: SpeculateTask) -> None:
+        task = self._task(act.task_id)
+        if task is None or task.job.done:
+            return
+        if any(r.task is task for r in self.pending):
+            return  # a launch for this task is already queued
+        if task.state == TaskState.COMPLETED:
+            # dependency-aware re-execution of a completed producer;
+            # both outputs are kept until job completion (§III.B).
+            if task.running_attempts():
+                return
+            task.state = TaskState.RUNNING
+            self._enqueue(LaunchRequest(
+                task, placement=act.placement_hint, reason=act.reason))
+            return
+        if len(task.running_attempts()) >= self.params.max_running_attempts:
+            return
+        self._enqueue(LaunchRequest(
+            task, placement=act.placement_hint, speculative=True,
+            rollback=act.rollback, rollback_node=act.rollback_node,
+            reason=act.reason))
+
+    def _watchdog(self) -> None:
+        """AM retry loop: any live task with no running attempt and no
+        queued launch gets re-enqueued (covers killed/failed edges)."""
+        queued = {r.task.task_id for r in self.pending}
+        for job in self.active_jobs.values():
+            for t in job.tasks:
+                if t.state != TaskState.RUNNING:
+                    continue
+                if t.kind == TaskKind.REDUCE and not job.reduces_scheduled:
+                    continue
+                if not t.running_attempts() and t.task_id not in queued:
+                    self._enqueue(LaunchRequest(t, reason="am-watchdog"))
+        self._dispatch()
+
+    # ------------------------------------------------------------------
+    # Snapshot + bookkeeping
+    # ------------------------------------------------------------------
+    def _task(self, task_id: str) -> Optional[SimTask]:
+        job_id = task_id.rsplit("_", 1)[0]
+        job = self.jobs.get(job_id)
+        if job is None:
+            return None
+        for t in job.tasks:
+            if t.task_id == task_id:
+                return t
+        return None
+
+    def _snapshot(self) -> ClusterSnapshot:
+        nodes = {}
+        for nid, n in self.cluster.nodes.items():
+            nodes[nid] = NodeView(
+                node_id=nid, last_heartbeat=n.last_heartbeat,
+                total_containers=n.n_containers,
+                free_containers=n.free_containers,
+                marked_failed=nid in self._marked_failed)
+        tasks = {}
+        for job in self.active_jobs.values():
+            for t in job.tasks:
+                tasks[t.task_id] = t.view()
+        return ClusterSnapshot(
+            now=self.engine.now, nodes=nodes, tasks=tasks,
+            fetch_failures=tuple(self._fetch_failures))
+
+    def _check_map_progress_triggers(self, job: SimJob) -> None:
+        if not job.map_progress_triggers:
+            return
+        frac = job.maps_completed() / max(1, len(job.maps))
+        fired = [x for x in job.map_progress_triggers if frac + 1e-12 >= x[0]]
+        job.map_progress_triggers = [
+            x for x in job.map_progress_triggers if frac + 1e-12 < x[0]]
+        for _, fn in fired:
+            fn()
+
+    def _check_job_done(self, job: SimJob) -> None:
+        if job.done:
+            return
+        # YARN job completion = every reduce task committed. Outstanding
+        # map re-runs (lost-MOF recoveries) are moot once consumers are
+        # done; they are killed below.
+        if all(t.state == TaskState.COMPLETED for t in job.reduces):
+            job.done = True
+            for t in job.tasks:
+                for a in t.running_attempts():
+                    self._kill_attempt(a, "job done")
+            durations = [
+                (t.completed_at - t.first_start)
+                for t in job.tasks
+                if t.completed_at is not None and t.first_start is not None]
+            job.result = JobResult(
+                job_id=job.spec.job_id, bench=job.spec.bench,
+                input_gb=job.spec.input_gb,
+                submit_time=job.spec.submit_time,
+                finish_time=self.engine.now,
+                n_spec_attempts=job.n_spec_attempts,
+                n_attempts=job.n_attempts,
+                n_fetch_failures=job.n_fetch_failures,
+                task_durations=durations)
+            self.results.append(job.result)
+            self.active_jobs.pop(job.spec.job_id, None)
+            self.speculator.job_done(job.spec.job_id)
+            # Prune the global attempt index (stress runs submit hundreds
+            # of jobs; node_lost scans this dict).
+            for t in job.tasks:
+                for a in t.attempts:
+                    self.attempts.pop(a.attempt_id, None)

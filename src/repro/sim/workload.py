@@ -1,0 +1,31 @@
+"""Synthetic production workload (§IV.D): PACMan job-size mix with Poisson
+arrivals — 85 % of jobs at 1 GB, 8 % at 10 GB, 5 % at 50 GB, 2 % at 100 GB,
+over Terasort/Wordcount/Secondarysort/Grep.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.sim.job import JobSpec
+
+PACMAN_SIZES = (1.0, 10.0, 50.0, 100.0)
+PACMAN_PROBS = (0.85, 0.08, 0.05, 0.02)
+STRESS_BENCHES = ("terasort", "wordcount", "secondarysort", "grep")
+
+
+def pacman_workload(n_jobs: int, *, mean_interarrival: float = 30.0,
+                    seed: int = 0,
+                    benches: Sequence[str] = STRESS_BENCHES,
+                    start: float = 0.0) -> List[JobSpec]:
+    rng = np.random.default_rng(seed)
+    t = start
+    jobs = []
+    for i in range(n_jobs):
+        t += float(rng.exponential(mean_interarrival))
+        size = float(rng.choice(PACMAN_SIZES, p=PACMAN_PROBS))
+        bench = str(rng.choice(list(benches)))
+        jobs.append(JobSpec(job_id=f"j{i:04d}", bench=bench,
+                            input_gb=size, submit_time=t))
+    return jobs

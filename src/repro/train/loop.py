@@ -1,0 +1,180 @@
+"""Train/serve step builders.
+
+``make_train_step`` produces the jit-able ``train_step(state, batch)``
+covering: microbatched gradient accumulation (``lax.scan``), activation
+remat policies, optional error-feedback int8 gradient compression, AdamW,
+and MoE auxiliary losses. ``make_serve_step`` produces the decode step.
+These are exactly what the dry-run lowers for every (arch × shape × mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as MODEL
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.compress import ef_state_init, error_feedback_step
+from repro.parallel.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    microbatches: int = 1
+    remat: str = "none"            # none | full | dots | dots_no_batch
+    impl: str = "ref"              # attention/ssd kernel impl
+    grad_compression: bool = False  # error-feedback int8
+    unroll: bool = False           # unroll layer loops (dry-run cost probes)
+    lr_schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+    def lr(self):
+        return self.lr_schedule if self.lr_schedule is not None \
+            else self.learning_rate
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Next-token xent; logits (b, s, v) any float dtype, labels (b, s)."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(cfg: ModelConfig, tc: TrainConfig):
+    def loss_fn(params, batch):
+        logits, aux, _ = MODEL.forward(
+            cfg, params, batch, impl=tc.impl, remat=tc.remat,
+            unroll=tc.unroll)
+        loss = cross_entropy_loss(logits, batch["labels"])
+        return loss + aux, {"loss": loss, "moe_aux": aux}
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+def train_state_init(cfg: ModelConfig, key: jax.Array,
+                     tc: TrainConfig) -> Dict[str, Any]:
+    params = MODEL.init_params(cfg, key)
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if tc.grad_compression:
+        state["ef"] = ef_state_init(params)
+    return state
+
+
+def train_state_shapes(cfg: ModelConfig, tc: TrainConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree of the full train state — no allocation."""
+    params = MODEL.param_shapes(cfg)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    state = {
+        "params": params,
+        "opt": {
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if tc.grad_compression:
+        state["ef"] = jax.tree.map(f32, params)
+    return state
+
+
+def train_state_axes(cfg: ModelConfig, tc: TrainConfig) -> Dict[str, Any]:
+    """Logical-axis tree matching ``train_state_shapes``."""
+    axes = MODEL.param_axes(cfg)
+    state = {
+        "params": axes,
+        "opt": {"m": axes, "v": axes, "count": ()},
+        "step": (),
+    }
+    if tc.grad_compression:
+        state["ef"] = axes
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    loss_fn = make_loss_fn(cfg, tc)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tc.microbatches > 1:
+            micro = _split_microbatches(batch, tc.microbatches)
+
+            def acc_body(carry, mb):
+                g_acc, metric_acc = carry
+                (_, metrics), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                metric_acc = jax.tree.map(lambda a, m: a + m, metric_acc,
+                                          metrics)
+                return (g_acc, metric_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "moe_aux": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / tc.microbatches, metrics)
+        else:
+            (_, metrics), grads = grad_fn(params, batch)
+
+        new_state = dict(state)
+        if tc.grad_compression:
+            grads, new_ef = error_feedback_step(grads, state["ef"])
+            new_state["ef"] = new_ef
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params,
+            lr=tc.lr(), b1=tc.b1, b2=tc.b2,
+            weight_decay=tc.weight_decay,
+            grad_clip_norm=tc.grad_clip_norm)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        new_state["step"] = state["step"] + 1
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, tc: TrainConfig):
+    def serve_step(params, cache, tokens, pos):
+        return MODEL.decode_step(cfg, params, cache, tokens, pos,
+                                 impl=tc.impl, unroll=tc.unroll)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, tc: TrainConfig,
+                      max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return MODEL.prefill(cfg, params, batch, max_len=max_len,
+                             impl=tc.impl, unroll=tc.unroll)
+    return prefill_step

@@ -1,0 +1,287 @@
+"""Unit tests for the policy engine: glance, collective ramp, dependency
+tracking, rollback planning, and the two speculators."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AttemptState, AttemptView, BinoConfig, BinocularSpeculator,
+    ClusterSnapshot, CollectiveConfig, CollectiveSpeculation,
+    DependencyConfig, DependencyTracker, FetchFailure, GlanceConfig,
+    KillAttempt, MarkNodeFailed, NeighborhoodGlance, NodeView, ProgressLog,
+    RollbackRegistry, SpeculateTask, TaskKind, TaskState, TaskView,
+    YarnLateSpeculator, plan_rollback,
+)
+
+NODES = [f"n{i}" for i in range(8)]
+
+
+def mknodes(now, silent=()):
+    return {n: NodeView(node_id=n,
+                        last_heartbeat=(now - 100.0 if n in silent else now),
+                        total_containers=4, free_containers=4)
+            for n in NODES}
+
+
+def mktask(tid, node, progress, *, job="j0", kind=TaskKind.MAP,
+           state=TaskState.RUNNING, start=0.0, now=10.0, spec=False,
+           output_nodes=(), astate=AttemptState.RUNNING):
+    att = AttemptView(attempt_id=tid + "_a0", task_id=tid, node_id=node,
+                      state=astate, start_time=start, progress=progress,
+                      is_speculative=spec)
+    return TaskView(task_id=tid, job_id=job, kind=kind, state=state,
+                    attempts=[att], output_nodes=tuple(output_nodes),
+                    output_available=bool(output_nodes))
+
+
+# ---------------------------------------------------------------------------
+# Glance
+# ---------------------------------------------------------------------------
+def test_glance_failure_assessment_fires_after_threshold():
+    g = NeighborhoodGlance(NODES, GlanceConfig(fail_threshold_init=10.0))
+    snap = ClusterSnapshot(now=5.0, nodes=mknodes(5.0, silent=("n3",)),
+                           tasks={})
+    # silent for 100s > 10s threshold
+    v = g.assess(snap)
+    assert v.failed_nodes == ["n3"]
+    # declared once, not repeatedly
+    v2 = g.assess(ClusterSnapshot(now=6.0,
+                                  nodes=mknodes(6.0, silent=("n3",)),
+                                  tasks={}))
+    assert v2.failed_nodes == []
+
+
+def test_glance_eq4_adapts_threshold():
+    g = NeighborhoodGlance(NODES, GlanceConfig(
+        fail_threshold_init=10.0, failure_window=4,
+        fail_threshold_margin=1.5, fail_threshold_max=300.0))
+    # outage of ~61s observed: node silent, then a resuming heartbeat
+    nodes = mknodes(0.0)
+    nodes["n1"] = NodeView("n1", last_heartbeat=-60.0)
+    g.assess(ClusterSnapshot(now=0.0, nodes=nodes, tasks={}))
+    nodes2 = mknodes(1.0)  # n1 heartbeats again
+    g.assess(ClusterSnapshot(now=1.0, nodes=nodes2, tasks={}))
+    # outage measured from the last pre-gap heartbeat: 61 s × margin 1.5
+    assert g.threshold_of("n1") == pytest.approx(1.5 * 61.0)
+
+
+def test_glance_spatial_debounce():
+    cfg = GlanceConfig(spatial_consecutive=3, enable_temporal=False,
+                       enable_failure=False)
+    g = NeighborhoodGlance(NODES, cfg)
+    tasks = {}
+    for i, n in enumerate(NODES):
+        prog = 0.05 if n == "n2" else 0.9
+        tasks[f"t{i}"] = mktask(f"t{i}", n, prog, now=10.0)
+    for tick in range(2):
+        v = g.assess(ClusterSnapshot(now=10.0 + tick,
+                                     nodes=mknodes(10.0 + tick),
+                                     tasks=tasks))
+        assert v.slow_nodes == []
+    v = g.assess(ClusterSnapshot(now=13.0, nodes=mknodes(13.0), tasks=tasks))
+    assert ("j0", "n2", "spatial") in v.slow_nodes
+
+
+def test_glance_temporal_detects_freeze():
+    cfg = GlanceConfig(enable_spatial=False, enable_failure=False,
+                       temporal_period=1.0)
+    g = NeighborhoodGlance(NODES, cfg)
+
+    def snap_at(now, prog):
+        tasks = {"t0": mktask("t0", "n0", prog, now=now),
+                 "t1": mktask("t1", "n1", prog, now=now)}
+        return ClusterSnapshot(now=now, nodes=mknodes(now), tasks=tasks)
+
+    g.assess(snap_at(0.0, 0.1))
+    g.assess(snap_at(1.0, 0.2))   # builds Δ history
+    g.assess(snap_at(2.0, 0.3))
+    v = g.assess(snap_at(3.0, 0.3001))  # both nodes freeze
+    slow = {n for _, n, _ in v.slow_nodes}
+    assert slow == {"n0", "n1"}
+
+
+# ---------------------------------------------------------------------------
+# Collective speculation
+# ---------------------------------------------------------------------------
+def _straggler_snap(now, n_stragglers=4, free=4):
+    tasks = {}
+    for i in range(n_stragglers):
+        tasks[f"t{i}"] = mktask(f"t{i}", "n0", 0.1, now=now)
+    nodes = {n: NodeView(node_id=n, last_heartbeat=now, total_containers=4,
+                         free_containers=free) for n in NODES}
+    return ClusterSnapshot(now=now, nodes=nodes, tasks=tasks)
+
+
+def test_collective_neighborhood_first_launches_all():
+    c = CollectiveSpeculation(CollectiveConfig(coll_init_num=1,
+                                               coll_multiply=2))
+    snap = _straggler_snap(10.0)
+    stragglers = [(snap.tasks[f"t{i}"], "n0", "test") for i in range(4)]
+    nh = {"n0": ["n1", "n2", "n3"]}
+    acts = c.plan(snap, stragglers, nh)
+    # plenty of free containers in the neighborhood: everything launches
+    assert len(acts) == 4
+    assert all(a.placement_hint == ("n1", "n2", "n3") for a in acts)
+
+
+def test_collective_ramp_geometric_when_constrained():
+    c = CollectiveSpeculation(CollectiveConfig(
+        coll_init_num=1, coll_multiply=2, check_period=0.0))
+    snap = _straggler_snap(10.0, n_stragglers=8, free=0)  # no NH容量
+    stragglers = [(snap.tasks[f"t{i}"], "n0", "x") for i in range(8)]
+    nh = {"n0": ["n1"]}
+    acts0 = c.plan(snap, stragglers, nh)
+    assert len(acts0) == 1  # COLL_INIT_NUM
+    # make the speculative copy look like it's winning
+    t0 = snap.tasks["t0"]
+    t0.attempts.append(AttemptView(
+        attempt_id="t0_spec", task_id="t0", node_id="n1",
+        state=AttemptState.RUNNING, start_time=10.0, progress=0.9,
+        is_speculative=True))
+    rest = [(snap.tasks[f"t{i}"], "n0", "x") for i in range(1, 8)]
+    acts1 = c.plan(snap, rest, nh)
+    assert len(acts1) == 2  # 1 × 2^1
+    acts2 = c.plan(snap, [(snap.tasks[f"t{i}"], "n0", "x")
+                          for i in range(3, 8)], nh)
+    assert len(acts2) == 4  # 1 × 2^2
+
+
+def test_collective_reap_only_completed_tasks():
+    c = CollectiveSpeculation()
+    t = mktask("t0", "n0", 1.0, state=TaskState.COMPLETED,
+               astate=AttemptState.COMPLETED)
+    t.attempts.append(AttemptView("t0_a1", "t0", "n1",
+                                  AttemptState.RUNNING, 0.0, 0.5))
+    # a re-activated producer must NOT be reaped
+    t_reactivated = mktask("t1", "n0", 1.0, state=TaskState.RUNNING,
+                           astate=AttemptState.COMPLETED)
+    t_reactivated.attempts.append(AttemptView(
+        "t1_a1", "t1", "n1", AttemptState.RUNNING, 0.0, 0.5))
+    snap = ClusterSnapshot(now=1.0, nodes=mknodes(1.0),
+                           tasks={"t0": t, "t1": t_reactivated})
+    kills = c.reap_completed(snap)
+    assert [k.attempt_id for k in kills] == ["t0_a1"]
+
+
+# ---------------------------------------------------------------------------
+# Dependency tracking
+# ---------------------------------------------------------------------------
+def test_dependency_two_consecutive_fetch_failures():
+    d = DependencyTracker(DependencyConfig(fetch_failure_threshold=2))
+    prod = mktask("m0", "n0", 1.0, state=TaskState.COMPLETED,
+                  astate=AttemptState.COMPLETED, output_nodes=("n0",))
+    snap = ClusterSnapshot(now=1.0, nodes=mknodes(1.0),
+                           tasks={"m0": prod})
+    f = FetchFailure(time=1.0, consumer_task_id="r0", producer_task_id="m0")
+    assert d.on_fetch_failures(snap, [f]) == []
+    acts = d.on_fetch_failures(snap, [f])
+    assert len(acts) == 1 and acts[0].task_id == "m0"
+    # a successful fetch resets the streak
+    d.note_fetch_ok("m0")
+    assert d.on_fetch_failures(snap, [f]) == []
+
+
+def test_dependency_node_failure_respeculates_producers():
+    d = DependencyTracker()
+    prod = mktask("m0", "n0", 1.0, state=TaskState.COMPLETED,
+                  astate=AttemptState.COMPLETED, output_nodes=("n3",))
+    safe = mktask("m1", "n0", 1.0, state=TaskState.COMPLETED,
+                  astate=AttemptState.COMPLETED, output_nodes=("n3", "n4"))
+    snap = ClusterSnapshot(now=1.0, nodes=mknodes(1.0),
+                           tasks={"m0": prod, "m1": safe})
+    acts = d.on_node_failed(snap, {"n3"})
+    assert [a.task_id for a in acts] == ["m0"]  # m1 has a surviving copy
+
+
+# ---------------------------------------------------------------------------
+# Rollback
+# ---------------------------------------------------------------------------
+def test_rollback_registry_keeps_most_advanced():
+    r = RollbackRegistry()
+    r.record(ProgressLog("t0", "n0", 0.4))
+    r.record(ProgressLog("t0", "n0", 0.2))
+    assert r.get("t0").offset == 0.4
+    r.drop_node("n0")
+    assert r.get("t0") is None
+
+
+def test_plan_rollback_races_two_attempts():
+    r = RollbackRegistry()
+    r.record(ProgressLog("t0", "n2", 0.6))
+    snap = ClusterSnapshot(now=1.0, nodes=mknodes(1.0), tasks={})
+    launches = [SpeculateTask(task_id="t0", placement_hint=("n2", "n3"),
+                              reason="x")]
+    out = plan_rollback(snap, r, launches, unhealthy_nodes=set())
+    assert len(out) == 2
+    assert out[0].rollback and out[0].rollback_node == "n2"
+    assert not out[1].rollback and "n2" not in out[1].placement_hint
+
+
+def test_plan_rollback_skips_unhealthy_original():
+    r = RollbackRegistry()
+    r.record(ProgressLog("t0", "n2", 0.6))
+    snap = ClusterSnapshot(now=1.0, nodes=mknodes(1.0), tasks={})
+    out = plan_rollback(snap, r, [SpeculateTask(task_id="t0")],
+                        unhealthy_nodes={"n2"})
+    assert len(out) == 1 and not out[0].rollback
+
+
+# ---------------------------------------------------------------------------
+# LATE baseline myopias
+# ---------------------------------------------------------------------------
+def test_late_scope_limited_myopia():
+    """All tasks frozen identically (one dead node) ⇒ no variation ⇒ no
+    speculation — the paper's scope-limited symptom."""
+    late = YarnLateSpeculator()
+    tasks = {f"t{i}": mktask(f"t{i}", "n0", 0.5, start=0.0, now=100.0)
+             for i in range(8)}
+    snap = ClusterSnapshot(now=100.0, nodes=mknodes(100.0), tasks=tasks)
+    acts = [a for a in late.assess(snap) if isinstance(a, SpeculateTask)]
+    assert acts == []
+
+
+def test_late_speculates_with_variation():
+    late = YarnLateSpeculator()
+    tasks = {f"t{i}": mktask(f"t{i}", NODES[i % 4], 0.9, now=100.0)
+             for i in range(7)}
+    tasks["slow"] = mktask("slow", "n5", 0.05, now=100.0)
+    snap = ClusterSnapshot(now=100.0, nodes=mknodes(100.0), tasks=tasks)
+    acts = [a for a in late.assess(snap) if isinstance(a, SpeculateTask)]
+    assert len(acts) == 1 and acts[0].task_id == "slow"
+    # serial: a second assessment within the delay launches nothing
+    snap2 = ClusterSnapshot(now=101.0, nodes=mknodes(101.0), tasks=tasks)
+    acts2 = [a for a in late.assess(snap2) if isinstance(a, SpeculateTask)]
+    assert acts2 == []
+
+
+def test_late_ignores_completed_tasks():
+    """Dependency-oblivious: a completed producer with lost output is
+    invisible to LATE."""
+    late = YarnLateSpeculator()
+    lost = mktask("m0", "n0", 1.0, state=TaskState.COMPLETED,
+                  astate=AttemptState.COMPLETED)
+    lost.output_available = False
+    snap = ClusterSnapshot(now=100.0, nodes=mknodes(100.0),
+                           tasks={"m0": lost})
+    acts = [a for a in late.assess(snap) if isinstance(a, SpeculateTask)]
+    assert acts == []
+
+
+# ---------------------------------------------------------------------------
+# Bino composition
+# ---------------------------------------------------------------------------
+def test_bino_failure_to_actions_pipeline():
+    b = BinocularSpeculator(NODES)
+    tasks = {
+        "m0": mktask("m0", "n6", 1.0, state=TaskState.COMPLETED,
+                     astate=AttemptState.COMPLETED, output_nodes=("n3",)),
+        "r0": mktask("r0", "n1", 0.3, kind=TaskKind.REDUCE),
+        "t0": mktask("t0", "n3", 0.5),
+    }
+    snap = ClusterSnapshot(now=50.0, nodes=mknodes(50.0, silent=("n3",)),
+                           tasks=tasks)
+    acts = b.assess(snap)
+    kinds = [type(a).__name__ for a in acts]
+    assert "MarkNodeFailed" in kinds
+    spec_ids = {a.task_id for a in acts if isinstance(a, SpeculateTask)}
+    assert "m0" in spec_ids  # dependency-aware completed-task re-execution
+    assert "t0" in spec_ids  # running straggler on the dead node

@@ -1,0 +1,189 @@
+"""Pallas kernel validation (interpret mode on CPU) against the pure-jnp
+oracles: shape/dtype sweeps for flash attention fwd+bwd, decode attention,
+and the SSD scan."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_pallas)
+from repro.kernels.decode_attention.ref import decode_attention_reference
+from repro.kernels.flash_attention import flash_attention as FA
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.ssd.ref import ssd_reference
+from repro.kernels.ssd.ssd import ssd_pallas
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention forward
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,sq,sk,hq,hkv,d", [
+    (1, 128, 128, 2, 2, 32),     # MHA square
+    (2, 128, 128, 4, 1, 16),     # MQA
+    (1, 256, 256, 4, 2, 32),     # GQA, multi-block
+    (1, 128, 256, 2, 1, 32),     # decode-ish: q shorter than kv
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_fwd(b, sq, sk, hq, hkv, d, causal, dtype):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, sq, hq, d), dtype)
+    k = jax.random.normal(kk, (b, sk, hkv, d), dtype)
+    v = jax.random.normal(kv_, (b, sk, hkv, d), dtype)
+    out, _ = FA.flash_attention_fwd(q, k, v, causal=causal,
+                                    block_q=64, block_k=128,
+                                    interpret=True)
+    ref = attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_window():
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 256, 2, 32), jnp.float32)
+    k = jax.random.normal(key, (1, 256, 2, 32), jnp.float32)
+    v = jax.random.normal(key, (1, 256, 2, 32), jnp.float32)
+    out, _ = FA.flash_attention_fwd(q, k, v, causal=True, window=64,
+                                    block_q=64, block_k=64, interpret=True)
+    ref = attention_reference(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention backward
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("hq,hkv", [(2, 2), (4, 2), (4, 1)])
+def test_flash_attention_bwd(hq, hkv):
+    key = jax.random.PRNGKey(2)
+    kq, kk, kv_, kd = jax.random.split(key, 4)
+    b, s, d = 1, 128, 32
+    q = jax.random.normal(kq, (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(kk, (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(kv_, (b, s, hkv, d), jnp.float32)
+
+    def ref_loss(q, k, v):
+        o = attention_reference(q, k, v, causal=True)
+        return jnp.sum(o * co)
+
+    co = jax.random.normal(kd, (b, s, hq, d), jnp.float32)
+    dq_ref, dk_ref, dv_ref = jax.grad(ref_loss, argnums=(0, 1, 2))(q, k, v)
+
+    out, lse = FA.flash_attention_fwd(q, k, v, causal=True, block_q=64,
+                                      block_k=64, interpret=True)
+    dq, dk, dv = FA.flash_attention_bwd(q, k, v, out, lse, co, causal=True,
+                                        block_q=64, block_k=64,
+                                        interpret=True)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(dq_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(dv_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_flash_attention_op_grad_matches_ref_impl():
+    """The custom_vjp wiring end-to-end (impl='pallas' interpret)."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 128, 2, 32), jnp.float32)
+
+    def loss(impl):
+        def f(x):
+            o = flash_attention(x, q, q, causal=True, impl=impl,
+                                block_q=64, block_k=64)
+            return jnp.sum(o ** 2)
+        return f
+
+    import repro.kernels.flash_attention.flash_attention as fa_mod
+    g_ref = jax.grad(loss("ref"))(q)
+    g_pal = jax.grad(loss("pallas"))(q)   # interpret on CPU by default
+    np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,sk,hq,hkv,d", [
+    (2, 128, 4, 2, 32),
+    (4, 256, 4, 1, 16),
+    (1, 512, 8, 8, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, sk, hq, hkv, d, dtype):
+    key = jax.random.PRNGKey(4)
+    kq, kk, kv_, kl = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, hq, d), dtype)
+    k = jax.random.normal(kk, (b, sk, hkv, d), dtype)
+    v = jax.random.normal(kv_, (b, sk, hkv, d), dtype)
+    valid = jax.random.randint(kl, (b,), 1, sk + 1, jnp.int32)
+    out = decode_attention_pallas(q, k, v, valid, block_k=128,
+                                  interpret=True)
+    ref = decode_attention_reference(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 128, 2, 16, 16, 32),
+    (2, 256, 4, 32, 32, 64),
+    (1, 64, 1, 64, 16, 64),   # single chunk
+])
+def test_ssd_matches_reference(b, s, h, p, n, chunk):
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, 1, n), jnp.float32)
+    C = jax.random.normal(ks[4], (b, s, 1, n), jnp.float32)
+    D = jnp.ones((h,), jnp.float32)
+    y_pal, st_pal = ssd_pallas(x, dt, A, B, C, D, chunk=chunk,
+                               interpret=True)
+    y_ref, st_ref = ssd_reference(x, dt, A, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_pal), np.asarray(st_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_sequential_recurrence_oracle():
+    """The chunked dual form equals the naive per-token recurrence."""
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 5)
+    b, s, h, p, n = 1, 64, 2, 8, 8
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, 1, n), jnp.float32)
+    C = jax.random.normal(ks[4], (b, s, 1, n), jnp.float32)
+    D = jnp.zeros((h,), jnp.float32)
+    y_ref, _ = ssd_reference(x, dt, A, B, C, D, chunk=16)
+
+    # naive recurrence
+    state = np.zeros((b, h, p, n), np.float32)
+    ys = []
+    xn, dtn, Bn, Cn = map(np.asarray, (x, dt, B, C))
+    An = np.asarray(A)
+    for t in range(s):
+        decay = np.exp(dtn[:, t] * An[None, :])          # (b, h)
+        upd = np.einsum("bhp,bn->bhpn", xn[:, t] * dtn[:, t][..., None],
+                        Bn[:, t, 0])
+        state = state * decay[..., None, None] + upd
+        ys.append(np.einsum("bhpn,bn->bhp", state, Cn[:, t, 0]))
+    y_naive = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_ref), y_naive,
+                               rtol=1e-4, atol=1e-4)

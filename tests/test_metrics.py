@@ -1,0 +1,143 @@
+"""Property tests for the Eq. 1–4 math: numpy/jax implementation parity
+and analytic invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as M
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(0.1, 1000.0), min_size=1, max_size=12),
+       st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_eq4_np_jax_parity(history, L):
+    est_np = M.eq4_estimate_np(history, L)
+    import jax.numpy as jnp
+    h = history[-L:]
+    padded = [np.nan] * (L - len(h)) + h
+    est_jax = float(M.eq4_estimate_jax(jnp.asarray(padded, jnp.float32), L))
+    # jax default dtype is f32: parity up to single precision
+    assert est_np == pytest.approx(est_jax, rel=1e-5)
+
+
+@given(st.lists(st.floats(0.1, 1000.0), min_size=1, max_size=8),
+       st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_eq4_is_weighted_mean(history, L):
+    """The estimate lies within [min, max] of the window (proper mean)."""
+    est = M.eq4_estimate_np(history, L)
+    window = history[-L:]
+    assert min(window) - 1e-9 <= est <= max(window) + 1e-9
+
+
+@given(st.floats(0.5, 500.0), st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_eq4_constant_history_is_identity(value, L):
+    est = M.eq4_estimate_np([value] * L, L)
+    assert est == pytest.approx(value, rel=1e-9)
+
+
+def test_eq4_recency_weighting():
+    """The most recent outage dominates: 2^{L+1-k} halves per step back."""
+    est_recent_big = M.eq4_estimate_np([1.0, 1.0, 1.0, 100.0], 4)
+    est_recent_small = M.eq4_estimate_np([100.0, 1.0, 1.0, 1.0], 4)
+    assert est_recent_big > 50.0
+    assert est_recent_small < 10.0
+
+
+def test_eq4_empty():
+    assert M.eq4_estimate_np([], 4) is None
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1
+# ---------------------------------------------------------------------------
+@given(st.integers(3, 12), st.integers(2, 6), st.data())
+@settings(max_examples=100, deadline=None)
+def test_spatial_np_jax_parity(n_nodes, k, data):
+    import jax.numpy as jnp
+    P = np.array(data.draw(st.lists(
+        st.one_of(st.floats(0.0, 10.0, allow_subnormal=False),
+                  st.just(np.nan)),
+        min_size=n_nodes, max_size=n_nodes)))
+    k = min(k, n_nodes)
+    offsets = np.arange(k) - (k // 2)
+    nh = (np.arange(n_nodes)[:, None] + offsets[None, :]) % n_nodes
+    m_np = M.spatial_slow_mask_np(P, nh)
+    m_jax = np.asarray(M.spatial_slow_mask_jax(jnp.asarray(P),
+                                               jnp.asarray(nh)))
+    # the np path runs in f64, jax in f32: ignore knife-edge disagreements
+    # where P sits within float epsilon of the mean−σ decision boundary
+    Pn = P[nh]
+    valid = ~np.isnan(Pn)
+    cnt = np.maximum(valid.sum(axis=1), 1)
+    mean = np.nansum(Pn, axis=1) / cnt
+    var = np.nansum(np.where(valid, (Pn - mean[:, None]) ** 2, 0.0),
+                    axis=1) / cnt
+    margin = np.abs(P - (mean - np.sqrt(var)))
+    decisive = ~np.isnan(margin) & (margin > 1e-4 * (1.0 + np.abs(P)))
+    assert np.array_equal(m_np[decisive], m_jax[decisive])
+
+
+def test_spatial_uniform_never_fires():
+    """Identical progress rates: no node is slow (σ=0, strict <)."""
+    P = np.full(8, 3.0)
+    nh = (np.arange(8)[:, None] + np.arange(4)[None, :] - 2) % 8
+    assert not M.spatial_slow_mask_np(P, nh).any()
+
+
+def test_spatial_dead_node_fires():
+    P = np.array([1.0, 1.0, 1.0, 0.01, 1.0, 1.0, 1.0, 1.0])
+    nh = (np.arange(8)[:, None] + np.arange(4)[None, :] - 2) % 8
+    mask = M.spatial_slow_mask_np(P, nh)
+    assert mask[3]
+    assert mask.sum() == 1
+
+
+def test_spatial_single_live_node_cannot_fire():
+    """Scope-limited myopia precondition: one node alone has no
+    neighborhood variation to compare against."""
+    P = np.full(8, np.nan)
+    P[2] = 0.001  # very slow, but alone
+    nh = (np.arange(8)[:, None] + np.arange(4)[None, :] - 2) % 8
+    assert not M.spatial_slow_mask_np(P, nh).any()
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2–3
+# ---------------------------------------------------------------------------
+@given(st.integers(2, 10), st.data())
+@settings(max_examples=100, deadline=None)
+def test_temporal_np_jax_parity(n, data):
+    import jax.numpy as jnp
+    f = st.floats(0.0, 100.0, allow_subnormal=False, width=32)
+    zn = np.array(data.draw(st.lists(f, min_size=n, max_size=n)))
+    zp = np.array(data.draw(st.lists(f, min_size=n, max_size=n)))
+    dp = np.array(data.draw(st.lists(
+        st.one_of(f, st.just(np.nan)), min_size=n, max_size=n)))
+    m_np, d_np = M.temporal_slow_mask_np(zn, zp, 3.0, dp)
+    m_j, d_j = M.temporal_slow_mask_jax(
+        jnp.asarray(zn), jnp.asarray(zp), 3.0, jnp.asarray(dp))
+    # ignore knife-edge rows (f32 vs f64 rounding of the strict ratio test)
+    margin = np.abs(d_np - 0.1 * dp)
+    decisive = np.isnan(margin) | (margin > 1e-4 * (1.0 + np.abs(d_np)))
+    assert np.array_equal(m_np[decisive], np.asarray(m_j)[decisive])
+    np.testing.assert_allclose(d_np, np.asarray(d_j),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_temporal_cliff_fires():
+    zeta_prev = np.array([10.0, 10.0])
+    zeta_now = np.array([10.05, 13.0])  # node 0 nearly frozen
+    delta_prev = np.array([1.0, 1.0])
+    mask, _ = M.temporal_slow_mask_np(zeta_now, zeta_prev, 3.0, delta_prev)
+    assert mask[0] and not mask[1]
+
+
+def test_temporal_needs_prior_delta():
+    mask, _ = M.temporal_slow_mask_np(
+        np.array([0.0]), np.array([0.0]), 3.0, np.array([np.nan]))
+    assert not mask.any()

@@ -1,0 +1,151 @@
+"""Simulator integration tests: determinism, YARN-semantics invariants,
+and the paper's qualitative claims in miniature."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sim import JobSpec, Simulation, faults
+from repro.sim.engine import Engine
+from repro.sim.runner import baseline_jct, run_single, slowdown
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+@given(st.lists(st.tuples(st.floats(0.0, 100.0, allow_nan=False),
+                          st.integers(0, 99)), min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_engine_deterministic_order(events):
+    def run_once():
+        eng = Engine()
+        seen = []
+        for t, tag in events:
+            eng.at(t, lambda tag=tag: seen.append((eng.now, tag)))
+        eng.run()
+        return seen
+    assert run_once() == run_once()
+    order = [t for t, _ in run_once()]
+    assert order == sorted(order)
+
+
+def test_engine_cancellation():
+    eng = Engine()
+    fired = []
+    h = eng.at(5.0, lambda: fired.append("a"))
+    eng.at(6.0, lambda: fired.append("b"))
+    h.cancel()
+    eng.run()
+    assert fired == ["b"]
+
+
+# ---------------------------------------------------------------------------
+# Determinism end to end
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["yarn", "bino"])
+def test_sim_bit_deterministic(policy):
+    def once():
+        sim = Simulation(policy=policy, seed=7)
+        job = sim.submit(JobSpec("j0", "terasort", 2.0))
+        faults.crash_busiest_node_at_map_progress(sim, job, 0.5)
+        sim.run()
+        return (job.result.jct, job.n_attempts, job.n_spec_attempts,
+                job.n_fetch_failures)
+    assert once() == once()
+
+
+# ---------------------------------------------------------------------------
+# Paper-mechanics invariants
+# ---------------------------------------------------------------------------
+def test_faultfree_job_completes_quickly():
+    for bench in ("terasort", "wordcount", "grep"):
+        r = run_single("yarn", JobSpec("j0", bench, 1.0), seed=3)
+        assert r.jct < 200.0, (bench, r.jct)
+
+
+def test_small_job_packs_onto_one_node():
+    """The scope-limited precondition: an 8-map job fits one node."""
+    sim = Simulation(policy="yarn", seed=1)
+    job = sim.submit(JobSpec("j0", "terasort", 1.0))
+    sim.engine.run(until=20.0, stop=lambda: False)
+    nodes = {a.node_id for t in job.maps for a in t.attempts}
+    assert len(nodes) == 1
+
+
+def test_yarn_node_failure_bounded_by_expiry():
+    """YARN recovery for a co-located small job is NM-expiry-bound."""
+    sd, res = slowdown("yarn", JobSpec("j0", "terasort", 1.0),
+                       lambda sim, job:
+                       faults.crash_busiest_node_at_map_progress(
+                           sim, job, 0.5), seed=1)
+    base = baseline_jct("terasort", 1.0, seed=1)
+    assert res.jct > 600.0              # waited out the expiry
+    assert res.jct < 600.0 + 3 * base   # then recovered promptly
+
+
+def test_bino_beats_yarn_on_node_failure():
+    f = lambda sim, job: faults.crash_busiest_node_at_map_progress(
+        sim, job, 0.5)
+    sd_y, _ = slowdown("yarn", JobSpec("j0", "terasort", 1.0), f, seed=1)
+    sd_b, _ = slowdown("bino", JobSpec("j0", "terasort", 1.0), f, seed=1)
+    assert sd_y / sd_b > 3.0  # paper: ~7x; any large factor validates
+
+
+def test_bino_beats_yarn_on_mof_loss():
+    f = lambda sim, job: faults.lose_mof_at_map_progress(sim, job, 1.0)
+    _, r_y = slowdown("yarn", JobSpec("j0", "terasort", 10.0), f, seed=1)
+    _, r_b = slowdown("bino", JobSpec("j0", "terasort", 10.0), f, seed=1)
+    assert r_y.n_fetch_failures >= 1     # the qualifying condition held
+    assert r_y.jct > 1.5 * r_b.jct
+
+
+def test_rollback_preserves_progress_monotonically():
+    """Bino recovery time decreases with the spill count (Fig. 9 shape)."""
+    times = []
+    for k in (1, 4):
+        sim = Simulation(policy="bino", seed=2)
+        job = sim.submit(JobSpec("j0", "wordcount", 1.0))
+        faults.disk_exception_on_map(sim, job, 0, k)
+        sim.run()
+        task = job.maps[0]
+        failed = [a for a in task.attempts if a.state.value == "failed"]
+        times.append(task.completed_at - failed[0].end_time)
+    assert times[1] < 0.5 * times[0]
+
+
+def test_exactly_one_output_survives_per_task():
+    """Every map task of a finished job has ≥1 completed attempt, and both
+    outputs of re-executed producers were retained until completion."""
+    sim = Simulation(policy="bino", seed=4)
+    job = sim.submit(JobSpec("j0", "terasort", 5.0))
+    faults.crash_busiest_node_at_map_progress(sim, job, 0.8)
+    sim.run()
+    assert job.done
+    for t in job.maps + job.reduces:
+        completed = [a for a in t.attempts if a.state.value == "completed"]
+        assert len(completed) >= 1, t.task_id
+
+
+def test_transient_outage_not_declared_failed_after_learning():
+    """Eq. 4: after observing a node's outage pattern, a similar transient
+    does not trigger a failure verdict."""
+    sim = Simulation(policy="bino", seed=5)
+    sim.submit(JobSpec("j0", "aggregation", 10.0, submit_time=0.0))
+    sim.submit(JobSpec("j1", "aggregation", 10.0, submit_time=100.0))
+    # teaching outages: 12 s each (above the 10 s initial threshold — the
+    # first will false-positive, then the threshold adapts to ~18 s)
+    for i, t in enumerate((20.0, 50.0, 80.0)):
+        faults.heartbeat_outage_at(sim, "n05", t, 12.0)
+    faults.heartbeat_outage_at(sim, "n05", 120.0, 12.0)  # test event
+    sim.run()
+    late_calls = [c for c in sim.policy_failed_calls
+                  if c[1] == "n05" and c[0] >= 115.0]
+    assert late_calls == []
+
+
+def test_stress_workload_all_jobs_finish():
+    from repro.sim.runner import run_workload
+    from repro.sim.workload import pacman_workload
+    specs = pacman_workload(8, mean_interarrival=20.0, seed=3)
+    for policy in ("yarn", "bino"):
+        results = run_workload(policy, specs, seed=3)
+        assert len(results) == len(specs)
