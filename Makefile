@@ -1,0 +1,22 @@
+# Developer entry points. Everything also works without install via
+# PYTHONPATH=src (the tier-1 convention); `pip install -e .[test]` makes
+# the repro package importable directly.
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test bench bench-perf bench-perf-full
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run
+
+# Scale trajectory: assessment ticks/sec at 20/100/500 nodes, columnar vs
+# per-object, appended into BENCH_scale.json. Quick mode keeps the wall
+# budget to a few minutes on a laptop-class machine.
+bench-perf:
+	$(PY) -m benchmarks.run --only perf_scale --quick
+
+bench-perf-full:
+	$(PY) -m benchmarks.run --only perf_scale

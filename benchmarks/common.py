@@ -8,6 +8,7 @@ figures into one CSV.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -17,6 +18,13 @@ from repro.sim import JobSpec, faults
 from repro.sim.runner import run_single, slowdown
 
 Row = Tuple[str, float, str]
+
+# Process fan-out for the sweep grids (benches × fracs × seeds). Each cell
+# is an independent deterministic simulation, so they parallelize
+# perfectly; per-process LRU caches keep the fault-free baselines shared
+# within a worker. REPRO_BENCH_PROCS=1 forces the serial path.
+_BENCH_PROCS = int(os.environ.get("REPRO_BENCH_PROCS",
+                                  str(os.cpu_count() or 1)))
 
 # Small representative subset of the suite for the heavier sweeps; the
 # overall figures use more benches. Chosen to span the MOF-ratio axis.
@@ -60,21 +68,52 @@ def delay_fault(at: float, factor: float = 0.05,
     return f
 
 
+def _slowdown_cell(cell) -> float:
+    """One grid cell, executed in a worker process. ``fault_for`` must be a
+    module-level factory (crash_fault/mof_fault/...) so it pickles by
+    reference; the fault closure itself is built inside the worker."""
+    policy, bench, input_gb, frac, seed, fault_for, policy_kwargs = cell
+    sd, _ = slowdown(policy, JobSpec("j0", bench, input_gb),
+                     fault_for(frac), seed=seed, **policy_kwargs)
+    return sd
+
+
 def avg_slowdown(policy: str, input_gb: float, fault_for,
                  benches: Sequence[str] = FAST_BENCHES,
                  fracs: Sequence[float] = CRASH_FRACS,
                  seeds: Sequence[int] = SEEDS,
                  **policy_kwargs) -> Tuple[float, List[float]]:
-    """Average slowdown over benches × fault-points × seeds."""
-    sds: List[float] = []
-    for bench in benches:
-        for frac in fracs:
-            for seed in seeds:
-                sd, _ = slowdown(policy, JobSpec("j0", bench, input_gb),
-                                 fault_for(frac), seed=seed,
-                                 **policy_kwargs)
-                sds.append(sd)
+    """Average slowdown over benches × fault-points × seeds.
+
+    The grid fans out over a process pool (bench-major result order is
+    preserved); anything unpicklable in the request — a closure fault
+    factory, a ``policy_factory`` — falls back to the serial path.
+    """
+    grid = [(policy, bench, input_gb, frac, seed, fault_for, policy_kwargs)
+            for bench in benches for frac in fracs for seed in seeds]
+    sds = _run_grid(grid)
     return float(np.mean(sds)), sds
+
+
+def _run_grid(grid) -> List[float]:
+    workers = min(_BENCH_PROCS, len(grid))
+    if workers > 1 and _grid_picklable(grid):
+        import concurrent.futures as cf
+        try:
+            with cf.ProcessPoolExecutor(max_workers=workers) as ex:
+                return list(ex.map(_slowdown_cell, grid))
+        except (OSError, cf.process.BrokenProcessPool):
+            pass  # restricted environment: fall through to serial
+    return [_slowdown_cell(cell) for cell in grid]
+
+
+def _grid_picklable(grid) -> bool:
+    import pickle
+    try:
+        pickle.dumps(grid[0])
+        return True
+    except Exception:
+        return False
 
 
 def vs_paper(measured: float, paper: float) -> str:

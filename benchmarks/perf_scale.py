@@ -1,0 +1,148 @@
+"""Assessment-path scale benchmark: ticks/sec vs cluster size, columnar
+vs per-object reference snapshots, both policies.
+
+The paper's testbed is 21 nodes; the ROADMAP north-star is a
+production-scale system that sweeps many failure scenarios fast. The
+binding cost is the speculator tick — the seed rebuilt every
+TaskView/AttemptView and re-scanned every attempt per tick. This harness
+sweeps cluster sizes with a proportionally-sized job (4 map splits per
+worker) and measures the assessment path in isolation
+(``Simulation.assess_wall`` times snapshot construction + policy assess).
+
+Writes ``BENCH_scale.json`` at the repo root so later PRs append to a
+perf trajectory instead of starting from nothing; the acceptance gate is
+``columnar_speedup_500 ≥ 10`` for at least one policy.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.perf_scale [--quick] [--full]
+    PYTHONPATH=src python -m benchmarks.run --only perf_scale --quick
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, List
+
+from benchmarks.common import Row
+from repro.sim.job import JobSpec
+from repro.sim.mapreduce import BINO_PARAMS, SimParams, Simulation
+
+SIZES_QUICK = (20, 100, 500)
+SIZES_FULL = (20, 100, 500, 1000)
+N_CONTAINERS = 8
+SPLITS_PER_WORKER = 4          # job size scales with the cluster
+SIM_SECONDS_QUICK = 120.0
+SIM_SECONDS_FULL = 240.0
+
+_ROOT = Path(__file__).resolve().parent.parent
+BENCH_JSON = _ROOT / "BENCH_scale.json"
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def measure(policy: str, n_workers: int, *, columnar: bool,
+            sim_seconds: float, seed: int = 0) -> Dict:
+    """Run one proportionally-sized job for ``sim_seconds`` of simulated
+    time and report assessment-tick throughput."""
+    n_maps = SPLITS_PER_WORKER * n_workers
+    input_gb = n_maps / 8.0            # 8 × 128 MiB splits per GB
+    spec = JobSpec("scale", "terasort", input_gb)
+    base = BINO_PARAMS if policy == "bino" else SimParams()
+    params = dataclasses.replace(base, sim_time_cap=sim_seconds)
+    sim = Simulation(policy=policy, seed=seed, n_workers=n_workers,
+                     n_containers=N_CONTAINERS, params=params,
+                     columnar=columnar)
+    sim.submit(spec)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    ticks = max(1, sim.assess_ticks)
+    return {
+        "policy": policy,
+        "n_workers": n_workers,
+        "n_tasks": spec.n_maps + spec.reduces,
+        "mode": "columnar" if columnar else "object",
+        "sim_seconds": sim_seconds,
+        "assess_ticks": sim.assess_ticks,
+        "assess_wall_s": round(sim.assess_wall, 4),
+        "ticks_per_s": round(ticks / max(sim.assess_wall, 1e-9), 2),
+        "actions": sim.actions_emitted,
+        "actions_per_s": round(
+            sim.actions_emitted / max(sim.assess_wall, 1e-9), 2),
+        "wall_s": round(wall, 3),
+    }
+
+
+def run() -> List[Row]:
+    quick = _quick()
+    sizes = SIZES_QUICK if quick else SIZES_FULL
+    sim_seconds = SIM_SECONDS_QUICK if quick else SIM_SECONDS_FULL
+    results: List[Dict] = []
+    rows: List[Row] = []
+    for n in sizes:
+        for policy in ("yarn", "bino"):
+            col = measure(policy, n, columnar=True, sim_seconds=sim_seconds)
+            obj = measure(policy, n, columnar=False, sim_seconds=sim_seconds)
+            results.extend([col, obj])
+            speedup = col["ticks_per_s"] / max(obj["ticks_per_s"], 1e-9)
+            rows.append((
+                f"perf_scale/{policy}_{n}n_columnar_ticks_per_s",
+                col["ticks_per_s"],
+                f"object={obj['ticks_per_s']:.1f}/s speedup={speedup:.1f}x"))
+            if n == 500:
+                rows.append((f"perf_scale/{policy}_500n_speedup", speedup,
+                             "gate: >=10x over per-object seed path"))
+    payload = {
+        "schema": 1,
+        "generated_unix": int(time.time()),
+        "cpu_count": os.cpu_count(),
+        "mode": "quick" if quick else "full",
+        "sim_seconds": sim_seconds,
+        "splits_per_worker": SPLITS_PER_WORKER,
+        "results": results,
+        "speedup_at_500": {
+            p: round(
+                next(r["ticks_per_s"] for r in results
+                     if r["policy"] == p and r["n_workers"] == 500
+                     and r["mode"] == "columnar")
+                / max(next(r["ticks_per_s"] for r in results
+                           if r["policy"] == p and r["n_workers"] == 500
+                           and r["mode"] == "object"), 1e-9), 2)
+            for p in ("yarn", "bino")
+        } if any(r["n_workers"] == 500 for r in results) else {},
+    }
+    history = []
+    if BENCH_JSON.exists():
+        try:
+            prev = json.loads(BENCH_JSON.read_text())
+            history = prev.get("history", [])
+            prev.pop("history", None)
+            history.append(prev)
+        except (json.JSONDecodeError, OSError):
+            pass
+    payload["history"] = history[-20:]
+    BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    rows.append(("perf_scale/json", 1.0, str(BENCH_JSON)))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (20/100/500 nodes, shorter sim cap)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.quick and not args.full:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+    for name, value, derived in run():
+        print(f"{name},{value:.4g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,11 +4,13 @@ roofline summary. Prints ``name,value,derived`` CSV rows.
 Usage:
     PYTHONPATH=src python -m benchmarks.run             # all figures
     PYTHONPATH=src python -m benchmarks.run --only fig4a,fig9
+    PYTHONPATH=src python -m benchmarks.run --only perf_scale --quick
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import os
 import sys
 import time
 import traceback
@@ -23,6 +25,7 @@ FIGS = [
     "fig7_glance",
     "fig8_collective",
     "fig9_rollback",
+    "perf_scale",
 ]
 
 
@@ -30,7 +33,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated figure prefixes (e.g. fig4a,fig9)")
+    ap.add_argument("--quick", action="store_true",
+                    help="bounded wall-time budget for modules that "
+                         "support it (currently perf_scale: smaller size "
+                         "sweep, shorter sim cap)")
     args = ap.parse_args()
+    if args.quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
     selected = FIGS
     if args.only:
         keys = [k.strip() for k in args.only.split(",")]

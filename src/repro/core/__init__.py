@@ -3,6 +3,8 @@ engine (see DESIGN.md §2 for the MapReduce → TPU-training mapping).
 
 Layout:
 - ``types``       control-plane snapshot/action protocol
+- ``arrays``      columnar (struct-of-arrays) snapshot mirror — the
+                  vectorized assessment hot path (DESIGN.md §11)
 - ``metrics``     Eq. 1–4 math (numpy + jax mirrors)
 - ``glance``      neighborhood glance: spatial/temporal/failure assessments
 - ``collective``  collective speculation ramp (COLL_INIT_NUM/COLL_MULTIPLY)
@@ -10,6 +12,7 @@ Layout:
 - ``rollback``    speculative rollback from lightweight progress logs
 - ``speculator``  BinocularSpeculator + YarnLateSpeculator (baseline)
 """
+from repro.core.arrays import ArraySnapshot
 from repro.core.collective import CollectiveConfig, CollectiveSpeculation
 from repro.core.dependency import DependencyConfig, DependencyTracker
 from repro.core.glance import GlanceConfig, GlanceVerdict, NeighborhoodGlance
@@ -37,7 +40,7 @@ from repro.core.types import (
 )
 
 __all__ = [
-    "Action", "AttemptState", "AttemptView", "BinoConfig",
+    "Action", "ArraySnapshot", "AttemptState", "AttemptView", "BinoConfig",
     "BinocularSpeculator", "ClusterSnapshot", "CollectiveConfig",
     "CollectiveSpeculation", "DependencyConfig", "DependencyTracker",
     "FetchFailure", "GlanceConfig", "GlanceVerdict", "KillAttempt",

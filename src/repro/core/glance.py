@@ -5,6 +5,17 @@ the speculator's scope in space (Eq. 1), time (Eq. 2–3), and responsiveness
 Stateful pieces (per-node ζ history for Δ, per-node outage windows for
 Eq. 4) live here; the math is delegated to ``repro.core.metrics`` so the
 simulator and the JAX runtime assess identically.
+
+Two assessment paths share all state semantics (DESIGN.md §11):
+
+- the **reference** per-object path walks ``snap.tasks``/``snap.nodes``
+  views — used by the live runtime coordinator and the unit tests;
+- the **vectorized** path runs when the substrate attaches a columnar
+  ``ArraySnapshot`` (``snap.arrays``): one segmented-reduction pass over
+  (job, kind, node) covers every job and both phases at once, and the
+  Eq. 4 monitor is a handful of whole-cluster array ops. It is
+  bit-equivalent to the reference path (same operand order, same
+  accumulation order) — enforced by tests/test_columnar.py.
 """
 from __future__ import annotations
 
@@ -73,23 +84,28 @@ class NeighborhoodGlance:
         self.node_ids: List[str] = list(node_ids)
         self.node_index = {n: i for i, n in enumerate(self.node_ids)}
         self._neighborhoods = self._build_neighborhoods(topology)
-        # Eq. 2 state per job: (T_{i-1}, {attempt_id: progress},
-        # Δ-history deque of shape (W, n_nodes)).
+        n = len(self.node_ids)
+        # Eq. 2 state per job: {"k": accepted-sample counter, "t": time of
+        # the last accepted sample, "prog": {attempt_id: ζ} at that sample
+        # (reference path), "hist": Δ-history list of (n_nodes,) arrays}.
         # ζ deltas are computed over attempts alive at BOTH samples — the
         # paper's "only on-going tasks" guard against the end-of-wave
         # ProgressScore decline, done per-attempt so wave transitions can
-        # never register as negative acceleration.
-        self._temporal: Dict[str, Tuple[float, Dict[str, float], List[np.ndarray]]] = {}
-        # Eq. 4 state: per node → outage-duration history (most recent last),
-        # current adaptive threshold, and outage bookkeeping.
-        self._outages: Dict[str, List[float]] = {n: [] for n in self.node_ids}
-        self._thresholds: Dict[str, float] = {
-            n: cfg.fail_threshold_init for n in self.node_ids}
-        self._lost_since: Dict[str, Optional[float]] = {
-            n: None for n in self.node_ids}
-        self._declared_failed: Set[str] = set()
-        # Debounce state: per (job, node) consecutive Eq. 1 hits.
+        # never register as negative acceleration. The vectorized path
+        # stores the per-attempt sample membership in two ArraySnapshot
+        # scratch columns (sample mark + ζ at mark) instead of "prog".
+        self._temporal: Dict[str, dict] = {}
+        # Eq. 4 state, array-of-nodes storage shared by both paths:
+        # outage-duration history (most recent last), current adaptive
+        # threshold, outage bookkeeping (NaN = not currently lost).
+        self._outages: Dict[str, List[float]] = {n_: [] for n_ in self.node_ids}
+        self._thresholds = np.full(n, cfg.fail_threshold_init)
+        self._lost = np.full(n, np.nan)
+        self._declared = np.zeros(n, dtype=bool)
+        # Debounce state: per (job, node) consecutive Eq. 1 hits
+        # (reference path); per-job (n_nodes,) counters (vectorized path).
         self._spatial_streak: Dict[Tuple[str, str], int] = {}
+        self._v_streak: Dict[str, np.ndarray] = {}
 
     # ------------------------------------------------------------------
     # Topology: default = ring segments of size_neighbor (the ICI-torus
@@ -116,12 +132,15 @@ class NeighborhoodGlance:
         return [self.node_ids[i] for i in row if self.node_ids[i] != node_id]
 
     def threshold_of(self, node_id: str) -> float:
-        return self._thresholds[node_id]
+        return float(self._thresholds[self.node_index[node_id]])
 
     # ------------------------------------------------------------------
     # Assessment tick
     # ------------------------------------------------------------------
     def assess(self, snap: ClusterSnapshot) -> GlanceVerdict:
+        arr = getattr(snap, "arrays", None)
+        if arr is not None:
+            return self._assess_arrays(snap, arr)
         slow: List[Tuple[str, str, str]] = []
         failed = self._assess_failure(snap) if self.cfg.enable_failure else []
         for job_id in snap.job_ids():
@@ -133,7 +152,7 @@ class NeighborhoodGlance:
                     slow.append((job_id, node, "temporal"))
         return GlanceVerdict(slow_nodes=slow, failed_nodes=failed)
 
-    # --- Eq. 1 ---------------------------------------------------------
+    # --- Eq. 1 (reference path) ---------------------------------------
     def _assess_spatial(self, snap: ClusterSnapshot, job_id: str) -> List[str]:
         # Assessed PER PHASE: the paper's P(N^J) averages ρ over all of a
         # job's tasks on the node, but map and reduce progress rates differ
@@ -171,7 +190,7 @@ class NeighborhoodGlance:
                 self._spatial_streak.pop(key, None)
         return out
 
-    # --- Eq. 2–3 -------------------------------------------------------
+    # --- Eq. 2–3 (reference path) -------------------------------------
     def _assess_temporal(self, snap: ClusterSnapshot, job_id: str) -> List[str]:
         n = len(self.node_ids)
         cur: Dict[str, float] = {}
@@ -185,12 +204,13 @@ class NeighborhoodGlance:
                     node_of[a.attempt_id] = self.node_index[a.node_id]
         prev = self._temporal.get(job_id)
         if prev is None:
-            self._temporal[job_id] = (snap.now, cur, [])
+            self._temporal[job_id] = {
+                "k": 0, "t": snap.now, "prog": cur, "hist": []}
             return []
-        t_prev, prev_prog, history = prev
-        dt = snap.now - t_prev
+        dt = snap.now - prev["t"]
         if dt < self.cfg.temporal_period:
             return []
+        prev_prog, history = prev["prog"], prev["hist"]
         # ζ delta per node over attempts alive at both samples.
         zeta_now = np.full(n, np.nan)
         zeta_prev = np.full(n, np.nan)
@@ -203,7 +223,16 @@ class NeighborhoodGlance:
                 zeta_prev[i] = 0.0
             zeta_now[i] += p
             zeta_prev[i] += prev_prog[aid]
-        # Peak-hold reference: the max Δ over the recent window.
+        slow_mask, delta_now = self._temporal_step(
+            history, zeta_now, zeta_prev, dt)
+        prev.update(k=prev["k"] + 1, t=snap.now, prog=cur)
+        return [self.node_ids[i] for i in np.flatnonzero(slow_mask)]
+
+    def _temporal_step(self, history: List[np.ndarray], zeta_now, zeta_prev,
+                       dt: float):
+        """Shared Eq. 2–3 core: peak-hold reference over the recent window,
+        strict-ratio slowdown test, history update."""
+        n = len(self.node_ids)
         if history:
             stacked = np.stack(history)
             any_valid = ~np.isnan(stacked).all(axis=0)
@@ -216,32 +245,32 @@ class NeighborhoodGlance:
             threshold_slowdown=self.cfg.threshold_slowdown)
         history.append(delta_now)
         del history[:-self.cfg.temporal_window]
-        self._temporal[job_id] = (snap.now, cur, history)
-        return [self.node_ids[i] for i in np.flatnonzero(slow_mask)]
+        return slow_mask, delta_now
 
-    # --- Eq. 4 ---------------------------------------------------------
+    # --- Eq. 4 (reference path) ---------------------------------------
     def _assess_failure(self, snap: ClusterSnapshot) -> List[str]:
         newly_failed: List[str] = []
         for nid, node in snap.nodes.items():
-            if nid not in self.node_index:
+            i = self.node_index.get(nid)
+            if i is None:
                 continue
             silent = snap.now - node.last_heartbeat
-            lost_at = self._lost_since[nid]
+            lost_at = self._lost[i]
             if silent <= self.cfg.responsive_window:  # responsive this tick
-                if lost_at is not None:
+                if not np.isnan(lost_at):
                     # A resuming heartbeat from a previously lost node:
                     # record the outage duration R_n and adapt (Eq. 4).
                     outage = snap.now - lost_at
                     self._record_outage(nid, outage)
-                    self._lost_since[nid] = None
-                self._declared_failed.discard(nid)
+                    self._lost[i] = np.nan
+                self._declared[i] = False
                 continue
-            if lost_at is None:
-                self._lost_since[nid] = node.last_heartbeat
-            if nid in self._declared_failed or node.marked_failed:
+            if np.isnan(lost_at):
+                self._lost[i] = node.last_heartbeat
+            if self._declared[i] or node.marked_failed:
                 continue
-            if silent > self._thresholds[nid]:
-                self._declared_failed.add(nid)
+            if silent > self._thresholds[i]:
+                self._declared[i] = True
                 newly_failed.append(nid)
         return newly_failed
 
@@ -252,12 +281,151 @@ class NeighborhoodGlance:
         del hist[:-L]
         est = M.eq4_estimate_np(hist, L)
         if est is not None:
-            self._thresholds[node_id] = float(np.clip(
+            self._thresholds[self.node_index[node_id]] = float(np.clip(
                 est * self.cfg.fail_threshold_margin,
                 self.cfg.fail_threshold_min, self.cfg.fail_threshold_max))
 
     # Substrate hook: a node confirmed dead externally resets its streak so a
     # replacement with the same id starts from the configured default.
     def reset_node(self, node_id: str) -> None:
-        self._lost_since[node_id] = None
-        self._declared_failed.discard(node_id)
+        i = self.node_index[node_id]
+        self._lost[i] = np.nan
+        self._declared[i] = False
+
+    # ==================================================================
+    # Vectorized path (columnar snapshots)
+    # ==================================================================
+    def _assess_arrays(self, snap: ClusterSnapshot, arr) -> GlanceVerdict:
+        now = snap.now
+        failed = (self._assess_failure_arrays(now, arr)
+                  if self.cfg.enable_failure else [])
+        active = arr.active_jobs()
+        J = len(active)
+        spatial_fire = temporal_fire = None
+        if J and (self.cfg.enable_spatial or self.cfg.enable_temporal):
+            # One shared candidate extraction: attempt RUNNING ∧ task
+            # RUNNING ∧ job active, rows in canonical reference order.
+            rows = arr.running_rows(now)
+            prog = arr.progress_at(now, rows)
+            jl = arr.job_local_map(active)[arr.job[rows]]
+            if self.cfg.enable_spatial:
+                spatial_fire = self._spatial_arrays(
+                    now, arr, rows, prog, jl, active)
+            if self.cfg.enable_temporal:
+                temporal_fire = self._temporal_arrays(
+                    now, arr, rows, prog, jl, active)
+        slow: List[Tuple[str, str, str]] = []
+        for pos, (jid, _jidx) in enumerate(active):
+            if spatial_fire is not None:
+                for i in np.flatnonzero(spatial_fire[pos]):
+                    slow.append((jid, self.node_ids[i], "spatial"))
+            if temporal_fire is not None:
+                for i in np.flatnonzero(temporal_fire[pos]):
+                    slow.append((jid, self.node_ids[i], "temporal"))
+        return GlanceVerdict(slow_nodes=slow, failed_nodes=failed)
+
+    # --- Eq. 1, all jobs × both phases in one segmented pass -----------
+    def _spatial_arrays(self, now: float, arr, rows, prog, jl,
+                        active) -> np.ndarray:
+        n = len(self.node_ids)
+        J = len(active)
+        fired = np.zeros((J * 2, n), dtype=bool)
+        if len(rows):
+            rt = np.maximum(now - arr.start[rows], 1e-9)
+            rho = prog / rt
+            seg = (jl * 2 + arr.kind[rows]) * n + arr.node[rows]
+            # bincount accumulates sequentially in input order — the same
+            # partial-sum order as the reference append loops.
+            sums = np.bincount(seg, weights=rho, minlength=J * 2 * n)
+            counts = np.bincount(seg, minlength=J * 2 * n).astype(float)
+            with np.errstate(invalid="ignore"):
+                P = np.where(counts > 0, sums / np.maximum(counts, 1.0),
+                             np.nan).reshape(J * 2, n)
+            fired = M.spatial_slow_mask_batch_np(P, self._neighborhoods)
+        hits = fired.reshape(J, 2, n).any(axis=1)
+        fire = np.zeros((J, n), dtype=bool)
+        for pos, (jid, _jidx) in enumerate(active):
+            streak = self._v_streak.get(jid)
+            if streak is None:
+                streak = np.zeros(n, dtype=np.int64)
+                self._v_streak[jid] = streak
+            streak[:] = np.where(hits[pos], streak + 1, 0)
+            fire[pos] = streak >= self.cfg.spatial_consecutive
+        if len(self._v_streak) > 2 * J + 16:  # shed completed jobs' state
+            keep = {jid for jid, _ in active}
+            self._v_streak = {j: s for j, s in self._v_streak.items()
+                              if j in keep}
+        return fire
+
+    # --- Eq. 2–3, per-attempt work batched across all sampled jobs -----
+    def _temporal_arrays(self, now: float, arr, rows, prog, jl,
+                         active) -> np.ndarray:
+        n = len(self.node_ids)
+        J = len(active)
+        fire = np.zeros((J, n), dtype=bool)
+        mark = arr.scratch("glance_tmark", np.int64, -1)
+        tprog = arr.scratch("glance_tprog", np.float64, np.nan)
+        init_flag = np.zeros(J, dtype=bool)
+        samp_flag = np.zeros(J, dtype=bool)
+        prevk = np.full(J, -2, dtype=np.int64)
+        states = []
+        for pos, (jid, _jidx) in enumerate(active):
+            st = self._temporal.get(jid)
+            if st is None:
+                st = {"k": 0, "t": now, "hist": []}
+                self._temporal[jid] = st
+                init_flag[pos] = True
+            elif now - st["t"] >= self.cfg.temporal_period:
+                samp_flag[pos] = True
+                prevk[pos] = st["k"]
+            states.append(st)
+        if len(rows):
+            # Sampled jobs: ζ sums by (job, node) over attempts alive at
+            # both samples, one np.add.at pass for every job at once.
+            smask = samp_flag[jl]
+            srows, sprog, sjl = rows[smask], prog[smask], jl[smask]
+            alive = mark[srows] == prevk[sjl]
+            arows, ajl = srows[alive], sjl[alive]
+            seg = ajl * n + arr.node[arows]
+            zn = np.bincount(seg, weights=sprog[alive], minlength=J * n)
+            zp = np.bincount(seg, weights=tprog[arows], minlength=J * n)
+            cnt = np.bincount(seg, minlength=J * n)
+            zeta_now = np.where(cnt > 0, zn, np.nan).reshape(J, n)
+            zeta_prev = np.where(cnt > 0, zp, np.nan).reshape(J, n)
+            # Record this sample's per-attempt ζ (sampled + newly seen jobs).
+            wmask = smask | init_flag[jl]
+            wrows = rows[wmask]
+            newk = np.where(samp_flag, prevk + 1, 0)
+            mark[wrows] = newk[jl[wmask]]
+            tprog[wrows] = prog[wmask]
+        else:
+            zeta_now = np.full((J, n), np.nan)
+            zeta_prev = np.full((J, n), np.nan)
+        for pos in np.flatnonzero(samp_flag):
+            st = states[pos]
+            dt = now - st["t"]
+            slow_mask, _ = self._temporal_step(
+                st["hist"], zeta_now[pos], zeta_prev[pos], dt)
+            st["k"] += 1
+            st["t"] = now
+            fire[pos] = slow_mask
+        return fire
+
+    # --- Eq. 4, whole-cluster array ops --------------------------------
+    def _assess_failure_arrays(self, now: float, arr) -> List[str]:
+        silent = now - arr.node_hb
+        resp = silent <= self.cfg.responsive_window
+        resumed = resp & ~np.isnan(self._lost)
+        for i in np.flatnonzero(resumed):
+            # A resuming heartbeat from a previously lost node (rare):
+            # record the outage duration R_n and adapt (Eq. 4).
+            self._record_outage(self.node_ids[i], now - self._lost[i])
+        self._lost[resp] = np.nan
+        self._declared[resp] = False
+        ns = ~resp
+        newlost = ns & np.isnan(self._lost)
+        self._lost[newlost] = arr.node_hb[newlost]
+        cand = ns & ~self._declared & ~arr.node_marked \
+            & (silent > self._thresholds)
+        self._declared[cand] = True
+        return [self.node_ids[i] for i in np.flatnonzero(cand)]

@@ -27,6 +27,7 @@ import numpy as np
 __all__ = [
     "node_progress_rate_np",
     "spatial_slow_mask_np",
+    "spatial_slow_mask_batch_np",
     "temporal_slow_mask_np",
     "eq4_estimate_np",
     "eq4_estimate_weights",
@@ -74,6 +75,28 @@ def spatial_slow_mask_np(P: np.ndarray, neighborhoods: np.ndarray
             / np.maximum(cnt, 1)
     std = np.sqrt(var)
     # Need ≥2 live neighbors for variation to be meaningful, and a live P.
+    ok = (cnt >= 2) & ~np.isnan(P)
+    return ok & (P < (mean - std))
+
+
+def spatial_slow_mask_batch_np(P: np.ndarray, neighborhoods: np.ndarray
+                               ) -> np.ndarray:
+    """Eq. 1 batched over assessment groups: ``P`` is (groups, n_nodes) —
+    one row per (job, phase) — and the result is (groups, n_nodes).
+
+    Operation-for-operation identical to :func:`spatial_slow_mask_np`
+    applied per row (same nansum element order, same clip constants), so
+    the vectorized glance path is bit-equivalent to the per-job reference
+    loop (DESIGN.md §11.3).
+    """
+    Pn = P[:, neighborhoods]                   # (g, n, k)
+    valid = ~np.isnan(Pn)
+    cnt = valid.sum(axis=2)
+    with np.errstate(invalid="ignore"):
+        mean = np.nansum(Pn, axis=2) / np.maximum(cnt, 1)
+        var = np.nansum((Pn - mean[:, :, None]) ** 2 * valid, axis=2) \
+            / np.maximum(cnt, 1)
+    std = np.sqrt(var)
     ok = (cnt >= 2) & ~np.isnan(P)
     return ok & (P < (mean - std))
 

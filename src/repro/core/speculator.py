@@ -69,6 +69,9 @@ class YarnLateSpeculator(Speculator):
         self._spec_count: Dict[str, int] = {}
 
     def assess(self, snap: ClusterSnapshot) -> List[Action]:
+        arr = getattr(snap, "arrays", None)
+        if arr is not None:
+            return self._assess_arrays(snap, arr)
         actions: List[Action] = []
         # Kill redundant attempts whose sibling finished (standard YARN).
         # Only for tasks still COMPLETED — a re-activated producer's fresh
@@ -135,10 +138,81 @@ class YarnLateSpeculator(Speculator):
         self._last_launch.pop(job_id, None)
         self._spec_count.pop(job_id, None)
 
+    # --- vectorized path (columnar snapshots, DESIGN.md §11) ----------
+    def _assess_arrays(self, snap: ClusterSnapshot, arr) -> List[Action]:
+        actions: List[Action] = [
+            KillAttempt(arr.attempt_ids[r], "sibling completed")
+            for r in arr.reap_rows()]
+        for jid, jidx in arr.active_jobs():
+            action = self._assess_job_arrays(snap.now, arr, jid, jidx)
+            if action is not None:
+                actions.append(action)
+        return actions
+
+    def _assess_job_arrays(self, now: float, arr, job_id: str,
+                           job_idx: int) -> Optional[SpeculateTask]:
+        from repro.core.arrays import A_RUNNING, T_RUNNING
+        last = self._last_launch.get(job_id, -1e18)
+        if now - last < self.cfg.launch_delay:
+            return None  # serial speculation with fixed delay
+        n_total = arr.job_task_count(job_idx)
+        if self._spec_count.get(job_id, 0) >= max(
+                1, int(self.cfg.speculative_cap * n_total)):
+            return None
+        m = arr.active[:arr.n] & (arr.job[:arr.n] == job_idx) \
+            & (arr.a_state[:arr.n] == A_RUNNING) \
+            & (arr.t_state[:arr.n] == T_RUNNING)
+        rows = arr.rows_where(m)
+        if len(rows) < 2:
+            return None
+        # Segment per task (rows are canonical, so task segments are
+        # contiguous); per task pick the max-progress running attempt,
+        # first-wins on ties — exactly Python's max() over attempt order.
+        torder = arr.skey[rows] >> 20
+        starts, inv = arr.task_segments(torder)
+        has_spec = np.bincount(inv, weights=arr.spec[rows],
+                               minlength=len(starts)) > 0
+        prog = arr.progress_at(now, rows)
+        segmax = np.maximum.reduceat(prog, starts)
+        cand = np.flatnonzero(prog == segmax[inv])
+        _, first = np.unique(inv[cand], return_index=True)
+        best = cand[first]                      # one row-position per task
+        ok = ~has_spec & (now - arr.start[rows[best]] >= self.cfg.min_runtime)
+        sel = best[ok]
+        if len(sel) < 2:
+            # LATE needs variation among tasks to rank stragglers — with
+            # zero or one candidate there is nothing to compare against
+            # (the scope-limited myopia, faithfully reproduced).
+            return None
+        p = prog[sel]
+        rho = p / np.maximum(now - arr.start[rows[sel]], 1e-9)
+        est_remaining = (1.0 - p) / np.maximum(rho, 1e-9)
+        thresh = np.percentile(rho, self.cfg.slow_task_percentile)
+        slow = np.flatnonzero(rho < thresh)
+        if not len(slow):
+            return None
+        victim_row = rows[sel][slow[np.argmax(est_remaining[slow])]]
+        self._last_launch[job_id] = now
+        self._spec_count[job_id] = self._spec_count.get(job_id, 0) + 1
+        return SpeculateTask(task_id=arr.task_ids[victim_row], reason="late")
+
 
 # ---------------------------------------------------------------------------
 # Binocular speculation
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _StragglerTask:
+    """The slice of the TaskView protocol the collective planner reads —
+    lets the columnar path hand it stragglers without building views."""
+
+    task_id: str
+    job_id: str
+    _has_spec: bool = False
+
+    def has_speculative_running(self) -> bool:
+        return self._has_spec
+
+
 @dataclasses.dataclass(frozen=True)
 class BinoConfig:
     glance: GlanceConfig = dataclasses.field(default_factory=GlanceConfig)
@@ -183,22 +257,13 @@ class BinocularSpeculator(Speculator):
             snap, snap.fetch_failures)
 
         # 3. Straggler set: running tasks on slow/failed nodes.
-        stragglers: List[Tuple[TaskView, Optional[str], str]] = []
-        seen: Set[str] = set()
-        for t in snap.tasks.values():
-            if t.state != TaskState.RUNNING:
-                continue
-            for a in t.running_attempts():
-                if t.task_id in seen:
-                    break
-                if a.node_id in failed:
-                    stragglers.append((t, a.node_id, "glance:failure"))
-                    seen.add(t.task_id)
-                elif a.node_id in slow_by_node:
-                    stragglers.append(
-                        (t, a.node_id,
-                         "glance:" + slow_by_node[a.node_id]))
-                    seen.add(t.task_id)
+        arr = getattr(snap, "arrays", None)
+        if arr is not None:
+            stragglers = self._stragglers_arrays(
+                snap, arr, failed, slow_by_node)
+        else:
+            stragglers = self._stragglers_reference(
+                snap, failed, slow_by_node)
 
         # 4. Collective ramp over the straggler wave, neighborhood-first.
         nh = {n: self.glance.neighbors_of(n) for n in
@@ -219,6 +284,81 @@ class BinocularSpeculator(Speculator):
         # 6. Reap siblings of completed attempts.
         actions.extend(self.collective.reap_completed(snap))
         return actions
+
+    # ------------------------------------------------------------------
+    # Straggler extraction: first running attempt of a RUNNING task that
+    # sits on a slow/failed node decides the task's victim node + reason.
+    # ------------------------------------------------------------------
+    def _stragglers_reference(
+        self, snap: ClusterSnapshot, failed: Set[str],
+        slow_by_node: Dict[str, str],
+    ) -> List[Tuple[TaskView, Optional[str], str]]:
+        stragglers: List[Tuple[TaskView, Optional[str], str]] = []
+        seen: Set[str] = set()
+        for t in snap.tasks.values():
+            if t.state != TaskState.RUNNING:
+                continue
+            for a in t.running_attempts():
+                if t.task_id in seen:
+                    break
+                if a.node_id in failed:
+                    stragglers.append((t, a.node_id, "glance:failure"))
+                    seen.add(t.task_id)
+                elif a.node_id in slow_by_node:
+                    stragglers.append(
+                        (t, a.node_id,
+                         "glance:" + slow_by_node[a.node_id]))
+                    seen.add(t.task_id)
+        return stragglers
+
+    def _stragglers_arrays(
+        self, snap: ClusterSnapshot, arr, failed: Set[str],
+        slow_by_node: Dict[str, str],
+    ) -> List[Tuple["_StragglerTask", Optional[str], str]]:
+        """Columnar straggler extraction. On a healthy tick (no slow or
+        failed nodes — the common case) this is a no-op; otherwise the
+        first-bad-attempt-per-task pick and the speculative-sibling check
+        are segmented reductions, and the collective planner receives
+        lightweight task shims instead of materialized TaskViews."""
+        from repro.core.arrays import A_RUNNING, T_RUNNING
+        bad = failed | set(slow_by_node)
+        if not bad:
+            return []
+        nodemask = np.zeros(len(arr.node_ids), dtype=bool)
+        for nid in bad:
+            nodemask[arr.node_index[nid]] = True
+        rows = arr.running_rows(snap.now)  # all running attempts, canonical
+        if not len(rows):
+            return []
+        on_bad = nodemask[arr.node[rows]]
+        brows = rows[on_bad]
+        if not len(brows):
+            return []
+        # Victim attempt = first bad-node running attempt per task in
+        # canonical order — exactly the reference scan's pick. Rows are
+        # sorted by task, so segment starts are the per-task firsts,
+        # already in task order.
+        torder = arr.skey[rows] >> 20
+        btorder = torder[on_bad]
+        bstarts, _binv = arr.task_segments(btorder)
+        vrows = brows[bstarts]
+        # has_speculative_running per straggler task, over ALL of the
+        # task's running attempts (not just the bad-node ones).
+        starts, inv = arr.task_segments(torder)
+        has_spec = np.bincount(inv, weights=arr.spec[rows],
+                               minlength=len(starts)) > 0
+        vspec = has_spec[np.searchsorted(torder[starts], btorder[bstarts])]
+        stragglers: List[Tuple[_StragglerTask, Optional[str], str]] = []
+        for r, hs in zip(vrows, vspec):
+            nid = arr.node_ids[arr.node[r]]
+            if nid in failed:
+                reason = "glance:failure"
+            else:
+                reason = "glance:" + slow_by_node[nid]
+            stragglers.append((_StragglerTask(
+                arr.task_ids[r], arr.job_ids[arr.job[r]], bool(hs)),
+                nid, reason))
+        return stragglers
 
     # ------------------------------------------------------------------
     # Substrate hooks

@@ -107,13 +107,24 @@ class FetchFailure:
 
 @dataclasses.dataclass
 class ClusterSnapshot:
-    """Immutable coordinator view handed to a speculator on each tick."""
+    """Immutable coordinator view handed to a speculator on each tick.
+
+    When the substrate maintains a columnar mirror of the same state
+    (``repro.core.arrays.ArraySnapshot``), it is attached as ``arrays`` and
+    the policies take their vectorized assessment paths; ``nodes``/``tasks``
+    may then be lazy mappings that materialize views only on access, so the
+    per-object protocol keeps working unchanged (DESIGN.md §11.2). With
+    ``arrays is None`` (the live runtime coordinator, unit tests) every
+    policy uses the per-object reference path.
+    """
 
     now: float
     nodes: Mapping[str, NodeView]
     tasks: Mapping[str, TaskView]
     # Fetch failures since the previous snapshot (cleared by the substrate).
     fetch_failures: Sequence[FetchFailure] = ()
+    # Optional columnar mirror (repro.core.arrays.ArraySnapshot).
+    arrays: Optional[object] = None
 
     def job_tasks(self, job_id: str) -> List[TaskView]:
         return [t for t in self.tasks.values() if t.job_id == job_id]

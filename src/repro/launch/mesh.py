@@ -10,7 +10,18 @@ import math
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax ≥ 0.5; older releases default every axis to Auto anyway
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -23,9 +34,8 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"need {n} devices for mesh {shape}, have {len(devices)} — "
             "the dry-run entry point must set "
             "xla_force_host_platform_device_count before any jax import")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices,
+                         **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str],
@@ -33,9 +43,8 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str],
     """Arbitrary mesh for tests/examples (e.g. (1,1) on one CPU device)."""
     n = math.prod(shape)
     devices = list(jax.devices() if devices is None else devices)[:n]
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices)
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices,
+                         **_axis_type_kwargs(len(axes)))
 
 
 # v5e hardware constants (roofline denominators).

@@ -23,10 +23,13 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import time
+from collections.abc import Mapping as _Mapping
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.arrays import SHUFFLE_FRACTION, ArraySnapshot
 from repro.core.rollback import ProgressLog
 from repro.core.speculator import BinocularSpeculator, Speculator
 from repro.core.types import (
@@ -83,17 +86,20 @@ class SimParams:
 BINO_PARAMS = SimParams(fetch_cycle=60.0)
 
 
-_SHUFFLE_FRAC = 1.0 / 3.0  # reduce progress: 1/3 shuffle, 2/3 sort+reduce
+# Reduce progress split (1/3 shuffle, 2/3 sort+reduce). Single source of
+# truth lives next to the columnar progress query it must mirror exactly.
+_SHUFFLE_FRAC = SHUFFLE_FRACTION
 
 
 class SimAttempt:
-    _ids = itertools.count()
-
     def __init__(self, sim: "Simulation", task: "SimTask", node_id: str,
                  *, speculative: bool, rollback: bool, start_offset: float):
         self.sim = sim
         self.task = task
-        self.attempt_id = f"{task.task_id}_a{next(SimAttempt._ids)}"
+        # Per-simulation counter (not process-global): attempt ids are then
+        # reproducible run-to-run, so action traces from two simulations in
+        # one process can be compared verbatim (the equivalence gate).
+        self.attempt_id = f"{task.task_id}_a{next(sim._attempt_seq)}"
         self.node_id = node_id
         self.state = AttemptState.RUNNING
         self.start_time = sim.engine.now
@@ -114,6 +120,8 @@ class SimAttempt:
         self.compute_started = False
         self.failed_cycles = 0  # shuffle failure cycles burned (reduce)
         self.end_time: Optional[float] = None  # completion/failure/kill
+        # Columnar mirror row (−1 when the sim runs without ArraySnapshot).
+        self.row = -1
 
     # ------------------------------------------------------------------
     @property
@@ -121,6 +129,11 @@ class SimAttempt:
         return self.sim.cluster.nodes[self.node_id]
 
     def sync(self) -> None:
+        """Fold linear work accrual into ``work_done`` — called at EVENTS
+        only (milestones, speed changes, completion), never on reads.
+        Keeping reads pure means the simulation's float state is identical
+        no matter how often progress is observed, which is what lets the
+        columnar mirror stay bit-equal to the object fields."""
         if self.state != AttemptState.RUNNING:
             return  # progress (and last_sync) frozen at end state
         now = self.sim.engine.now
@@ -128,14 +141,26 @@ class SimAttempt:
             self.work_done += (now - self.last_sync) * self.node.speed
             self.work_done = min(self.work_done, self.work_total)
         self.last_sync = now
+        if self.row >= 0:
+            self.sim.arrays.sync_row(self.row, self.work_done, self.last_sync)
+
+    def _work_done_now(self) -> float:
+        """Pure read of current work: accrual projected from the last
+        event fold, without mutating it."""
+        if self.state == AttemptState.RUNNING and (
+                self.task.kind == TaskKind.MAP or self.compute_started):
+            now = self.sim.engine.now
+            return min(self.work_done + (now - self.last_sync)
+                       * self.node.speed, self.work_total)
+        return self.work_done
 
     def progress(self) -> float:
-        self.sync()
+        wd = self._work_done_now()
         if self.task.kind == TaskKind.MAP:
-            return self.work_done / self.work_total
+            return wd / self.work_total
         n_deps = max(1, len(self.task.deps))
         shuffle = len(self.fetched) / n_deps
-        compute = self.work_done / self.work_total
+        compute = wd / self.work_total
         return _SHUFFLE_FRAC * shuffle + (1 - _SHUFFLE_FRAC) * compute
 
     def view(self) -> AttemptView:
@@ -155,6 +180,9 @@ class SimTask:
         self.job = job
         self.kind = kind
         self.index = index
+        # Global creation order — the canonical sort key of the columnar
+        # rows (matches the reference snapshot's task iteration order).
+        self.order = next(sim._task_seq)
         self.task_id = f"{job.spec.job_id}_{kind.value}{index:04d}"
         self.work_seconds = work_seconds
         self.deps = deps
@@ -225,17 +253,100 @@ class LaunchRequest:
     reason: str = ""
 
 
+class _LazyTasks(_Mapping):
+    """Materializes ``TaskView`` objects one key at a time.
+
+    The vectorized policies read ``snap.arrays`` and touch this mapping
+    only for the rare straggler/dependency cases, so a healthy assessment
+    tick allocates no views at all; the per-object reference policies can
+    still iterate it and see exactly the eager snapshot (same key order:
+    active jobs in submission order, each job's maps then reduces)."""
+
+    def __init__(self, sim: "Simulation"):
+        self._sim = sim
+        self._cache: Dict[str, TaskView] = {}
+        self._keys: Optional[List[str]] = None
+
+    def __getitem__(self, task_id: str) -> TaskView:
+        v = self._cache.get(task_id)
+        if v is None:
+            t = self._sim._task_index.get(task_id)
+            if t is None or t.job.spec.job_id not in self._sim.active_jobs:
+                raise KeyError(task_id)
+            v = t.view()
+            self._cache[task_id] = v
+        return v
+
+    def _key_list(self) -> List[str]:
+        if self._keys is None:
+            self._keys = [t.task_id
+                          for job in self._sim.active_jobs.values()
+                          for t in job.tasks]
+        return self._keys
+
+    def __iter__(self):
+        return iter(self._key_list())
+
+    def __len__(self) -> int:
+        return len(self._key_list())
+
+
+class _LazyNodes(_Mapping):
+    def __init__(self, sim: "Simulation"):
+        self._sim = sim
+        self._cache: Dict[str, NodeView] = {}
+
+    def __getitem__(self, node_id: str) -> NodeView:
+        v = self._cache.get(node_id)
+        if v is None:
+            n = self._sim.cluster.nodes[node_id]
+            v = NodeView(
+                node_id=node_id, last_heartbeat=n.last_heartbeat,
+                total_containers=n.n_containers,
+                free_containers=n.free_containers,
+                marked_failed=node_id in self._sim._marked_failed)
+            self._cache[node_id] = v
+        return v
+
+    def __iter__(self):
+        return iter(self._sim.cluster.node_ids)
+
+    def __len__(self) -> int:
+        return len(self._sim.cluster.node_ids)
+
+
 class Simulation:
-    """One cluster + one speculation policy + any number of jobs."""
+    """One cluster + one speculation policy + any number of jobs.
+
+    ``columnar=True`` (the default) maintains an incremental
+    :class:`~repro.core.arrays.ArraySnapshot` mirror of attempt/node state
+    and hands the policies lazy snapshots, activating their vectorized
+    assessment paths; ``columnar=False`` rebuilds eager per-object
+    snapshots each tick — the reference path the equivalence tests compare
+    against. ``record_actions=True`` appends ``(time, repr(action))`` to
+    ``action_trace`` for those comparisons."""
 
     def __init__(self, *, policy: str = "yarn",
                  policy_factory: Optional[Callable[[Sequence[str]], Speculator]] = None,
                  n_workers: int = 20, n_containers: int = 8,
-                 params: Optional[SimParams] = None, seed: int = 0):
+                 params: Optional[SimParams] = None, seed: int = 0,
+                 columnar: bool = True, record_actions: bool = False):
         self.engine = Engine()
         self.cluster = Cluster(n_workers, n_containers)
         self.rng = np.random.default_rng(seed)
         self.policy_name = policy
+        self._attempt_seq = itertools.count()
+        self._task_seq = itertools.count()
+        self._task_index: Dict[str, SimTask] = {}
+        self.arrays: Optional[ArraySnapshot] = (
+            ArraySnapshot(self.cluster.node_ids, n_containers)
+            if columnar else None)
+        self.record_actions = record_actions
+        self.action_trace: List[Tuple[float, str]] = []
+        # Assessment-path profiling (benchmarks/perf_scale.py).
+        self.assess_ticks = 0
+        self.assess_wall = 0.0
+        self.actions_emitted = 0
         if params is None:
             params = BINO_PARAMS if policy == "bino" else SimParams()
         self.params = params
@@ -261,12 +372,26 @@ class Simulation:
     # ------------------------------------------------------------------
     # Lifecycle
     # ------------------------------------------------------------------
+    # --- columnar write-through helpers --------------------------------
+    def _arr_task_state(self, task: "SimTask") -> None:
+        arr = self.arrays
+        if arr is not None and task.attempts:
+            arr.set_task_state([a.row for a in task.attempts], task.state)
+
+    def _arr_node_free(self, node_id: str) -> None:
+        arr = self.arrays
+        if arr is not None:
+            arr.node_free[arr.node_index[node_id]] = \
+                self.cluster.nodes[node_id].free_containers
+
     def _start_background(self) -> None:
         if self._started:
             return
         self._started = True
         for nid in self.cluster.node_ids:
             self.cluster.nodes[nid].last_heartbeat = self.engine.now
+        if self.arrays is not None:
+            self.arrays.node_hb[:] = self.engine.now
         self.engine.after(self.params.heartbeat, self._heartbeat_tick)
         self.engine.after(self.params.spec_interval, self._speculator_tick)
         self.engine.after(self.params.expiry_check, self._expiry_tick)
@@ -280,6 +405,8 @@ class Simulation:
     def _launch_job(self, job: SimJob) -> None:
         self._start_background()
         self.active_jobs[job.spec.job_id] = job
+        if self.arrays is not None:
+            jidx = self.arrays.job_started(job.spec.job_id)
         for i in range(job.spec.n_maps):
             t = SimTask(self, job, TaskKind.MAP, i,
                         job.spec.map_work_seconds())
@@ -289,6 +416,10 @@ class Simulation:
             t = SimTask(self, job, TaskKind.REDUCE, i,
                         job.spec.reduce_work_seconds(), deps=map_ids)
             job.reduces.append(t)
+        for t in job.tasks:
+            self._task_index[t.task_id] = t
+            if self.arrays is not None:
+                self.arrays.task_created(jidx)
         def go():
             for t in job.maps:
                 self._enqueue(LaunchRequest(t))
@@ -310,6 +441,7 @@ class Simulation:
             # re-execution of a completed producer
             req.task.state = TaskState.RUNNING
             req.task.output_available = bool(req.task.output_nodes)
+            self._arr_task_state(req.task)
         self.pending.append(req)
 
     def _dispatch(self) -> None:
@@ -353,6 +485,17 @@ class Simulation:
         if req.speculative:
             task.job.n_spec_attempts += 1
         self.cluster.nodes[node_id].busy.add(a.attempt_id)
+        arr = self.arrays
+        if arr is not None:
+            a.row = arr.add_attempt(
+                a, a.attempt_id, task.task_id, task.order,
+                len(task.attempts) - 1,
+                arr.job_index[task.job.spec.job_id],
+                arr.node_index[node_id], task.kind, a.is_speculative,
+                a.start_time, a.work_done, a.work_total,
+                len(task.deps), task.state)
+            self._arr_task_state(task)
+            self._arr_node_free(node_id)
         if task.kind == TaskKind.MAP:
             self._schedule_map_milestone(a)
         else:
@@ -399,6 +542,8 @@ class Simulation:
             self._schedule_map_milestone(a)
             return
         a.work_done = max(a.work_done, frac * a.work_total)
+        if a.row >= 0:
+            self.arrays.sync_row(a.row, a.work_done, a.last_sync)
         if kind == "spill":
             a.node.spill_logs[a.task.task_id] = max(
                 a.node.spill_logs.get(a.task.task_id, 0.0), frac)
@@ -425,6 +570,10 @@ class Simulation:
         task.fetch_reports = 0
         if task.completed_at is None:
             task.completed_at = self.engine.now
+        if a.row >= 0:
+            self.arrays.set_attempt_state(a.row, a.state)
+            self._arr_task_state(task)
+            self._arr_node_free(a.node_id)
         self._kill_siblings(task, keep=a.attempt_id)
         # notify reducers (fresh MOF ⇒ waiting fetchers go again)
         for r in task.job.reduces:
@@ -496,6 +645,8 @@ class Simulation:
         if a.state != AttemptState.RUNNING:
             return
         a.fetched.add(m)
+        if a.row >= 0:
+            self.arrays.fetched[a.row] = len(a.fetched)
         if isinstance(self.speculator, BinocularSpeculator):
             self.speculator.note_fetch_ok(m)
         if len(a.fetched) == len(a.task.deps):
@@ -543,6 +694,9 @@ class Simulation:
     def _start_compute(self, a: SimAttempt) -> None:
         a.compute_started = True
         a.last_sync = self.engine.now
+        if a.row >= 0:
+            self.arrays.compute[a.row] = True
+            self.arrays.sync_row(a.row, a.work_done, a.last_sync)
         self._schedule_reduce_completion(a)
 
     def _schedule_reduce_completion(self, a: SimAttempt) -> None:
@@ -572,6 +726,10 @@ class Simulation:
         task.state = TaskState.COMPLETED
         if task.completed_at is None:
             task.completed_at = self.engine.now
+        if a.row >= 0:
+            self.arrays.set_attempt_state(a.row, a.state)
+            self._arr_task_state(task)
+            self._arr_node_free(a.node_id)
         self._kill_siblings(task, keep=a.attempt_id)
         self._check_job_done(task.job)
         self._dispatch()
@@ -584,6 +742,8 @@ class Simulation:
             return
         a.state = AttemptState.FAILED
         a.end_time = self.engine.now
+        if a.row >= 0:
+            self.arrays.set_attempt_state(a.row, a.state)
         self._teardown_attempt(a)
         task = a.task
         if task.state == TaskState.COMPLETED or task.job.done:
@@ -619,6 +779,8 @@ class Simulation:
             return
         a.state = AttemptState.KILLED
         a.end_time = self.engine.now
+        if a.row >= 0:
+            self.arrays.set_attempt_state(a.row, a.state)
         self._teardown_attempt(a)
 
     def _kill_siblings(self, task: SimTask, keep: str) -> None:
@@ -628,6 +790,7 @@ class Simulation:
 
     def _teardown_attempt(self, a: SimAttempt) -> None:
         a.node.busy.discard(a.attempt_id)
+        self._arr_node_free(a.node_id)
         if a._milestone is not None:
             a._milestone.cancel()
             a._milestone = None
@@ -655,6 +818,8 @@ class Simulation:
         if node_id in self._marked_failed:
             return
         self._marked_failed.add(node_id)
+        if self.arrays is not None:
+            self.arrays.node_marked[self.arrays.node_index[node_id]] = True
         if by_policy:
             self.policy_failed_calls.append((self.engine.now, node_id))
         node = self.cluster.nodes[node_id]
@@ -726,6 +891,8 @@ class Simulation:
         for a in hosted:
             a.sync()
         node.speed = speed
+        if self.arrays is not None:
+            self.arrays.node_speed[self.arrays.node_index[node_id]] = speed
         for a in hosted:
             if a.task.kind == TaskKind.MAP:
                 self._schedule_map_milestone(a)
@@ -740,6 +907,7 @@ class Simulation:
         self.truth_crashed.add(node_id)
         self.set_node_speed(node_id, 0.0)
         node.fail()
+        self._arr_node_free(node_id)
         # The crashed host's own in-flight fetches stall out silently.
         for a in self.attempts.values():
             if a.node_id == node_id and a.state == AttemptState.RUNNING:
@@ -768,6 +936,12 @@ class Simulation:
         node.last_heartbeat = self.engine.now
         self._marked_failed.discard(node_id)
         self.truth_crashed.discard(node_id)
+        if self.arrays is not None:
+            i = self.arrays.node_index[node_id]
+            self.arrays.node_speed[i] = node.speed
+            self.arrays.node_hb[i] = node.last_heartbeat
+            self.arrays.node_marked[i] = False
+            self.arrays.node_free[i] = node.free_containers
         if hasattr(self.speculator, "glance"):
             self.speculator.glance.reset_node(node_id)
         self._dispatch()
@@ -777,12 +951,17 @@ class Simulation:
     # ------------------------------------------------------------------
     def _heartbeat_tick(self) -> None:
         now = self.engine.now
-        for node in self.cluster.nodes.values():
+        arr = self.arrays
+        for i, node in enumerate(self.cluster.nodes.values()):
             if node.alive and not node.heartbeat_suppressed(now):
                 node.last_heartbeat = now
+                if arr is not None:
+                    arr.node_hb[i] = now
                 if node.node_id in self._marked_failed:
                     # transient outage misjudged as failure: NM rejoins
                     self._marked_failed.discard(node.node_id)
+                    if arr is not None:
+                        arr.node_marked[i] = False
         if self.active_jobs or len(self.results) < len(self.jobs):
             self.engine.after(self.params.heartbeat, self._heartbeat_tick)
 
@@ -798,8 +977,16 @@ class Simulation:
 
     def _speculator_tick(self) -> None:
         self._watchdog()
+        t0 = time.perf_counter()
         snap = self._snapshot()
         actions = self.speculator.assess(snap)
+        self.assess_wall += time.perf_counter() - t0
+        self.assess_ticks += 1
+        self.actions_emitted += len(actions)
+        if self.record_actions:
+            now = self.engine.now
+            for act in actions:
+                self.action_trace.append((now, repr(act)))
         self._fetch_failures.clear()
         for act in actions:
             if isinstance(act, MarkNodeFailed):
@@ -827,6 +1014,7 @@ class Simulation:
             if task.running_attempts():
                 return
             task.state = TaskState.RUNNING
+            self._arr_task_state(task)
             self._enqueue(LaunchRequest(
                 task, placement=act.placement_hint, reason=act.reason))
             return
@@ -855,16 +1043,18 @@ class Simulation:
     # Snapshot + bookkeeping
     # ------------------------------------------------------------------
     def _task(self, task_id: str) -> Optional[SimTask]:
-        job_id = task_id.rsplit("_", 1)[0]
-        job = self.jobs.get(job_id)
-        if job is None:
-            return None
-        for t in job.tasks:
-            if t.task_id == task_id:
-                return t
-        return None
+        return self._task_index.get(task_id)
 
     def _snapshot(self) -> ClusterSnapshot:
+        if self.arrays is not None:
+            # Columnar tick: the policies read the incrementally-maintained
+            # arrays; the mappings materialize per-object views only if a
+            # (rare) straggler/dependency path actually touches them.
+            return ClusterSnapshot(
+                now=self.engine.now, nodes=_LazyNodes(self),
+                tasks=_LazyTasks(self),
+                fetch_failures=tuple(self._fetch_failures),
+                arrays=self.arrays)
         nodes = {}
         for nid, n in self.cluster.nodes.items():
             nodes[nid] = NodeView(
@@ -879,6 +1069,45 @@ class Simulation:
         return ClusterSnapshot(
             now=self.engine.now, nodes=nodes, tasks=tasks,
             fetch_failures=tuple(self._fetch_failures))
+
+    def verify_arrays(self) -> None:
+        """Assert the incrementally-maintained columns equal a from-scratch
+        rebuild from the object state (the equivalence gate's second half;
+        tests call this mid-run after each event type)."""
+        arr = self.arrays
+        assert arr is not None, "simulation runs without columnar mirror"
+        from repro.core.arrays import ASTATE, KIND, TSTATE
+        for i, nid in enumerate(self.cluster.node_ids):
+            node = self.cluster.nodes[nid]
+            assert arr.node_hb[i] == node.last_heartbeat, nid
+            assert arr.node_speed[i] == node.speed, nid
+            assert arr.node_free[i] == node.free_containers, nid
+            assert bool(arr.node_marked[i]) == (nid in self._marked_failed), nid
+        expected = [(a, t, job) for job in self.active_jobs.values()
+                    for t in job.tasks for a in t.attempts]
+        live = arr.rows_where(arr.active[:arr.n])
+        assert len(live) == len(expected), (len(live), len(expected))
+        now = self.engine.now
+        prog = arr.progress_at(now, live)
+        for k, (r, (a, t, job)) in enumerate(zip(live, expected)):
+            assert arr.attempt_ids[r] == a.attempt_id
+            assert arr.task_ids[r] == t.task_id
+            assert a.row == r
+            assert arr.a_state[r] == ASTATE[a.state]
+            assert arr.t_state[r] == TSTATE[t.state]
+            assert arr.kind[r] == KIND[t.kind]
+            assert arr.job_ids[arr.job[r]] == job.spec.job_id
+            assert arr.node_ids[arr.node[r]] == a.node_id
+            assert bool(arr.spec[r]) == a.is_speculative
+            assert arr.start[r] == a.start_time
+            assert arr.work_done[r] == a.work_done
+            assert arr.work_total[r] == a.work_total
+            assert arr.last_sync[r] == a.last_sync
+            assert arr.fetched[r] == len(a.fetched)
+            assert arr.deps[r] == max(1, len(t.deps))
+            assert bool(arr.compute[r]) == a.compute_started
+            assert prog[k] == a.progress(), (a.attempt_id, prog[k],
+                                             a.progress())
 
     def _check_map_progress_triggers(self, job: SimJob) -> None:
         if not job.map_progress_triggers:
@@ -916,6 +1145,8 @@ class Simulation:
                 task_durations=durations)
             self.results.append(job.result)
             self.active_jobs.pop(job.spec.job_id, None)
+            if self.arrays is not None:
+                self.arrays.job_finished(job.spec.job_id)
             self.speculator.job_done(job.spec.job_id)
             # Prune the global attempt index (stress runs submit hundreds
             # of jobs; node_lost scans this dict).

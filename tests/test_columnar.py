@@ -1,0 +1,165 @@
+"""Equivalence gate for the columnar assessment path (DESIGN.md §11.3).
+
+Two halves:
+
+1. **Action equivalence** — seeded simulations under crash / delay /
+   MOF-loss faults must emit byte-identical action traces (and job
+   results) whether the policies assess per-object snapshots
+   (``columnar=False``, the seed reference path) or the incrementally
+   maintained ``ArraySnapshot`` columns.
+2. **Incremental maintenance** — mid-run, after every event type, the
+   columns must equal a from-scratch rebuild from the object state
+   (``Simulation.verify_arrays``).
+"""
+import numpy as np
+import pytest
+
+from repro.core.arrays import ArraySnapshot
+from repro.sim import JobSpec, Simulation, faults
+
+
+def _crash(sim, job):
+    faults.crash_busiest_node_at_map_progress(sim, job, 0.4)
+
+
+def _crash_restore(sim, job):
+    faults.crash_busiest_node_at_map_progress(sim, job, 0.3,
+                                              restore_after=90.0)
+
+
+def _delay(sim, job):
+    # benchmarks' delay scenario: slow the busiest node below the Eq. 3
+    # threshold for a while (victim chosen at fire time).
+    def fire():
+        counts = {}
+        for t in job.maps:
+            for a in t.running_attempts():
+                counts[a.node_id] = counts.get(a.node_id, 0) + 1
+        victim = max(sorted(counts), key=lambda n: counts[n]) \
+            if counts else sim.cluster.node_ids[0]
+        sim.set_node_speed(victim, 0.05)
+        sim.engine.after(150.0, sim.set_node_speed, victim, 1.0)
+    sim.engine.at(30.0, fire)
+
+
+def _mof(sim, job):
+    faults.lose_mof_at_map_progress(sim, job, 1.0)
+
+
+def _hb_outage(sim, job):
+    faults.heartbeat_outage_at(sim, sim.cluster.node_ids[3], 40.0, 25.0)
+
+
+def _run(policy, columnar, fault, seed=1, bench="terasort", gb=2.0,
+         extra_jobs=(), verify_at=()):
+    sim = Simulation(policy=policy, seed=seed, columnar=columnar,
+                     record_actions=True)
+    job = sim.submit(JobSpec("j0", bench, gb))
+    for spec in extra_jobs:
+        sim.submit(spec)
+    if fault is not None:
+        fault(sim, job)
+    for t in verify_at:
+        sim.engine.at(float(t), sim.verify_arrays)
+    results = sim.run()
+    return sim, results
+
+
+def _assert_equivalent(policy, fault, seed=1, bench="terasort", gb=2.0,
+                       extra_jobs=()):
+    ref, rres = _run(policy, False, fault, seed, bench, gb, extra_jobs)
+    col, cres = _run(policy, True, fault, seed, bench, gb, extra_jobs)
+    assert ref.action_trace == col.action_trace
+    assert [(r.job_id, r.finish_time, r.n_attempts, r.n_spec_attempts)
+            for r in rres] == \
+           [(r.job_id, r.finish_time, r.n_attempts, r.n_spec_attempts)
+            for r in cres]
+    assert col.action_trace, "scenario produced no actions — not probing"
+
+
+# ---------------------------------------------------------------------------
+# 1. Action-sequence equivalence on seeded faulted runs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["yarn", "bino"])
+@pytest.mark.parametrize("fault,seed", [
+    (_crash, 1), (_delay, 1), (_mof, 2)])
+def test_actions_identical_under_faults(policy, fault, seed):
+    _assert_equivalent(policy, fault, seed=seed)
+
+
+def test_actions_identical_crash_restore_eq4_learning():
+    # Exercises the Eq. 4 lost→resumed path (outage recording + adaptive
+    # threshold) and node restore bookkeeping.
+    _assert_equivalent("bino", _crash_restore, seed=3)
+
+
+def test_actions_identical_heartbeat_outage():
+    _assert_equivalent("bino", _hb_outage, seed=1)
+
+
+def test_actions_identical_multi_job():
+    extra = (JobSpec("j1", "wordcount", 1.0, submit_time=20.0),
+             JobSpec("j2", "grep", 1.0, submit_time=35.0))
+    _assert_equivalent("bino", _delay, seed=3, bench="aggregation",
+                       extra_jobs=extra)
+
+
+# ---------------------------------------------------------------------------
+# 2. Incremental maintenance equals from-scratch rebuild
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy,fault", [
+    ("bino", _crash_restore),   # crash, restore, rollback, kills
+    ("yarn", _mof),             # MOF loss, fetch-failure recovery
+    ("bino", _delay),           # speculation waves, sibling reaping
+])
+def test_incremental_matches_rebuild(policy, fault):
+    _, results = _run(policy, True, fault, seed=1,
+                      verify_at=range(10, 900, 17))
+    assert results  # the faulted job still finished
+
+
+def test_compaction_preserves_behavior_and_consistency():
+    # Force physical compaction mid-run (normally triggered only after
+    # thousands of dead rows) and require identical traces + consistency.
+    extra = (JobSpec("j1", "grep", 1.0, submit_time=15.0),)
+    ref, rres = _run("bino", False, _crash, 2, extra_jobs=extra)
+
+    sim = Simulation(policy="bino", seed=2, columnar=True,
+                     record_actions=True)
+    job = sim.submit(JobSpec("j0", "terasort", 2.0))
+    sim.submit(extra[0])
+    _crash(sim, job)
+
+    def compact_and_verify():
+        sim.arrays._compact()
+        sim.arrays._n_dead = 0
+        sim.verify_arrays()
+    for t in range(20, 600, 23):
+        sim.engine.at(float(t), compact_and_verify)
+    cres = sim.run()
+    assert ref.action_trace == sim.action_trace
+    assert [r.finish_time for r in rres] == [r.finish_time for r in cres]
+
+
+# ---------------------------------------------------------------------------
+# 3. ArraySnapshot unit behaviors
+# ---------------------------------------------------------------------------
+def test_task_segments_matches_unique():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        torder = np.sort(rng.integers(0, 12, size=rng.integers(0, 40)))
+        starts, inv = ArraySnapshot.task_segments(torder)
+        uniq, ustarts, uinv = np.unique(torder, return_index=True,
+                                        return_inverse=True)
+        assert np.array_equal(starts, ustarts)
+        assert np.array_equal(inv, uinv)
+        assert np.array_equal(torder[starts], uniq)
+
+
+def test_progress_matches_object_path_continuously():
+    # One seeded run; at every verification point the vectorized progress
+    # projection must equal a.progress() bit-for-bit (checked inside
+    # verify_arrays) — including reduce shuffle/compute mixing.
+    _, results = _run("bino", True, _mof, seed=1, bench="join",
+                      verify_at=range(5, 1200, 13))
+    assert results

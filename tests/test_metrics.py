@@ -2,6 +2,9 @@
 and analytic invariants."""
 import numpy as np
 import pytest
+# Property tests need hypothesis; a bare interpreter must still
+# collect this module (tier-1 runs without the [test] extra).
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import metrics as M

@@ -3,6 +3,9 @@ resolver is pure logic over mesh shapes)."""
 import jax
 import numpy as np
 import pytest
+# Property tests need hypothesis; a bare interpreter must still
+# collect this module (tier-1 runs without the [test] extra).
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
