@@ -4,19 +4,35 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench bench-perf bench-perf-full
+.PHONY: test lint bench bench-perf bench-perf-full
 
 test:
 	$(PY) -m pytest -x -q
 
+# Ruff config lives in pyproject.toml ([tool.ruff]). Scope = the layers
+# the shuffle refactor owns; widen as seed modules are modernized.
+# Degrades to a no-op warning where ruff isn't installed (the baked
+# container has no network; CI installs it).
+LINT_PATHS = src/repro/sim src/repro/core/arrays.py benchmarks \
+	examples/cluster_sim.py tests/test_shuffle.py tests/test_columnar.py
+
+lint:
+	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
+		$(PY) -m ruff check $(LINT_PATHS); \
+	else \
+		echo "ruff not installed; skipping lint (pip install ruff)"; \
+	fi
+
 bench:
 	$(PY) -m benchmarks.run
 
-# Scale trajectory: assessment ticks/sec at 20/100/500 nodes, columnar vs
-# per-object, appended into BENCH_scale.json. Quick mode keeps the wall
-# budget to a few minutes on a laptop-class machine.
+# Scale trajectory, appended into BENCH_scale.json: assessment ticks/sec
+# (perf_scale, columnar vs per-object) and end-to-end sim wall-clock
+# (perf_shuffle, event-driven vs rescan substrate) at 20/100/500 nodes.
+# Quick mode keeps the wall budget to a few minutes on a laptop-class
+# machine.
 bench-perf:
-	$(PY) -m benchmarks.run --only perf_scale --quick
+	$(PY) -m benchmarks.run --only perf_scale,perf_shuffle --quick
 
 bench-perf-full:
-	$(PY) -m benchmarks.run --only perf_scale
+	$(PY) -m benchmarks.run --only perf_scale,perf_shuffle

@@ -8,16 +8,68 @@ figures into one CSV.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from pathlib import Path
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.sim import JobSpec, faults
-from repro.sim.runner import run_single, slowdown
+from repro.sim.runner import slowdown
 
 Row = Tuple[str, float, str]
+
+_ROOT = Path(__file__).resolve().parent.parent
+BENCH_JSON = _ROOT / "BENCH_scale.json"
+
+# Shared shape of the perf_scale / perf_shuffle sweeps: both run the same
+# proportionally-sized job (so their BENCH_scale.json payloads compare),
+# differing only in what they measure.
+SCALE_SIZES_QUICK = (20, 100, 500)
+SCALE_SIZES_FULL = (20, 100, 500, 1000)
+SCALE_N_CONTAINERS = 8
+SCALE_SPLITS_PER_WORKER = 4    # job size scales with the cluster
+SCALE_SIM_SECONDS_QUICK = 120.0
+SCALE_SIM_SECONDS_FULL = 240.0
+
+
+def bench_quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def bench_json_update(name: str, payload: Dict, *, mode: str) -> Path:
+    """Merge one benchmark's latest payload into ``BENCH_scale.json``.
+
+    Schema 2 is a per-benchmark map with a shared bounded history:
+    ``{"schema": 2, "benchmarks": {name: payload}, "history": [...]}``.
+    The previous payload for ``name`` is pushed into history; a schema-1
+    file (PR 1's single perf_scale payload) is migrated in place."""
+    payload = dict(payload)
+    payload.update({"benchmark": name, "generated_unix": int(time.time()),
+                    "cpu_count": os.cpu_count(), "mode": mode})
+    doc = {"schema": 2, "benchmarks": {}, "history": []}
+    if BENCH_JSON.exists():
+        try:
+            prev = json.loads(BENCH_JSON.read_text())
+            if prev.get("schema") == 2:
+                doc["benchmarks"] = prev.get("benchmarks", {})
+                doc["history"] = prev.get("history", [])
+            else:  # schema 1: one perf_scale payload with embedded history
+                hist = prev.pop("history", [])
+                prev.setdefault("benchmark", "perf_scale")
+                doc["history"] = hist + [prev]
+        except (json.JSONDecodeError, OSError):
+            pass
+    old = doc["benchmarks"].get(name)
+    if old is not None:
+        doc["history"].append(old)
+    doc["history"] = doc["history"][-20:]
+    doc["benchmarks"][name] = payload
+    BENCH_JSON.write_text(json.dumps(doc, indent=2) + "\n")
+    return BENCH_JSON
+
 
 # Process fan-out for the sweep grids (benches × fracs × seeds). Each cell
 # is an independent deterministic simulation, so they parallelize

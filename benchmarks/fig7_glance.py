@@ -8,7 +8,6 @@
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List
 
 import numpy as np
@@ -18,7 +17,7 @@ from repro.core.speculator import BinoConfig, BinocularSpeculator
 from repro.sim import JobSpec, Simulation, faults
 from repro.sim.runner import slowdown
 
-from benchmarks.common import Row, crash_fault, delay_fault, vs_paper
+from benchmarks.common import Row, crash_fault, delay_fault
 
 
 def _bino_factory(glance: GlanceConfig):

@@ -20,42 +20,41 @@ Usage:
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import time
-from pathlib import Path
 from typing import Dict, List
 
-from benchmarks.common import Row
+from benchmarks.common import (
+    SCALE_N_CONTAINERS,
+    SCALE_SIM_SECONDS_FULL,
+    SCALE_SIM_SECONDS_QUICK,
+    SCALE_SIZES_FULL,
+    SCALE_SIZES_QUICK,
+    SCALE_SPLITS_PER_WORKER,
+    Row,
+    bench_json_update,
+    bench_quick,
+)
 from repro.sim.job import JobSpec
 from repro.sim.mapreduce import BINO_PARAMS, SimParams, Simulation
 
-SIZES_QUICK = (20, 100, 500)
-SIZES_FULL = (20, 100, 500, 1000)
-N_CONTAINERS = 8
-SPLITS_PER_WORKER = 4          # job size scales with the cluster
-SIM_SECONDS_QUICK = 120.0
-SIM_SECONDS_FULL = 240.0
-
-_ROOT = Path(__file__).resolve().parent.parent
-BENCH_JSON = _ROOT / "BENCH_scale.json"
-
-
-def _quick() -> bool:
-    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+# Acceptance gate (ISSUE 1): columnar assessment at least this much
+# faster than the per-object seed path at 500 nodes, for at least one
+# policy. Asserted, not just printed.
+GATE_SPEEDUP_500 = 10.0
 
 
 def measure(policy: str, n_workers: int, *, columnar: bool,
             sim_seconds: float, seed: int = 0) -> Dict:
     """Run one proportionally-sized job for ``sim_seconds`` of simulated
     time and report assessment-tick throughput."""
-    n_maps = SPLITS_PER_WORKER * n_workers
+    n_maps = SCALE_SPLITS_PER_WORKER * n_workers
     input_gb = n_maps / 8.0            # 8 × 128 MiB splits per GB
     spec = JobSpec("scale", "terasort", input_gb)
     base = BINO_PARAMS if policy == "bino" else SimParams()
     params = dataclasses.replace(base, sim_time_cap=sim_seconds)
     sim = Simulation(policy=policy, seed=seed, n_workers=n_workers,
-                     n_containers=N_CONTAINERS, params=params,
+                     n_containers=SCALE_N_CONTAINERS, params=params,
                      columnar=columnar)
     sim.submit(spec)
     t0 = time.perf_counter()
@@ -79,9 +78,10 @@ def measure(policy: str, n_workers: int, *, columnar: bool,
 
 
 def run() -> List[Row]:
-    quick = _quick()
-    sizes = SIZES_QUICK if quick else SIZES_FULL
-    sim_seconds = SIM_SECONDS_QUICK if quick else SIM_SECONDS_FULL
+    quick = bench_quick()
+    sizes = SCALE_SIZES_QUICK if quick else SCALE_SIZES_FULL
+    sim_seconds = SCALE_SIM_SECONDS_QUICK if quick \
+        else SCALE_SIM_SECONDS_FULL
     results: List[Dict] = []
     rows: List[Row] = []
     for n in sizes:
@@ -96,14 +96,17 @@ def run() -> List[Row]:
                 f"object={obj['ticks_per_s']:.1f}/s speedup={speedup:.1f}x"))
             if n == 500:
                 rows.append((f"perf_scale/{policy}_500n_speedup", speedup,
-                             "gate: >=10x over per-object seed path"))
+                             f"gate: >={GATE_SPEEDUP_500:g}x over "
+                             f"per-object seed path"))
+    at_500 = [r for r in rows if r[0].endswith("_500n_speedup")]
+    if at_500 and max(v for _, v, _ in at_500) < GATE_SPEEDUP_500:
+        raise AssertionError(
+            f"columnar 500-node speedup gate failed: "
+            f"{[(n_, v) for n_, v, _ in at_500]} all below "
+            f"{GATE_SPEEDUP_500}x")
     payload = {
-        "schema": 1,
-        "generated_unix": int(time.time()),
-        "cpu_count": os.cpu_count(),
-        "mode": "quick" if quick else "full",
         "sim_seconds": sim_seconds,
-        "splits_per_worker": SPLITS_PER_WORKER,
+        "splits_per_worker": SCALE_SPLITS_PER_WORKER,
         "results": results,
         "speedup_at_500": {
             p: round(
@@ -116,18 +119,9 @@ def run() -> List[Row]:
             for p in ("yarn", "bino")
         } if any(r["n_workers"] == 500 for r in results) else {},
     }
-    history = []
-    if BENCH_JSON.exists():
-        try:
-            prev = json.loads(BENCH_JSON.read_text())
-            history = prev.get("history", [])
-            prev.pop("history", None)
-            history.append(prev)
-        except (json.JSONDecodeError, OSError):
-            pass
-    payload["history"] = history[-20:]
-    BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
-    rows.append(("perf_scale/json", 1.0, str(BENCH_JSON)))
+    path = bench_json_update("perf_scale", payload,
+                             mode="quick" if quick else "full")
+    rows.append(("perf_scale/json", 1.0, str(path)))
     return rows
 
 

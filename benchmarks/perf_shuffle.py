@@ -1,0 +1,133 @@
+"""Shuffle-substrate scale benchmark: end-to-end simulation wall-clock vs
+cluster size, event-driven vs poll-and-rescan fetch selection.
+
+PR 1 made the assessment path columnar; the measured wall after that was
+the simulator's own shuffle bookkeeping (``_fetch_candidates`` rescanned a
+reducer's full dependency list per free fetch slot — O(n_maps) per slot,
+~2/3 of a 500-node run). This harness runs the same proportionally-sized
+job (4 map splits per worker) to *completion or the sim cap* under both
+shuffle engines and records whole-run wall-clock — the rescan row is the
+PR 1 baseline, the acceptance gate is ``event_speedup_500 ≥ 3``.
+
+Results land in ``BENCH_scale.json`` next to the ``perf_scale`` rows (the
+file is a per-benchmark map with a shared history; see ``_bench_json``).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.perf_shuffle [--quick] [--full]
+    PYTHONPATH=src python -m benchmarks.run --only perf_shuffle --quick
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import (
+    SCALE_N_CONTAINERS,
+    SCALE_SIM_SECONDS_FULL,
+    SCALE_SIM_SECONDS_QUICK,
+    SCALE_SIZES_FULL,
+    SCALE_SIZES_QUICK,
+    SCALE_SPLITS_PER_WORKER,
+    Row,
+    bench_json_update,
+    bench_quick,
+)
+from repro.sim.job import JobSpec
+from repro.sim.mapreduce import BINO_PARAMS, SimParams, Simulation
+
+# Acceptance gate (ISSUE 2): end-to-end 500-node wall-clock at least this
+# much faster than the PR 1 rescan substrate. Asserted, not just printed.
+GATE_SPEEDUP_500 = 3.0
+
+
+def measure(policy: str, n_workers: int, *, mode: str,
+            sim_seconds: float, seed: int = 0) -> Dict:
+    """One proportionally-sized job for ``sim_seconds`` of simulated time;
+    report whole-run wall-clock and the shuffle work counters."""
+    n_maps = SCALE_SPLITS_PER_WORKER * n_workers
+    spec = JobSpec("scale", "terasort", n_maps / 8.0)  # 8 splits per GB
+    base = BINO_PARAMS if policy == "bino" else SimParams()
+    params = dataclasses.replace(base, sim_time_cap=sim_seconds)
+    sim = Simulation(policy=policy, seed=seed, n_workers=n_workers,
+                     n_containers=SCALE_N_CONTAINERS, params=params,
+                     shuffle=mode)
+    sim.submit(spec)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    prof = sim.shuffle.profile
+    return {
+        "policy": policy,
+        "n_workers": n_workers,
+        "n_tasks": spec.n_maps + spec.reduces,
+        "mode": mode,
+        "sim_seconds": sim_seconds,
+        "wall_s": round(wall, 3),
+        "slots_filled": prof.slots_filled,
+        "selection_work": prof.selection_work,
+        "notifies": prof.notifies,
+        "slots_per_kwork": round(prof.slots_per_kwork(), 3),
+    }
+
+
+def run() -> List[Row]:
+    quick = bench_quick()
+    sizes = SCALE_SIZES_QUICK if quick else SCALE_SIZES_FULL
+    sim_seconds = SCALE_SIM_SECONDS_QUICK if quick \
+        else SCALE_SIM_SECONDS_FULL
+    results: List[Dict] = []
+    rows: List[Row] = []
+    speedup_at = {}
+    for n in sizes:
+        for policy in ("yarn", "bino"):
+            ev = measure(policy, n, mode="event", sim_seconds=sim_seconds)
+            rs = measure(policy, n, mode="rescan", sim_seconds=sim_seconds)
+            results.extend([ev, rs])
+            if ev["slots_filled"] != rs["slots_filled"]:
+                raise AssertionError(
+                    f"engines diverged at {policy}/{n}n: "
+                    f"event filled {ev['slots_filled']} fetch slots, "
+                    f"rescan {rs['slots_filled']}")
+            speedup = rs["wall_s"] / max(ev["wall_s"], 1e-9)
+            rows.append((
+                f"perf_shuffle/{policy}_{n}n_event_wall_s", ev["wall_s"],
+                f"rescan={rs['wall_s']:.2f}s speedup={speedup:.1f}x"))
+            if n == 500:
+                speedup_at[policy] = round(speedup, 2)
+                rows.append((
+                    f"perf_shuffle/{policy}_500n_speedup", speedup,
+                    f"gate: >={GATE_SPEEDUP_500:g}x over PR1 rescan "
+                    f"substrate"))
+    if speedup_at and max(speedup_at.values()) < GATE_SPEEDUP_500:
+        raise AssertionError(
+            f"event-shuffle 500-node speedup gate failed: {speedup_at} "
+            f"all below {GATE_SPEEDUP_500}x")
+    payload = {
+        "sim_seconds": sim_seconds,
+        "splits_per_worker": SCALE_SPLITS_PER_WORKER,
+        "results": results,
+        "speedup_at_500": speedup_at,
+    }
+    path = bench_json_update("perf_shuffle", payload,
+                             mode="quick" if quick else "full")
+    rows.append(("perf_shuffle/json", 1.0, str(path)))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (20/100/500 nodes, shorter sim cap)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.quick and not args.full:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+    for name, value, derived in run():
+        print(f"{name},{value:.4g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

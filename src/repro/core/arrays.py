@@ -105,10 +105,19 @@ class ArraySnapshot:
         self.compute = np.zeros(cap, dtype=bool)
         self.active = np.zeros(cap, dtype=bool)
         self.skey = np.zeros(cap, dtype=np.int64)
+        # Shuffle-health columns (reduce attempts; write-through from the
+        # shuffle engine): producers ready-but-unfetched, transfers in
+        # flight, failure cycles burning. Together with ``fetched`` they
+        # partition the not-yet-waiting dependencies, keeping fetch-health
+        # signals vectorized for the policies.
+        self.sh_ready = np.zeros(cap, dtype=np.int32)
+        self.sh_inflight = np.zeros(cap, dtype=np.int32)
+        self.sh_fail = np.zeros(cap, dtype=np.int32)
         self._float_cols = ["start", "work_done", "work_total", "last_sync"]
         self._int_like_cols = ["a_state", "t_state", "kind", "job", "node",
                                "spec", "fetched", "deps", "compute",
-                               "active", "skey"]
+                               "active", "skey", "sh_ready", "sh_inflight",
+                               "sh_fail"]
         # Parallel python rails (action emission needs the id strings).
         self.attempt_ids: List[str] = []
         self.task_ids: List[str] = []
@@ -201,6 +210,9 @@ class ArraySnapshot:
         self.work_total[r] = work_total
         self.last_sync[r] = start_time
         self.fetched[r] = 0
+        self.sh_ready[r] = 0
+        self.sh_inflight[r] = 0
+        self.sh_fail[r] = 0
         self.deps[r] = max(1, n_deps)
         self.compute[r] = False
         self.active[r] = True

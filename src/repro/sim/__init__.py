@@ -5,13 +5,16 @@ execution semantics (NM expiry, shuffle fetch-failure cycles, slowstart,
 container packing) and seeded fault injection.
 """
 from repro.sim.cluster import Cluster, SimNode
+from repro.sim.dispatch import Dispatcher, LaunchRequest
 from repro.sim.engine import Engine
 from repro.sim.job import BENCHMARKS, BenchProfile, JobResult, JobSpec
 from repro.sim.mapreduce import BINO_PARAMS, SimParams, Simulation
-from repro.sim import faults, runner, workload
+from repro.sim.shuffle import EventShuffle, MofRegistry, RescanShuffle
+from repro.sim import dispatch, faults, runner, shuffle, workload
 
 __all__ = [
-    "BENCHMARKS", "BINO_PARAMS", "BenchProfile", "Cluster", "Engine",
-    "JobResult", "JobSpec", "SimNode", "SimParams", "Simulation",
-    "faults", "runner", "workload",
+    "BENCHMARKS", "BINO_PARAMS", "BenchProfile", "Cluster", "Dispatcher",
+    "Engine", "EventShuffle", "JobResult", "JobSpec", "LaunchRequest",
+    "MofRegistry", "RescanShuffle", "SimNode", "SimParams", "Simulation",
+    "dispatch", "faults", "runner", "shuffle", "workload",
 ]

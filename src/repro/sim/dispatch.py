@@ -1,0 +1,82 @@
+"""Container scheduling: the AM/RM launch queue (DESIGN.md §12.4).
+
+Owns the pending-launch queue and the container-placement pass that was
+inlined in ``Simulation``. The dispatcher decides *where and when* an
+attempt runs (placement preference, exclusion of sibling hosts and
+marked-failed nodes, max-running-attempts cap); the simulation retains
+attempt *construction* (``Simulation._start_attempt``) because that is
+lifecycle state (arrays write-through, milestones, shuffle attach).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, List, Optional, Tuple
+
+from repro.core.types import TaskKind, TaskState
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
+    from repro.sim.mapreduce import SimTask, Simulation
+
+
+@dataclasses.dataclass
+class LaunchRequest:
+    task: "SimTask"
+    placement: Tuple[str, ...] = ()
+    speculative: bool = False
+    rollback: bool = False
+    rollback_node: Optional[str] = None
+    reason: str = ""
+
+
+class Dispatcher:
+    """Pending launches + the placement pass over free containers."""
+
+    def __init__(self, sim: "Simulation"):
+        self.sim = sim
+        self.pending: List[LaunchRequest] = []
+
+    def enqueue(self, req: LaunchRequest) -> None:
+        if req.task.state == TaskState.COMPLETED and not req.speculative:
+            # re-execution of a completed producer
+            req.task.state = TaskState.RUNNING
+            req.task.output_available = bool(req.task.output_nodes)
+            self.sim._arr_task_state(req.task)
+        self.pending.append(req)
+
+    def dispatch(self) -> None:
+        sim = self.sim
+        still: List[LaunchRequest] = []
+        for req in self.pending:
+            task = req.task
+            if task.job.done or task.state == TaskState.COMPLETED:
+                continue
+            if len(task.running_attempts()) >= \
+                    sim.params.max_running_attempts:
+                continue
+            exclude = {a.node_id for a in task.running_attempts()}
+            exclude |= sim._marked_failed
+            node_id = sim.cluster.pick_container(list(req.placement),
+                                                 exclude=exclude)
+            if node_id is None:
+                still.append(req)
+                continue
+            sim._start_attempt(req, node_id)
+        self.pending = still
+
+    def has_queued(self, task: "SimTask") -> bool:
+        return any(r.task is task for r in self.pending)
+
+    def watchdog(self) -> None:
+        """AM retry loop: any live task with no running attempt and no
+        queued launch gets re-enqueued (covers killed/failed edges)."""
+        sim = self.sim
+        queued = {r.task.task_id for r in self.pending}
+        for job in sim.active_jobs.values():
+            for t in job.tasks:
+                if t.state != TaskState.RUNNING:
+                    continue
+                if t.kind == TaskKind.REDUCE and not job.reduces_scheduled:
+                    continue
+                if not t.running_attempts() and t.task_id not in queued:
+                    self.enqueue(LaunchRequest(t, reason="am-watchdog"))
+        self.dispatch()

@@ -90,7 +90,7 @@ def lose_mof_at_map_progress(sim: Simulation, job: SimJob, frac: float,
         for r in job.reduces:
             for a in r.running_attempts():
                 need += len(a.task.deps)
-                done += len(a.fetched)
+                done += len(a.shuffle.fetched)
         unfinished = any(r.state != TaskState.COMPLETED
                          for r in job.reduces)
         if need == 0 or done / need < 0.75:
@@ -107,7 +107,8 @@ def lose_mof_at_map_progress(sim: Simulation, job: SimJob, frac: float,
                     # only original consumers count: a speculative copy
                     # that dies with its sibling can't produce the paper's
                     # qualifying fetch-failure condition
-                    if not a.is_speculative and t.task_id not in a.fetched:
+                    if not a.is_speculative \
+                            and t.task_id not in a.shuffle.fetched:
                         waiting += 1
             if waiting >= 1 and (best is None or waiting < best[0]):
                 best = (waiting, t)

@@ -17,12 +17,17 @@ Faithfully models the YARN 2.7.1 behaviours that drive the paper's effects:
 The policy sees the cluster only through ``ClusterSnapshot`` ticks and acts
 only through SpeculateTask/KillAttempt/MarkNodeFailed — the same interface
 the live training runtime drives.
+
+Layering (DESIGN.md §12): this module owns task/attempt lifecycle and the
+AM/RM control decisions. Fetch mechanics live in ``repro.sim.shuffle``
+(per-producer ready queues + MOF registry, with the seed's rescan path as
+the equivalence reference) and container scheduling in
+``repro.sim.dispatch``.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-import math
 import time
 from collections.abc import Mapping as _Mapping
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
@@ -46,8 +51,15 @@ from repro.core.types import (
     TaskView,
 )
 from repro.sim.cluster import Cluster, HEARTBEAT_PERIOD
+from repro.sim.dispatch import Dispatcher, LaunchRequest
 from repro.sim.engine import Engine, EventHandle
 from repro.sim.job import JobResult, JobSpec
+from repro.sim.shuffle import ShuffleState, make_engine
+
+__all__ = [
+    "BINO_PARAMS", "LaunchRequest", "SimAttempt", "SimJob", "SimParams",
+    "SimTask", "Simulation",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,13 +124,9 @@ class SimAttempt:
         self._milestone: Optional[EventHandle] = None
         # Map-only: progress point where an injected disk exception fires.
         self.disk_exception_at: Optional[float] = None
-        # Reduce-only shuffle state.
-        self.fetched: Set[str] = set()
-        self.inflight: Dict[str, EventHandle] = {}
-        self.fail_cycles: Dict[str, EventHandle] = {}
-        self.fetch_srcs: Dict[str, str] = {}
+        # Reduce-only: shuffle bookkeeping, attached by the shuffle engine.
+        self.shuffle: Optional[ShuffleState] = None
         self.compute_started = False
-        self.failed_cycles = 0  # shuffle failure cycles burned (reduce)
         self.end_time: Optional[float] = None  # completion/failure/kill
         # Columnar mirror row (−1 when the sim runs without ArraySnapshot).
         self.row = -1
@@ -159,7 +167,8 @@ class SimAttempt:
         if self.task.kind == TaskKind.MAP:
             return wd / self.work_total
         n_deps = max(1, len(self.task.deps))
-        shuffle = len(self.fetched) / n_deps
+        n_fetched = len(self.shuffle.fetched) if self.shuffle else 0
+        shuffle = n_fetched / n_deps
         compute = wd / self.work_total
         return _SHUFFLE_FRAC * shuffle + (1 - _SHUFFLE_FRAC) * compute
 
@@ -186,6 +195,7 @@ class SimTask:
         self.task_id = f"{job.spec.job_id}_{kind.value}{index:04d}"
         self.work_seconds = work_seconds
         self.deps = deps
+        self._dep_pos: Optional[Dict[str, int]] = None
         self.state = TaskState.PENDING
         self.attempts: List[SimAttempt] = []
         self.output_nodes: List[str] = []
@@ -196,6 +206,13 @@ class SimTask:
         self.fetch_reports = 0
         # One-shot injected disk exception: (progress_fraction,) or None.
         self.inject_disk_exception_at: Optional[float] = None
+
+    @property
+    def dep_pos(self) -> Dict[str, int]:
+        """Producer task_id → dependency index, shared by every attempt."""
+        if self._dep_pos is None:
+            self._dep_pos = {m: i for i, m in enumerate(self.deps)}
+        return self._dep_pos
 
     def running_attempts(self) -> List[SimAttempt]:
         return [a for a in self.attempts if a.state == AttemptState.RUNNING]
@@ -241,16 +258,6 @@ class SimJob:
             elif t.running_attempts():
                 total += max(a.progress() for a in t.running_attempts())
         return total / len(self.maps)
-
-
-@dataclasses.dataclass
-class LaunchRequest:
-    task: SimTask
-    placement: Tuple[str, ...] = ()
-    speculative: bool = False
-    rollback: bool = False
-    rollback_node: Optional[str] = None
-    reason: str = ""
 
 
 class _LazyTasks(_Mapping):
@@ -323,14 +330,18 @@ class Simulation:
     and hands the policies lazy snapshots, activating their vectorized
     assessment paths; ``columnar=False`` rebuilds eager per-object
     snapshots each tick — the reference path the equivalence tests compare
-    against. ``record_actions=True`` appends ``(time, repr(action))`` to
+    against. ``shuffle="event"`` (the default) selects the indexed
+    ready-queue shuffle substrate; ``shuffle="rescan"`` the seed's
+    poll-and-rescan reference (byte-identical traces, DESIGN.md §12.3).
+    ``record_actions=True`` appends ``(time, repr(action))`` to
     ``action_trace`` for those comparisons."""
 
     def __init__(self, *, policy: str = "yarn",
                  policy_factory: Optional[Callable[[Sequence[str]], Speculator]] = None,
                  n_workers: int = 20, n_containers: int = 8,
                  params: Optional[SimParams] = None, seed: int = 0,
-                 columnar: bool = True, record_actions: bool = False):
+                 columnar: bool = True, shuffle: str = "event",
+                 record_actions: bool = False):
         self.engine = Engine()
         self.cluster = Cluster(n_workers, n_containers)
         self.rng = np.random.default_rng(seed)
@@ -359,7 +370,8 @@ class Simulation:
             self.speculator = YarnLateSpeculator()
         self.jobs: Dict[str, SimJob] = {}
         self.active_jobs: Dict[str, SimJob] = {}
-        self.pending: List[LaunchRequest] = []
+        self.sched = Dispatcher(self)
+        self.shuffle = make_engine(self, shuffle)
         self.attempts: Dict[str, SimAttempt] = {}
         self._fetch_failures: List[FetchFailure] = []
         self._marked_failed: Set[str] = set()
@@ -368,6 +380,10 @@ class Simulation:
         self.truth_crashed: Set[str] = set()
         self.policy_failed_calls: List[Tuple[float, str]] = []
         self._started = False
+
+    @property
+    def pending(self) -> List[LaunchRequest]:
+        return self.sched.pending
 
     # ------------------------------------------------------------------
     # Lifecycle
@@ -434,33 +450,13 @@ class Simulation:
         return self.results
 
     # ------------------------------------------------------------------
-    # Scheduling
+    # Scheduling (decisions live in repro.sim.dispatch)
     # ------------------------------------------------------------------
     def _enqueue(self, req: LaunchRequest) -> None:
-        if req.task.state == TaskState.COMPLETED and not req.speculative:
-            # re-execution of a completed producer
-            req.task.state = TaskState.RUNNING
-            req.task.output_available = bool(req.task.output_nodes)
-            self._arr_task_state(req.task)
-        self.pending.append(req)
+        self.sched.enqueue(req)
 
     def _dispatch(self) -> None:
-        still: List[LaunchRequest] = []
-        for req in self.pending:
-            task = req.task
-            if task.job.done or task.state == TaskState.COMPLETED:
-                continue
-            if len(task.running_attempts()) >= self.params.max_running_attempts:
-                continue
-            exclude = {a.node_id for a in task.running_attempts()}
-            exclude |= self._marked_failed
-            node_id = self.cluster.pick_container(list(req.placement),
-                                                  exclude=exclude)
-            if node_id is None:
-                still.append(req)
-                continue
-            self._start_attempt(req, node_id)
-        self.pending = still
+        self.sched.dispatch()
 
     def _start_attempt(self, req: LaunchRequest, node_id: str) -> None:
         task = req.task
@@ -499,7 +495,8 @@ class Simulation:
         if task.kind == TaskKind.MAP:
             self._schedule_map_milestone(a)
         else:
-            self._try_start_fetches(a)
+            self.shuffle.attach(a)
+            self.shuffle.try_start(a)
 
     # ------------------------------------------------------------------
     # Map execution: spill milestones, disk exceptions, completion
@@ -575,18 +572,16 @@ class Simulation:
             self._arr_task_state(task)
             self._arr_node_free(a.node_id)
         self._kill_siblings(task, keep=a.attempt_id)
-        # notify reducers (fresh MOF ⇒ waiting fetchers go again)
-        for r in task.job.reduces:
-            for ra in r.running_attempts():
-                self._on_producer_available(ra, task.task_id)
-                self._try_start_fetches(ra)
+        # fresh MOF: register the source and notify waiting fetchers
+        self.shuffle.on_producer_completed(task, a.node_id)
         if first_completion:
             self._maybe_schedule_reduces(task.job)
             self._check_map_progress_triggers(task.job)
         self._dispatch()
 
     # ------------------------------------------------------------------
-    # Reduce execution: shuffle fetches, failure cycles, compute
+    # Reduce execution: AM-side shuffle hooks, compute
+    # (fetch mechanics live in repro.sim.shuffle)
     # ------------------------------------------------------------------
     def _maybe_schedule_reduces(self, job: SimJob) -> None:
         if job.reduces_scheduled or not job.reduces:
@@ -598,68 +593,11 @@ class Simulation:
                 self._enqueue(LaunchRequest(t))
             self._dispatch()
 
-    def _fetch_candidates(self, a: SimAttempt) -> List[str]:
-        return [m for m in a.task.deps
-                if m not in a.fetched and m not in a.inflight
-                and m not in a.fail_cycles]
-
-    def _try_start_fetches(self, a: SimAttempt) -> None:
-        if a.state != AttemptState.RUNNING or a.compute_started:
-            return
-        budget = self.params.parallel_fetches - len(a.inflight) \
-            - len(a.fail_cycles)
-        if budget <= 0:
-            return
-        for m in self._fetch_candidates(a):
-            if budget <= 0:
-                break
-            prod = self._task(m)
-            if prod is None or prod.state != TaskState.COMPLETED:
-                continue  # not produced yet; map completion will notify
-            src = self._mof_source(prod)
-            if src is None:
-                # MOF is supposed to exist but no live copy: failure cycle.
-                a.fail_cycles[m] = self.engine.after(
-                    self.params.fetch_cycle, self._fetch_failed, a, m)
-                budget -= 1
-                continue
-            size = prod.job.spec.partition_bytes()
-            rate = self.cluster.fetch_throughput(src, a.node_id)
-            self.cluster.nodes[src].active_flows += 1
-            self.cluster.nodes[a.node_id].active_flows += 1
-            a.fetch_srcs[m] = src
-            a.inflight[m] = self.engine.after(
-                max(size / rate, 1e-3), self._fetch_done, a, m, src)
-            budget -= 1
-
-    def _mof_source(self, prod: SimTask) -> Optional[str]:
-        for nid in prod.output_nodes:
-            node = self.cluster.nodes[nid]
-            if node.alive and prod.task_id in node.mofs \
-                    and nid not in self._marked_failed:
-                return nid
-        return None
-
-    def _fetch_done(self, a: SimAttempt, m: str, src: str) -> None:
-        self._end_flow(a, m, src)
-        if a.state != AttemptState.RUNNING:
-            return
-        a.fetched.add(m)
-        if a.row >= 0:
-            self.arrays.fetched[a.row] = len(a.fetched)
-        if isinstance(self.speculator, BinocularSpeculator):
-            self.speculator.note_fetch_ok(m)
-        if len(a.fetched) == len(a.task.deps):
-            self._start_compute(a)
-        else:
-            self._try_start_fetches(a)
-
-    def _fetch_failed(self, a: SimAttempt, m: str) -> None:
-        a.fail_cycles.pop(m, None)
-        if a.state != AttemptState.RUNNING:
-            return
+    def _report_fetch_failure(self, a: SimAttempt, m: str) -> None:
+        """A reduce attempt burned a fetch cycle against producer ``m``:
+        record it and, past Hadoop's too-many-fetch-failures quorum, give
+        up on the MOF and re-run the map."""
         a.task.job.n_fetch_failures += 1
-        a.failed_cycles += 1
         prod = self._task(m)
         self._fetch_failures.append(FetchFailure(
             time=self.engine.now, consumer_task_id=a.task.task_id,
@@ -676,20 +614,6 @@ class Simulation:
                 prod.fetch_reports = 0
                 self._enqueue(LaunchRequest(prod, reason="am-fetch-failures"))
                 self._dispatch()
-        # Shuffle self-abort: the reduce attempt declares itself failed and
-        # a fresh attempt re-shuffles — into the same missing MOF.
-        if a.failed_cycles >= self.params.reduce_abort_cycles:
-            self._attempt_failed(a, reason="shuffle-exceeded-failures")
-            return
-        # retry (or go back to waiting if the producer restarted)
-        self._try_start_fetches(a)
-
-    def _on_producer_available(self, a: SimAttempt, m: str) -> None:
-        """Fresh MOF: cancel a pending failure cycle so the retry is
-        immediate rather than waiting out the timeout."""
-        h = a.fail_cycles.pop(m, None)
-        if h is not None:
-            h.cancel()
 
     def _start_compute(self, a: SimAttempt) -> None:
         a.compute_started = True
@@ -794,21 +718,7 @@ class Simulation:
         if a._milestone is not None:
             a._milestone.cancel()
             a._milestone = None
-        for m, h in list(a.inflight.items()):
-            h.cancel()
-            self._end_flow(a, m, a.fetch_srcs.get(m))
-        for h in a.fail_cycles.values():
-            h.cancel()
-        a.inflight.clear()
-        a.fail_cycles.clear()
-
-    def _end_flow(self, a: SimAttempt, m: str, src: Optional[str]) -> None:
-        if a.inflight.pop(m, None) is not None and src is not None:
-            self.cluster.nodes[src].active_flows = max(
-                0, self.cluster.nodes[src].active_flows - 1)
-            self.cluster.nodes[a.node_id].active_flows = max(
-                0, self.cluster.nodes[a.node_id].active_flows - 1)
-        a.fetch_srcs.pop(m, None)
+        self.shuffle.detach(a)
 
     # ------------------------------------------------------------------
     # Node lifecycle (RM view)
@@ -818,38 +728,39 @@ class Simulation:
         if node_id in self._marked_failed:
             return
         self._marked_failed.add(node_id)
+        node = self.cluster.nodes[node_id]
+        # Its MOF copies stop being fetchable the moment the RM marks it.
+        self.shuffle.registry.drop_node_sources(node)
         if self.arrays is not None:
             self.arrays.node_marked[self.arrays.node_index[node_id]] = True
         if by_policy:
             self.policy_failed_calls.append((self.engine.now, node_id))
-        node = self.cluster.nodes[node_id]
         # Running attempts there are gone.
         for a in list(self.attempts.values()):
             if a.node_id == node_id and a.state == AttemptState.RUNNING:
                 self._attempt_failed(a, reason="node-lost")
             # In-flight fetches FROM the dead node fail over to a cycle.
-            if a.state == AttemptState.RUNNING:
-                for m, src in list(a.fetch_srcs.items()):
+            if a.state == AttemptState.RUNNING and a.shuffle is not None:
+                for m, src in list(a.shuffle.fetch_srcs.items()):
                     if src == node_id:
-                        h = a.inflight.get(m)
-                        if h is not None:
-                            h.cancel()
-                        self._end_flow(a, m, src)
-                        self._try_start_fetches(a)
+                        self.shuffle.abort_fetch(a, m)
+                        self.shuffle.try_start(a)
         # Completed maps whose only MOF copies lived there must re-run
         # (standard YARN on node expiry) — unless every reducer already
-        # fetched that partition.
-        for job in self.active_jobs.values():
-            for t in job.maps:
-                if t.state != TaskState.COMPLETED:
-                    continue
-                t.output_nodes = [n for n in t.output_nodes if n != node_id]
-                if not t.output_nodes:
-                    t.output_available = False
-                    if self._someone_still_needs(t) and \
-                            not t.running_attempts():
-                        self._enqueue(LaunchRequest(
-                            t, reason="node-lost-mof"))
+        # fetched that partition. The placement index yields exactly the
+        # producers with an output copy here, in map creation order.
+        reg = self.shuffle.registry
+        for t in reg.take_placed(node_id):
+            if t.state != TaskState.COMPLETED:
+                reg.keep_placed(node_id, t)  # re-running; not YARN's case
+                continue
+            t.output_nodes = [n for n in t.output_nodes if n != node_id]
+            if not t.output_nodes:
+                t.output_available = False
+                if self.shuffle.someone_still_needs(t) and \
+                        not t.running_attempts():
+                    self._enqueue(LaunchRequest(
+                        t, reason="node-lost-mof"))
         node.mofs.clear()
         node.spill_logs.clear()
         if isinstance(self.speculator, BinocularSpeculator):
@@ -863,25 +774,13 @@ class Simulation:
         — only subsequent fetches discover the loss."""
         for nid in list(prod.output_nodes):
             self.cluster.nodes[nid].mofs.pop(prod.task_id, None)
+        self.shuffle.registry.drop_producer(prod.task_id)
         for a in list(self.attempts.values()):
-            if a.state != AttemptState.RUNNING or prod.task_id not in a.inflight:
+            if a.state != AttemptState.RUNNING or a.shuffle is None \
+                    or prod.task_id not in a.shuffle.inflight:
                 continue
-            h = a.inflight.get(prod.task_id)
-            if h is not None:
-                h.cancel()
-            self._end_flow(a, prod.task_id, a.fetch_srcs.get(prod.task_id))
-            self._try_start_fetches(a)  # rediscovers via a failure cycle
-
-    def _someone_still_needs(self, prod: SimTask) -> bool:
-        for r in prod.job.reduces:
-            if r.state == TaskState.COMPLETED:
-                continue
-            for a in r.running_attempts():
-                if prod.task_id not in a.fetched:
-                    return True
-            if not r.running_attempts():
-                return True  # a future attempt will need everything
-        return False
+            self.shuffle.abort_fetch(a, prod.task_id)
+            self.shuffle.try_start(a)  # rediscovers via a failure cycle
 
     def set_node_speed(self, node_id: str, speed: float) -> None:
         """Sync every hosted attempt at the OLD speed, flip, reschedule."""
@@ -906,25 +805,28 @@ class Simulation:
         node = self.cluster.nodes[node_id]
         self.truth_crashed.add(node_id)
         self.set_node_speed(node_id, 0.0)
+        self.shuffle.registry.drop_node_sources(node)
         node.fail()
         self._arr_node_free(node_id)
-        # The crashed host's own in-flight fetches stall out silently.
+        # The crashed host's own in-flight fetches stall out silently: no
+        # immediate retry — the next producer completion in the job
+        # re-kicks the attempt (mark_stalled keeps the event engine's
+        # notification set equal to the rescan broadcast here).
         for a in self.attempts.values():
-            if a.node_id == node_id and a.state == AttemptState.RUNNING:
-                for m, h in list(a.inflight.items()):
-                    h.cancel()
-                    self._end_flow(a, m, a.fetch_srcs.get(m))
+            if a.node_id == node_id and a.state == AttemptState.RUNNING \
+                    and a.shuffle is not None and a.shuffle.inflight:
+                for m in list(a.shuffle.inflight):
+                    self.shuffle.abort_fetch(a, m)
+                self.shuffle.mark_stalled(a)
         # Fetches streaming FROM the crashed node stall into failure cycles.
         for a in self.attempts.values():
-            if a.state != AttemptState.RUNNING or a.node_id == node_id:
+            if a.state != AttemptState.RUNNING or a.node_id == node_id \
+                    or a.shuffle is None:
                 continue
-            for m, src in list(a.fetch_srcs.items()):
+            for m, src in list(a.shuffle.fetch_srcs.items()):
                 if src == node_id:
-                    h = a.inflight.get(m)
-                    if h is not None:
-                        h.cancel()
-                    self._end_flow(a, m, src)
-                    self._try_start_fetches(a)
+                    self.shuffle.abort_fetch(a, m)
+                    self.shuffle.try_start(a)
 
     def restore_node(self, node_id: str) -> None:
         node = self.cluster.nodes[node_id]
@@ -976,7 +878,7 @@ class Simulation:
             self.engine.after(self.params.expiry_check, self._expiry_tick)
 
     def _speculator_tick(self) -> None:
-        self._watchdog()
+        self.sched.watchdog()
         t0 = time.perf_counter()
         snap = self._snapshot()
         actions = self.speculator.assess(snap)
@@ -1006,7 +908,7 @@ class Simulation:
         task = self._task(act.task_id)
         if task is None or task.job.done:
             return
-        if any(r.task is task for r in self.pending):
+        if self.sched.has_queued(task):
             return  # a launch for this task is already queued
         if task.state == TaskState.COMPLETED:
             # dependency-aware re-execution of a completed producer;
@@ -1024,20 +926,6 @@ class Simulation:
             task, placement=act.placement_hint, speculative=True,
             rollback=act.rollback, rollback_node=act.rollback_node,
             reason=act.reason))
-
-    def _watchdog(self) -> None:
-        """AM retry loop: any live task with no running attempt and no
-        queued launch gets re-enqueued (covers killed/failed edges)."""
-        queued = {r.task.task_id for r in self.pending}
-        for job in self.active_jobs.values():
-            for t in job.tasks:
-                if t.state != TaskState.RUNNING:
-                    continue
-                if t.kind == TaskKind.REDUCE and not job.reduces_scheduled:
-                    continue
-                if not t.running_attempts() and t.task_id not in queued:
-                    self._enqueue(LaunchRequest(t, reason="am-watchdog"))
-        self._dispatch()
 
     # ------------------------------------------------------------------
     # Snapshot + bookkeeping
@@ -1103,9 +991,21 @@ class Simulation:
             assert arr.work_done[r] == a.work_done
             assert arr.work_total[r] == a.work_total
             assert arr.last_sync[r] == a.last_sync
-            assert arr.fetched[r] == len(a.fetched)
             assert arr.deps[r] == max(1, len(t.deps))
             assert bool(arr.compute[r]) == a.compute_started
+            ss = a.shuffle
+            if ss is not None:
+                assert arr.fetched[r] == len(ss.fetched)
+                assert arr.sh_ready[r] == ss.n_ready
+                assert arr.sh_inflight[r] == len(ss.inflight)
+                assert arr.sh_fail[r] == len(ss.fail_cycles)
+                if a.state == AttemptState.RUNNING:
+                    self.shuffle.verify_state(a)
+            else:
+                assert arr.fetched[r] == 0
+                assert arr.sh_ready[r] == 0
+                assert arr.sh_inflight[r] == 0
+                assert arr.sh_fail[r] == 0
             assert prog[k] == a.progress(), (a.attempt_id, prog[k],
                                              a.progress())
 
@@ -1147,6 +1047,7 @@ class Simulation:
             self.active_jobs.pop(job.spec.job_id, None)
             if self.arrays is not None:
                 self.arrays.job_finished(job.spec.job_id)
+            self.shuffle.on_job_done(job)
             self.speculator.job_done(job.spec.job_id)
             # Prune the global attempt index (stress runs submit hundreds
             # of jobs; node_lost scans this dict).

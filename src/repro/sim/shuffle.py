@@ -1,0 +1,633 @@
+"""Shuffle substrate: per-reduce fetch state, MOF registry, and the two
+fetch-candidate selection engines (DESIGN.md §12).
+
+The seed simulator rediscovered work by rescanning: every free fetch slot
+re-walked the reducer's full dependency list (O(n_maps) per slot), and
+every map completion broadcast to every running reduce attempt. That poll
+loop was ~2/3 of a 500-node run's wall time once the assessment path went
+columnar. This module replaces it with an event-driven subsystem while
+keeping the rescan path in-tree as the byte-exact reference:
+
+- :class:`RescanShuffle` — the seed algorithm, verbatim: candidate list
+  comprehension over ``task.deps`` per slot, completion broadcast over
+  ``job.reduces × running_attempts``, MOF source by attribute scan.
+- :class:`EventShuffle` — per-attempt indexed ready-deque (a min-heap of
+  dependency indices, so slot filling pops the *lowest-index* ready
+  producer in O(log n) — the same producer the reference scan would
+  pick), fed by a per-producer subscriber registry (map completion
+  notifies only attempts still wanting that partition), with MOF sources
+  answered by :class:`MofRegistry` instead of attribute scans.
+
+Equivalence contract: both engines drive the simulation through identical
+event sequences — same fetches, same sources, same flow accounting, same
+failure cycles, in the same order — so seeded runs emit byte-identical
+action traces (``tests/test_shuffle.py`` enforces this, mirroring the
+columnar gate of DESIGN.md §11.3).
+
+Dependency status is a per-attempt ``int8`` column (one code per dep):
+every dependency is in exactly one of WAITING / READY / FAIL_CYCLE /
+INFLIGHT / FETCHED, and the live counts are written through to the
+columnar snapshot (``sh_ready``/``sh_inflight``/``sh_fail``) so fetch-
+health signals stay vectorized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import TYPE_CHECKING, Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.core.speculator import BinocularSpeculator
+from repro.core.types import AttemptState, TaskState
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
+    from repro.sim.engine import EventHandle
+    from repro.sim.mapreduce import SimAttempt, SimTask, Simulation
+
+# Dependency status codes. "Subscribed" states (the attempt still wants a
+# completion notification for this producer) are exactly codes < INFLIGHT.
+S_WAITING = 0      # producer not (re)completed yet
+S_READY = 1        # producer completed; awaiting a free fetch slot
+S_FAIL_CYCLE = 2   # burning a failed-fetch timeout cycle
+S_INFLIGHT = 3     # transfer in progress
+S_FETCHED = 4      # partition landed
+_SUBSCRIBED_MAX = S_FAIL_CYCLE
+
+
+@dataclasses.dataclass
+class ShuffleProfile:
+    """Work counters exposing the rescan-vs-event win (examples/cluster_sim
+    prints these: fetch slots filled per unit of candidate-selection work)."""
+
+    notifies: int = 0        # producer-completion notifications processed
+    try_calls: int = 0       # try_start_fetches invocations
+    slots_filled: int = 0    # fetch starts + failure cycles begun
+    deps_scanned: int = 0    # rescan mode: dependency list entries walked
+    heap_pops: int = 0       # event mode: ready-heap pops (incl. stale)
+
+    @property
+    def selection_work(self) -> int:
+        return self.deps_scanned + self.heap_pops
+
+    def slots_per_kwork(self) -> float:
+        """Fetch slots filled per 1000 candidate-selection steps."""
+        return 1000.0 * self.slots_filled / max(1, self.selection_work)
+
+
+class ShuffleState:
+    """Per-reduce-attempt shuffle bookkeeping.
+
+    One status code per dependency plus the handle/source maps keyed by
+    producer task id. ``key`` is the canonical notification order:
+    (task creation order, attempt index) — exactly the order the rescan
+    broadcast visits attempts, so the event engine's subscriber fan-out
+    stays trace-equivalent.
+    """
+
+    __slots__ = ("attempt", "status", "ready", "n_ready", "fetched",
+                 "inflight", "fail_cycles", "fetch_srcs", "failed_cycles",
+                 "key")
+
+    def __init__(self, attempt: "SimAttempt"):
+        task = attempt.task
+        self.attempt = attempt
+        self.status = np.zeros(len(task.deps), dtype=np.int8)
+        self.ready: List[int] = []          # min-heap of dependency indices
+        self.n_ready = 0
+        self.fetched: Set[str] = set()
+        self.inflight: Dict[str, "EventHandle"] = {}
+        self.fail_cycles: Dict[str, "EventHandle"] = {}
+        self.fetch_srcs: Dict[str, str] = {}
+        self.failed_cycles = 0              # abort counter (EXCEEDED_MAX)
+        self.key = (task.order, len(task.attempts))
+
+    def set_status(self, i: int, code: int) -> None:
+        old = self.status[i]
+        if old == code:
+            return
+        if old == S_READY:
+            self.n_ready -= 1
+        if code == S_READY:
+            self.n_ready += 1
+        self.status[i] = code
+
+
+class MofRegistry:
+    """Indexed map-output locations: producer → live source nodes, plus
+    node → completed tasks listing it in ``output_nodes``.
+
+    ``live[m]`` holds exactly the nodes where the old attribute scan would
+    find the MOF (alive ∧ MOF on disk ∧ not marked failed): entries are
+    added on map completion and dropped on node death / marked-failed /
+    silent MOF loss — the node's own ``mofs`` dict is the reverse index,
+    so drops are O(MOFs on that node), not O(all maps).
+
+    ``placements`` mirrors ``output_nodes`` membership so node expiry can
+    prune exactly the affected producers instead of sweeping every map of
+    every active job.
+    """
+
+    def __init__(self):
+        self.live: Dict[str, Set[str]] = {}
+        self.placements: Dict[str, Dict["SimTask", None]] = {}
+
+    def add(self, task: "SimTask", node_id: str) -> None:
+        self.live.setdefault(task.task_id, set()).add(node_id)
+        self.placements.setdefault(node_id, {})[task] = None
+
+    def drop_node_sources(self, node) -> None:
+        """Node died or was marked failed: its MOF copies stop being
+        fetchable. Must run before ``node.mofs`` is cleared."""
+        for task_id in node.mofs:
+            s = self.live.get(task_id)
+            if s is not None:
+                s.discard(node.node_id)
+
+    def drop_producer(self, task_id: str) -> None:
+        self.live.pop(task_id, None)
+
+    def pick(self, task: "SimTask") -> Optional[str]:
+        """First live source in ``output_nodes`` order — the same copy the
+        reference attribute scan returns."""
+        live = self.live.get(task.task_id)
+        if not live:
+            return None
+        for nid in task.output_nodes:
+            if nid in live:
+                return nid
+        return None
+
+    def take_placed(self, node_id: str) -> List["SimTask"]:
+        """Producers with ``node_id`` in their ``output_nodes``, in task
+        creation order (= active-job submission order → map index order,
+        the reference sweep order). Callers re-register tasks they skip
+        via :meth:`keep_placed`."""
+        tasks = self.placements.pop(node_id, None)
+        if not tasks:
+            return []
+        return sorted(tasks, key=lambda t: t.order)
+
+    def keep_placed(self, node_id: str, task: "SimTask") -> None:
+        self.placements.setdefault(node_id, {})[task] = None
+
+    def forget_task(self, task: "SimTask") -> None:
+        self.live.pop(task.task_id, None)
+        for nid in task.output_nodes:
+            d = self.placements.get(nid)
+            if d is not None:
+                d.pop(task, None)
+
+
+class ShuffleEngine:
+    """Mode-independent fetch mechanics: flow accounting, transfer and
+    failure-cycle timers, completion/failure handling, teardown. The two
+    subclasses differ only in *candidate selection* (how free slots find
+    ready producers) and *notification* (who hears about a completion)."""
+
+    mode = "base"
+
+    def __init__(self, sim: "Simulation"):
+        self.sim = sim
+        self.registry = MofRegistry()
+        self.profile = ShuffleProfile()
+
+    # -- attempt lifecycle ------------------------------------------------
+    def attach(self, a: "SimAttempt") -> ShuffleState:
+        ss = ShuffleState(a)
+        a.shuffle = ss
+        self._init_ready(a, ss)
+        self._arr_sh(a, ss)
+        return ss
+
+    def detach(self, a: "SimAttempt") -> None:
+        """Attempt ended: cancel transfers and timers, release flows,
+        drop subscriptions."""
+        ss = a.shuffle
+        if ss is None:
+            return
+        for m, h in list(ss.inflight.items()):
+            h.cancel()
+            self._end_flow(a, ss, m, ss.fetch_srcs.get(m))
+        for h in ss.fail_cycles.values():
+            h.cancel()
+        ss.inflight.clear()
+        ss.fail_cycles.clear()
+        self._drop_subscriptions(ss)
+        ss.ready = []
+        ss.n_ready = 0
+        self._arr_sh(a, ss)
+
+    def on_job_done(self, job) -> None:
+        for t in job.maps:
+            self.registry.forget_task(t)
+            self._drop_producer_subs(t.task_id)
+
+    # -- producer-side events --------------------------------------------
+    def on_producer_completed(self, task: "SimTask", node_id: str) -> None:
+        self.registry.add(task, node_id)
+        self.profile.notifies += 1
+        self._notify(task)
+
+    def abort_fetch(self, a: "SimAttempt", m: str) -> None:
+        """An in-flight transfer was invalidated (source died / MOF lost):
+        cancel it and return the dependency to the candidate pool. The
+        caller decides whether to retry immediately (``try_start``)."""
+        ss = a.shuffle
+        h = ss.inflight.get(m)
+        if h is not None:
+            h.cancel()
+        self._end_flow(a, ss, m, ss.fetch_srcs.get(m))
+        self._requeue(ss, a.task.dep_pos[m], m)
+        self._arr_sh(a, ss)
+
+    def mark_stalled(self, a: "SimAttempt") -> None:
+        """The caller aborted transfers WITHOUT an immediate retry (a
+        crashed host's own fetches stall silently), so the attempt sits
+        with free budget and ready producers until the next completion in
+        its job re-kicks it. The rescan broadcast reaches such attempts
+        for free; the event engine must track them explicitly — this is
+        the one place the "budget exhausted or ready-queue empty" steady
+        state is deliberately broken."""
+
+    def someone_still_needs(self, prod: "SimTask") -> bool:
+        for r in prod.job.reduces:
+            if r.state == TaskState.COMPLETED:
+                continue
+            for a in r.running_attempts():
+                if prod.task_id not in a.shuffle.fetched:
+                    return True
+            if not r.running_attempts():
+                return True  # a future attempt will need everything
+        return False
+
+    # -- shared fetch mechanics ------------------------------------------
+    def _launch_fetch(self, a: "SimAttempt", ss: ShuffleState, m: str,
+                      prod: "SimTask", src: str) -> None:
+        sim = self.sim
+        size = prod.job.spec.partition_bytes()
+        rate = sim.cluster.fetch_throughput(src, a.node_id)
+        sim.cluster.nodes[src].active_flows += 1
+        sim.cluster.nodes[a.node_id].active_flows += 1
+        ss.fetch_srcs[m] = src
+        ss.inflight[m] = sim.engine.after(
+            max(size / rate, 1e-3), self._fetch_done, a, m, src)
+        self.profile.slots_filled += 1
+
+    def _launch_fail_cycle(self, a: "SimAttempt", ss: ShuffleState,
+                           m: str) -> None:
+        # MOF is supposed to exist but no live copy: failure cycle.
+        ss.fail_cycles[m] = self.sim.engine.after(
+            self.sim.params.fetch_cycle, self._fetch_failed, a, m)
+        self.profile.slots_filled += 1
+
+    def _end_flow(self, a: "SimAttempt", ss: ShuffleState, m: str,
+                  src: Optional[str]) -> None:
+        if ss.inflight.pop(m, None) is not None and src is not None:
+            nodes = self.sim.cluster.nodes
+            nodes[src].active_flows = max(0, nodes[src].active_flows - 1)
+            nodes[a.node_id].active_flows = max(
+                0, nodes[a.node_id].active_flows - 1)
+        ss.fetch_srcs.pop(m, None)
+
+    def _fetch_done(self, a: "SimAttempt", m: str, src: str) -> None:
+        ss = a.shuffle
+        self._end_flow(a, ss, m, src)
+        if a.state != AttemptState.RUNNING:
+            return
+        ss.fetched.add(m)
+        ss.set_status(a.task.dep_pos[m], S_FETCHED)
+        sim = self.sim
+        if a.row >= 0:
+            sim.arrays.fetched[a.row] = len(ss.fetched)
+            self._arr_sh(a, ss)
+        if isinstance(sim.speculator, BinocularSpeculator):
+            sim.speculator.note_fetch_ok(m)
+        if len(ss.fetched) == len(a.task.deps):
+            sim._start_compute(a)
+        else:
+            self.try_start(a)
+
+    def _fetch_failed(self, a: "SimAttempt", m: str) -> None:
+        ss = a.shuffle
+        ss.fail_cycles.pop(m, None)
+        if a.state != AttemptState.RUNNING:
+            return
+        ss.failed_cycles += 1
+        sim = self.sim
+        # AM-side report (quorum bookkeeping may re-run the producer).
+        sim._report_fetch_failure(a, m)
+        prod = sim._task(m)
+        i = a.task.dep_pos[m]
+        if prod is not None and prod.state == TaskState.COMPLETED:
+            self._requeue(ss, i, m)
+        else:
+            ss.set_status(i, S_WAITING)  # producer re-running; await notify
+        self._arr_sh(a, ss)
+        # Shuffle self-abort: the reduce attempt declares itself failed and
+        # a fresh attempt re-shuffles — into the same missing MOF.
+        if ss.failed_cycles >= sim.params.reduce_abort_cycles:
+            sim._attempt_failed(a, reason="shuffle-exceeded-failures")
+            return
+        # retry (or go back to waiting if the producer restarted)
+        self.try_start(a)
+
+    # -- columnar write-through ------------------------------------------
+    def _arr_sh(self, a: "SimAttempt", ss: ShuffleState) -> None:
+        if a.row >= 0:
+            arr = self.sim.arrays
+            arr.sh_ready[a.row] = ss.n_ready
+            arr.sh_inflight[a.row] = len(ss.inflight)
+            arr.sh_fail[a.row] = len(ss.fail_cycles)
+
+    # -- consistency (tests / verify_arrays) ------------------------------
+    def verify_state(self, a: "SimAttempt") -> None:
+        """Every dependency in exactly one status, and each status bucket
+        in sync with its side structure."""
+        ss = a.shuffle
+        deps = a.task.deps
+        counts = np.bincount(ss.status, minlength=5)
+        assert int(counts.sum()) == len(deps)
+        assert int(counts[S_FETCHED]) == len(ss.fetched)
+        assert int(counts[S_INFLIGHT]) == len(ss.inflight)
+        assert int(counts[S_FAIL_CYCLE]) == len(ss.fail_cycles)
+        assert int(counts[S_READY]) == ss.n_ready
+        assert ss.fetched == {deps[i] for i in
+                              np.flatnonzero(ss.status == S_FETCHED)}
+        assert set(ss.inflight) == {deps[i] for i in
+                                    np.flatnonzero(ss.status == S_INFLIGHT)}
+        assert set(ss.fail_cycles) == {
+            deps[i] for i in np.flatnonzero(ss.status == S_FAIL_CYCLE)}
+        assert set(ss.inflight) == set(ss.fetch_srcs)
+
+    # -- mode hooks -------------------------------------------------------
+    def try_start(self, a: "SimAttempt") -> None:
+        raise NotImplementedError
+
+    def _init_ready(self, a: "SimAttempt", ss: ShuffleState) -> None:
+        raise NotImplementedError
+
+    def _notify(self, task: "SimTask") -> None:
+        raise NotImplementedError
+
+    def _requeue(self, ss: ShuffleState, i: int, m: str) -> None:
+        raise NotImplementedError
+
+    def _mof_source(self, prod: "SimTask") -> Optional[str]:
+        raise NotImplementedError
+
+    def _drop_subscriptions(self, ss: ShuffleState) -> None:
+        raise NotImplementedError
+
+    def _drop_producer_subs(self, task_id: str) -> None:
+        raise NotImplementedError
+
+
+class RescanShuffle(ShuffleEngine):
+    """The seed's poll-and-rescan algorithm, preserved as the equivalence
+    reference: O(n_deps) candidate scan per free slot, completion
+    broadcast to every running reduce attempt of the job, MOF sources by
+    attribute scan. Status codes are maintained for the columnar shuffle
+    columns but never drive control flow — the dict/set membership tests
+    below are byte-for-byte the seed logic."""
+
+    mode = "rescan"
+
+    def _init_ready(self, a: "SimAttempt", ss: ShuffleState) -> None:
+        sim = self.sim
+        for i, m in enumerate(a.task.deps):
+            prod = sim._task(m)
+            if prod is not None and prod.state == TaskState.COMPLETED:
+                ss.set_status(i, S_READY)
+
+    def try_start(self, a: "SimAttempt") -> None:
+        ss = a.shuffle
+        if a.state != AttemptState.RUNNING or a.compute_started:
+            return
+        sim = self.sim
+        prof = self.profile
+        prof.try_calls += 1
+        budget = sim.params.parallel_fetches - len(ss.inflight) \
+            - len(ss.fail_cycles)
+        if budget <= 0:
+            return
+        deps = a.task.deps
+        dep_pos = a.task.dep_pos
+        prof.deps_scanned += len(deps)
+        candidates = [m for m in deps
+                      if m not in ss.fetched and m not in ss.inflight
+                      and m not in ss.fail_cycles]
+        for m in candidates:
+            if budget <= 0:
+                break
+            prod = sim._task(m)
+            i = dep_pos[m]
+            if prod is None or prod.state != TaskState.COMPLETED:
+                # not produced yet; map completion will notify
+                if ss.status[i] == S_READY:   # producer re-enqueued since
+                    ss.set_status(i, S_WAITING)
+                    self._arr_sh(a, ss)
+                continue
+            src = self._mof_source(prod)
+            if src is None:
+                ss.set_status(i, S_FAIL_CYCLE)
+                self._launch_fail_cycle(a, ss, m)
+                budget -= 1
+                self._arr_sh(a, ss)
+                continue
+            ss.set_status(i, S_INFLIGHT)
+            self._launch_fetch(a, ss, m, prod, src)
+            budget -= 1
+            self._arr_sh(a, ss)
+
+    def _notify(self, task: "SimTask") -> None:
+        # fresh MOF ⇒ every running reduce attempt of the job goes again
+        m = task.task_id
+        for r in task.job.reduces:
+            for ra in r.running_attempts():
+                ss = ra.shuffle
+                i = ra.task.dep_pos.get(m)
+                if i is not None:
+                    st = int(ss.status[i])
+                    if st == S_FAIL_CYCLE:
+                        # cancel the pending failure cycle so the retry is
+                        # immediate rather than waiting out the timeout
+                        h = ss.fail_cycles.pop(m, None)
+                        if h is not None:
+                            h.cancel()
+                    if st in (S_WAITING, S_FAIL_CYCLE):
+                        ss.set_status(i, S_READY)
+                        self._arr_sh(ra, ss)
+                self.try_start(ra)
+
+    def _requeue(self, ss: ShuffleState, i: int, m: str) -> None:
+        ss.set_status(i, S_READY)
+
+    def _mof_source(self, prod: "SimTask") -> Optional[str]:
+        sim = self.sim
+        for nid in prod.output_nodes:
+            node = sim.cluster.nodes[nid]
+            if node.alive and prod.task_id in node.mofs \
+                    and nid not in sim._marked_failed:
+                return nid
+        return None
+
+    def _drop_subscriptions(self, ss: ShuffleState) -> None:
+        pass
+
+    def _drop_producer_subs(self, task_id: str) -> None:
+        pass
+
+
+class EventShuffle(ShuffleEngine):
+    """Event-driven candidate selection: each attempt keeps an indexed
+    ready-deque (min-heap over dependency indices, lazily pruned), and a
+    per-producer subscriber registry routes completion news to exactly
+    the attempts still wanting that partition. Slot filling is O(log n)
+    per slot; notification is O(interested attempts)."""
+
+    mode = "event"
+
+    def __init__(self, sim: "Simulation"):
+        super().__init__(sim)
+        # producer task_id → subscribed states (order irrelevant: fan-out
+        # sorts by the canonical (task order, attempt index) key).
+        self.subs: Dict[str, Dict[ShuffleState, None]] = {}
+        # job → states parked with free budget + ready producers after a
+        # silent abort (see mark_stalled); re-kicked on the job's next
+        # producer completion, like the rescan broadcast would.
+        self.stalled: Dict[object, Dict[ShuffleState, None]] = {}
+
+    def mark_stalled(self, a: "SimAttempt") -> None:
+        self.stalled.setdefault(a.task.job, {})[a.shuffle] = None
+
+    def _init_ready(self, a: "SimAttempt", ss: ShuffleState) -> None:
+        sim = self.sim
+        subs = self.subs
+        for i, m in enumerate(a.task.deps):
+            subs.setdefault(m, {})[ss] = None
+            prod = sim._task(m)
+            if prod is not None and prod.state == TaskState.COMPLETED:
+                ss.set_status(i, S_READY)
+                heapq.heappush(ss.ready, i)
+
+    def try_start(self, a: "SimAttempt") -> None:
+        ss = a.shuffle
+        if a.state != AttemptState.RUNNING or a.compute_started:
+            return
+        sim = self.sim
+        prof = self.profile
+        prof.try_calls += 1
+        budget = sim.params.parallel_fetches - len(ss.inflight) \
+            - len(ss.fail_cycles)
+        if budget <= 0:
+            return
+        deps = a.task.deps
+        ready = ss.ready
+        changed = False
+        while budget > 0 and ready:
+            i = heapq.heappop(ready)
+            prof.heap_pops += 1
+            if ss.status[i] != S_READY:
+                continue  # stale entry (lazy deletion)
+            m = deps[i]
+            prod = sim._task(m)
+            if prod is None or prod.state != TaskState.COMPLETED:
+                # producer re-enqueued since it went ready; its next
+                # completion re-notifies (we stay subscribed)
+                ss.set_status(i, S_WAITING)
+                changed = True
+                continue
+            src = self._mof_source(prod)
+            if src is None:
+                ss.set_status(i, S_FAIL_CYCLE)
+                self._launch_fail_cycle(a, ss, m)
+                budget -= 1
+                changed = True
+                continue
+            ss.set_status(i, S_INFLIGHT)
+            d = self.subs.get(m)
+            if d is not None:
+                d.pop(ss, None)
+            self._launch_fetch(a, ss, m, prod, src)
+            budget -= 1
+            changed = True
+        if changed:
+            self._arr_sh(a, ss)
+
+    def _notify(self, task: "SimTask") -> None:
+        m = task.task_id
+        targets = dict(self.subs.get(m) or ())
+        # States parked by a silent abort get the broadcast's re-kick on
+        # any completion in their job, even if this producer is already
+        # fetched for them (their try_start below restores the steady
+        # state, so they leave the stalled set).
+        stalled = self.stalled.pop(task.job, None)
+        if stalled:
+            targets.update(stalled)
+        if not targets:
+            return
+        # canonical broadcast order: job's reduces in creation order, each
+        # task's attempts in start order — matches the rescan reference
+        for ss in sorted(targets, key=lambda s: s.key):
+            a = ss.attempt
+            if a.state != AttemptState.RUNNING:
+                continue
+            i = a.task.dep_pos[m]
+            st = int(ss.status[i])
+            if st == S_FAIL_CYCLE:
+                # fresh MOF: cancel the pending failure cycle so the retry
+                # is immediate rather than waiting out the timeout
+                h = ss.fail_cycles.pop(m, None)
+                if h is not None:
+                    h.cancel()
+            if st in (S_WAITING, S_FAIL_CYCLE):
+                ss.set_status(i, S_READY)
+                heapq.heappush(ss.ready, i)
+                self._arr_sh(a, ss)
+            self.try_start(a)
+
+    def _requeue(self, ss: ShuffleState, i: int, m: str) -> None:
+        ss.set_status(i, S_READY)
+        heapq.heappush(ss.ready, i)
+        self.subs.setdefault(m, {})[ss] = None
+
+    def _mof_source(self, prod: "SimTask") -> Optional[str]:
+        return self.registry.pick(prod)
+
+    def _drop_subscriptions(self, ss: ShuffleState) -> None:
+        deps = ss.attempt.task.deps
+        for i in np.flatnonzero(ss.status <= _SUBSCRIBED_MAX):
+            d = self.subs.get(deps[i])
+            if d is not None:
+                d.pop(ss, None)
+        parked = self.stalled.get(ss.attempt.task.job)
+        if parked is not None:
+            parked.pop(ss, None)
+
+    def _drop_producer_subs(self, task_id: str) -> None:
+        self.subs.pop(task_id, None)
+
+    def on_job_done(self, job) -> None:
+        super().on_job_done(job)
+        self.stalled.pop(job, None)
+
+    def verify_state(self, a: "SimAttempt") -> None:
+        super().verify_state(a)
+        ss = a.shuffle
+        deps = a.task.deps
+        in_heap = set(ss.ready)
+        for i in np.flatnonzero(ss.status == S_READY):
+            assert int(i) in in_heap, (a.attempt_id, deps[i])
+        if a.state == AttemptState.RUNNING:
+            for i in np.flatnonzero(ss.status <= _SUBSCRIBED_MAX):
+                assert ss in self.subs.get(deps[i], {}), \
+                    (a.attempt_id, deps[i])
+
+
+def make_engine(sim: "Simulation", mode: str) -> ShuffleEngine:
+    if mode == "event":
+        return EventShuffle(sim)
+    if mode == "rescan":
+        return RescanShuffle(sim)
+    raise ValueError(f"unknown shuffle mode: {mode!r}")
