@@ -4,7 +4,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test lint bench bench-perf bench-perf-full
+.PHONY: test lint bench bench-perf bench-perf-full bench-accel \
+	bench-accel-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -13,8 +14,9 @@ test:
 # the shuffle refactor owns; widen as seed modules are modernized.
 # Degrades to a no-op warning where ruff isn't installed (the baked
 # container has no network; CI installs it).
-LINT_PATHS = src/repro/sim src/repro/core/arrays.py benchmarks \
-	examples/cluster_sim.py tests/test_shuffle.py tests/test_columnar.py
+LINT_PATHS = src/repro/sim src/repro/core/arrays.py src/repro/accel \
+	benchmarks examples/cluster_sim.py tests/test_shuffle.py \
+	tests/test_columnar.py tests/test_accel.py tests/test_cluster_index.py
 
 lint:
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
@@ -36,3 +38,11 @@ bench-perf:
 
 bench-perf-full:
 	$(PY) -m benchmarks.run --only perf_scale,perf_shuffle
+
+# Assessment-backend trajectory (numpy vs jax vs pallas live throughput
+# + the batched multi-scenario sweep, gate >= 2x vs serial numpy).
+bench-accel:
+	$(PY) -m benchmarks.run --only perf_accel --quick
+
+bench-accel-full:
+	$(PY) -m benchmarks.run --only perf_accel

@@ -1,0 +1,202 @@
+"""Assessment-backend benchmark: numpy → jax → pallas live-path
+throughput, plus the batched multi-scenario sweep (DESIGN.md §13.4).
+
+Two measurements land in ``BENCH_scale.json`` under ``perf_accel``:
+
+- **live** — assessment ticks/sec of the per-tick policy path on each
+  backend (same proportional terasort job as perf_scale). On CPU the
+  device backends lose to numpy here (per-tick upload + dispatch beats
+  a sub-millisecond kernel); the row exists to track that honestly and
+  to catch regressions when a real accelerator flips the sign.
+- **sweep** — N fault scenarios scored per device step on a mid-run
+  multi-job snapshot: one vmapped jit dispatch vs the same clones walked
+  serially on the numpy reference backend. This is where batching wins
+  even on CPU; the acceptance gate asserts ≥ 2× amortization at ≥ 8
+  scenarios (and the two paths must agree bit-for-bit).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.perf_accel [--quick] [--full]
+    PYTHONPATH=src python -m benchmarks.run --only perf_accel --quick
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import (
+    SCALE_N_CONTAINERS,
+    SCALE_SPLITS_PER_WORKER,
+    Row,
+    bench_json_update,
+    bench_quick,
+)
+from repro.sim.job import JobSpec
+from repro.sim.mapreduce import BINO_PARAMS, SimParams, Simulation
+
+# Acceptance gate (ISSUE 3): the batched sweep must amortize assessment
+# across ≥ 8 scenarios at least this much better than scoring them
+# serially on the numpy backend. Asserted, not just printed.
+GATE_SWEEP_SPEEDUP = 2.0
+SWEEP_MIN_SCENARIOS = 8
+
+LIVE_SIZES_QUICK = (20, 100)
+LIVE_SIZES_FULL = (20, 100, 500)
+LIVE_SIM_SECONDS = 90.0
+SWEEP_N_WORKERS = 100
+SWEEP_N_JOBS = 30
+SWEEP_GRID_QUICK = (8, 16)
+SWEEP_GRID_FULL = (8, 16, 32)
+
+
+def measure_live(policy: str, backend: str, n_workers: int, *,
+                 sim_seconds: float, seed: int = 0) -> Dict:
+    """Live-path assessment throughput under one backend."""
+    n_maps = SCALE_SPLITS_PER_WORKER * n_workers
+    spec = JobSpec("scale", "terasort", n_maps / 8.0)
+    base = BINO_PARAMS if policy == "bino" else SimParams()
+    params = dataclasses.replace(base, sim_time_cap=sim_seconds)
+    sim = Simulation(policy=policy, seed=seed, n_workers=n_workers,
+                     n_containers=SCALE_N_CONTAINERS, params=params,
+                     assess_backend=backend)
+    sim.submit(spec)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    ticks = max(1, sim.assess_ticks)
+    return {
+        "policy": policy,
+        "backend": backend,
+        "n_workers": n_workers,
+        "sim_seconds": sim_seconds,
+        "assess_ticks": sim.assess_ticks,
+        "assess_wall_s": round(sim.assess_wall, 4),
+        "ticks_per_s": round(ticks / max(sim.assess_wall, 1e-9), 2),
+        "actions": sim.actions_emitted,
+        "wall_s": round(wall, 3),
+    }
+
+
+def _sweep_snapshot(seed: int = 3) -> Simulation:
+    """A mid-run multi-job cluster — the workload shape the multi-job
+    speculative-execution literature sweeps (many concurrent jobs)."""
+    params = dataclasses.replace(SimParams(), sim_time_cap=100.0)
+    sim = Simulation(policy="yarn", seed=seed, n_workers=SWEEP_N_WORKERS,
+                     params=params)
+    for j in range(SWEEP_N_JOBS):
+        sim.submit(JobSpec(f"j{j}", "terasort", 3.0,
+                           submit_time=float(j)))
+    sim.run()
+    return sim
+
+
+def measure_sweep(sim: Simulation, n_scenarios: int,
+                  repeats: int = 3) -> Dict:
+    from repro.accel.sweep import BatchedSweep, scenario_grid
+    arr = sim.arrays
+    scenarios = scenario_grid(n_scenarios, len(arr.node_ids), seed=1)
+    sweep = BatchedSweep(arr, sim.engine.now).prepare(scenarios)
+    batched = sweep.run_batched()          # compile + warm
+    serial = sweep.run_serial()
+    for a, b in zip(serial, batched):
+        for k in a:
+            if not np.array_equal(np.asarray(a[k]), np.asarray(b[k])):
+                raise AssertionError(
+                    f"sweep paths diverged on {k} (N={n_scenarios})")
+    t_batched = min(_timed(sweep.run_batched) for _ in range(repeats))
+    t_serial = min(_timed(sweep.run_serial) for _ in range(repeats))
+    return {
+        "n_scenarios": n_scenarios,
+        "n_workers": SWEEP_N_WORKERS,
+        "n_jobs_submitted": SWEEP_N_JOBS,
+        "n_rows": arr.n,
+        "serial_numpy_ms": round(t_serial * 1e3, 2),
+        "batched_ms": round(t_batched * 1e3, 2),
+        "speedup": round(t_serial / max(t_batched, 1e-9), 2),
+        "scenarios_per_s_batched": round(
+            n_scenarios / max(t_batched, 1e-9), 1),
+    }
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run() -> List[Row]:
+    quick = bench_quick()
+    sizes = LIVE_SIZES_QUICK if quick else LIVE_SIZES_FULL
+    grid = SWEEP_GRID_QUICK if quick else SWEEP_GRID_FULL
+    live: List[Dict] = []
+    rows: List[Row] = []
+    for n in sizes:
+        base = None
+        for backend in ("numpy", "jax", "pallas"):
+            r = measure_live("bino", backend, n,
+                             sim_seconds=LIVE_SIM_SECONDS)
+            live.append(r)
+            if backend == "numpy":
+                base = r["ticks_per_s"]
+            rel = r["ticks_per_s"] / max(base, 1e-9)
+            rows.append((
+                f"perf_accel/live_{backend}_{n}n_ticks_per_s",
+                r["ticks_per_s"], f"vs numpy {rel:.2f}x"))
+    sim = _sweep_snapshot()
+    sweeps: List[Dict] = []
+    best = 0.0
+    for n_sc in grid:
+        r = measure_sweep(sim, n_sc)
+        sweeps.append(r)
+        if n_sc >= SWEEP_MIN_SCENARIOS:
+            best = max(best, r["speedup"])
+        rows.append((
+            f"perf_accel/sweep_{n_sc}x_speedup", r["speedup"],
+            f"serial={r['serial_numpy_ms']}ms "
+            f"batched={r['batched_ms']}ms "
+            f"({r['scenarios_per_s_batched']}/s)"))
+    if best < GATE_SWEEP_SPEEDUP:
+        # Loaded shared runners skew single measurements; re-measure with
+        # more repeats (min-of-5) once before declaring the gate failed.
+        for n_sc in grid:
+            if n_sc >= SWEEP_MIN_SCENARIOS:
+                best = max(best,
+                           measure_sweep(sim, n_sc, repeats=5)["speedup"])
+    if best < GATE_SWEEP_SPEEDUP:
+        raise AssertionError(
+            f"batched-sweep gate failed: best speedup {best} at "
+            f">={SWEEP_MIN_SCENARIOS} scenarios is below "
+            f"{GATE_SWEEP_SPEEDUP}x")
+    rows.append(("perf_accel/sweep_gate", best,
+                 f"gate: >={GATE_SWEEP_SPEEDUP:g}x vs serial numpy"))
+    payload = {
+        "live": live,
+        "sweep": sweeps,
+        "sweep_best_speedup": best,
+        "sweep_workload": {"n_workers": SWEEP_N_WORKERS,
+                           "n_jobs": SWEEP_N_JOBS},
+    }
+    path = bench_json_update("perf_accel", payload,
+                             mode="quick" if quick else "full")
+    rows.append(("perf_accel/json", 1.0, str(path)))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small live sweep + N in (8, 16)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.quick and not args.full:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+    for name, value, derived in run():
+        print(f"{name},{value:.4g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ FIGS = [
     "fig9_rollback",
     "perf_scale",
     "perf_shuffle",
+    "perf_accel",
 ]
 
 # (rows, wall seconds, error string or "")
@@ -81,7 +82,7 @@ def main() -> None:
     jobs = max(1, args.jobs)
     # Modules that merge into BENCH_scale.json must not race each other's
     # read-modify-write; they run serially after the parallel batch.
-    writers = {"perf_scale", "perf_shuffle"}
+    writers = {"perf_scale", "perf_shuffle", "perf_accel"}
     parallel = [m for m in selected if m not in writers]
     by_mod = {}
     if jobs > 1 and len(parallel) > 1:

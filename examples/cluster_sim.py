@@ -4,18 +4,27 @@ policies — with the recovery timeline printed, plus a shuffle-substrate
 profile comparing the event-driven engine against the seed's rescan path
 (fetch slots filled per unit of candidate-selection work).
 
+``--assess-backend {numpy,jax,pallas}`` runs the policies' assessment
+math on the chosen compute backend (byte-identical decisions, DESIGN.md
+§13) and prints the per-backend assessment-tick profile; ``--sweep N``
+demos the batched multi-scenario sweep (one vmapped device step scoring
+N fault scenarios vs scoring them serially on numpy).
+
     PYTHONPATH=src python examples/cluster_sim.py
+    PYTHONPATH=src python examples/cluster_sim.py --assess-backend jax --sweep 8
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 from repro.sim import JobSpec, Simulation, faults
 
 
 def run(policy: str, gb: float, frac: float, seed: int,
-        shuffle: str = "event"):
-    sim = Simulation(policy=policy, seed=seed, shuffle=shuffle)
+        shuffle: str = "event", assess_backend: str = "numpy"):
+    sim = Simulation(policy=policy, seed=seed, shuffle=shuffle,
+                     assess_backend=assess_backend)
     job = sim.submit(JobSpec("demo", "terasort", gb))
     faults.crash_busiest_node_at_map_progress(sim, job, frac)
 
@@ -40,7 +49,7 @@ def run(policy: str, gb: float, frac: float, seed: int,
     finally:
         Simulation._start_attempt = orig
         Simulation.node_lost = orig_nl
-    return job.result, timeline, sim.shuffle.profile
+    return job.result, timeline, sim
 
 
 def _print_shuffle_profile(event_prof, gb: float, frac: float,
@@ -49,7 +58,8 @@ def _print_shuffle_profile(event_prof, gb: float, frac: float,
     identical slots filled, orders of magnitude less selection work.
     ``event_prof`` is reused from the main loop's yarn run; only the
     rescan reference is re-simulated."""
-    _, _, rescan_prof = run("yarn", gb, frac, seed, shuffle="rescan")
+    _, _, rescan_sim = run("yarn", gb, frac, seed, shuffle="rescan")
+    rescan_prof = rescan_sim.shuffle.profile
     print("\n=== shuffle substrate profile (same run, both engines) ===")
     print(f"{'engine':>8} {'slots':>7} {'notifies':>9} "
           f"{'selection work':>15} {'slots/1k work':>14}")
@@ -68,12 +78,65 @@ def _print_shuffle_profile(event_prof, gb: float, frac: float,
           f"candidate-selection work (O(1) pops vs O(n_maps) rescans)")
 
 
+def _print_assess_profile(profiles) -> None:
+    """Per-backend assessment-tick profile: same scenario, same actions,
+    different compute substrate (DESIGN.md §13)."""
+    print("\n=== assessment-backend profile (same yarn run) ===")
+    print(f"{'backend':>8} {'ticks':>7} {'assess wall':>12} "
+          f"{'ticks/s':>9} {'actions':>8}")
+    for name, sim in profiles:
+        tps = sim.assess_ticks / max(sim.assess_wall, 1e-9)
+        print(f"{name:>8} {sim.assess_ticks:>7} "
+              f"{sim.assess_wall * 1e3:>10.1f}ms {tps:>9.0f} "
+              f"{sim.actions_emitted:>8}")
+
+
+def _demo_sweep(n_scenarios: int, seed: int) -> None:
+    """Batched multi-scenario sweep on a mid-run multi-job snapshot."""
+    import dataclasses
+
+    from repro.accel.sweep import BatchedSweep, scenario_grid
+    from repro.sim.mapreduce import SimParams
+
+    params = dataclasses.replace(SimParams(), sim_time_cap=80.0)
+    sim = Simulation(policy="yarn", seed=seed, params=params)
+    for j in range(3):
+        sim.submit(JobSpec(f"j{j}", "terasort", 2.0,
+                           submit_time=float(3 * j)))
+    sim.run()
+    scenarios = scenario_grid(n_scenarios, len(sim.cluster.node_ids),
+                              seed=seed)
+    sweep = BatchedSweep(sim.arrays, sim.engine.now).prepare(scenarios)
+    sweep.run_batched()  # warm the jit cache
+    t0 = time.perf_counter()
+    batched = sweep.run_batched()
+    tb = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep.run_serial()
+    ts = time.perf_counter() - t0
+    print(f"\n=== batched sweep: {n_scenarios} fault scenarios, "
+          f"one device step ===")
+    for sc, verdict in zip(scenarios, batched):
+        hits = int(verdict["spatial_hits"].sum())
+        failed = int(verdict["failed"].sum())
+        spec = int((verdict["late_victims"] >= 0).sum())
+        print(f"  {sc.kind:>12}: spatial_hits={hits} failed_nodes={failed} "
+              f"late_victims={spec} reaps={verdict['n_reap']}")
+    print(f"  serial numpy {ts * 1e3:.1f}ms → batched {tb * 1e3:.1f}ms "
+          f"({ts / max(tb, 1e-9):.1f}x)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--gb", type=float, default=1.0)
     ap.add_argument("--frac", type=float, default=0.5,
                     help="map progress at which the node crashes")
     ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--assess-backend", default="numpy",
+                    choices=("numpy", "jax", "pallas"),
+                    help="assessment-compute backend (DESIGN.md §13)")
+    ap.add_argument("--sweep", type=int, default=0, metavar="N",
+                    help="demo the batched sweep across N fault scenarios")
     args = ap.parse_args()
 
     # fault-free baseline
@@ -83,11 +146,12 @@ def main() -> None:
 
     print(f"=== {args.gb:g} GB terasort, node crash at "
           f"{args.frac:.0%} map progress (fault-free JCT {base:.0f}s) ===")
-    yarn_prof = None
+    yarn_sim = None
     for policy in ("yarn", "bino"):
-        res, timeline, prof = run(policy, args.gb, args.frac, args.seed)
+        res, timeline, sim = run(policy, args.gb, args.frac, args.seed,
+                                 assess_backend=args.assess_backend)
         if policy == "yarn":
-            yarn_prof = prof
+            yarn_sim = sim
         print(f"\n--- {policy.upper()} ---  JCT {res.jct:.0f}s "
               f"({res.jct / base:.1f}x slowdown), "
               f"{res.n_spec_attempts} speculative attempts")
@@ -96,7 +160,15 @@ def main() -> None:
         if len(timeline) > 12:
             print(f"  ... {len(timeline) - 12} more events")
 
-    _print_shuffle_profile(yarn_prof, args.gb, args.frac, args.seed)
+    _print_shuffle_profile(yarn_sim.shuffle.profile, args.gb, args.frac,
+                           args.seed)
+    profiles = [(args.assess_backend, yarn_sim)]
+    if args.assess_backend != "numpy":
+        _, _, ref = run("yarn", args.gb, args.frac, args.seed)
+        profiles.insert(0, ("numpy", ref))
+    _print_assess_profile(profiles)
+    if args.sweep:
+        _demo_sweep(args.sweep, args.seed)
 
 
 if __name__ == "__main__":

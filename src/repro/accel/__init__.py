@@ -1,0 +1,17 @@
+"""Pluggable assessment-compute backends (numpy / jax / pallas) for the
+vectorized speculation policies — see DESIGN.md §13."""
+from repro.accel.base import (
+    BACKENDS,
+    TMARK,
+    TPROG,
+    AssessmentBackend,
+    get_backend,
+)
+
+__all__ = [
+    "AssessmentBackend",
+    "BACKENDS",
+    "TMARK",
+    "TPROG",
+    "get_backend",
+]

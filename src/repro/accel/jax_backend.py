@@ -1,0 +1,502 @@
+"""JAX assessment backend: jit-compiled kernels over device-resident
+copies of the §11 columns (DESIGN.md §13.2–§13.3).
+
+Bit-exactness strategy (§13.3): every kernel runs in float64 under a
+scoped ``enable_x64`` and replicates the numpy reference *accumulation
+order* —
+
+- rows are visited in the canonical (§11.3) order: the padded ``order``
+  export is gathered first, and every segmented sum is an XLA scatter-add
+  whose updates apply sequentially in operand order (bit-equal to
+  ``np.bincount`` on CPU);
+- small fixed axes (the k-wide neighborhoods) are summed by *unrolled*
+  sequential adds — ``jnp.sum`` may re-associate, ``np.nansum`` does not
+  for k < 128;
+- order-statistic math (LATE's percentile) mirrors ``np.percentile``'s
+  linear-interpolation formula term for term;
+- order-insensitive reductions (max, any) need no special care;
+- ``a ± b·c`` chains are guarded against LLVM's FMA contraction (which
+  skips the product's rounding step) by multiplying the product with a
+  runtime-opaque ``one``: even if the compiler contracts, ``fma(x, 1, c)``
+  rounds exactly like ``x + c``. Constants adjacent to such products
+  (e.g. the reduce shuffle fraction) are shipped as opaque scalars too,
+  so the HLO simplifier cannot re-fold the guard away.
+
+Shapes are padded by :class:`repro.core.arrays.DeviceColumns` (grow by
+doubling), so a jit specialization retraces only when the simulation
+outgrows its row/job capacity, never per tick.
+
+The traced cores (``spatial_core`` etc.) are shared: the pallas backend
+swaps the hot reductions for hand-written kernels, and the batched sweep
+(:mod:`repro.accel.sweep`) ``vmap``s :func:`assess_summary_core` across
+fault scenarios.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.accel.base import TMARK, TPROG, AssessmentBackend
+from repro.core.arrays import SHUFFLE_FRACTION, ArraySnapshot, DeviceColumns
+
+
+# ---------------------------------------------------------------------------
+# Traced helpers
+# ---------------------------------------------------------------------------
+def ordered_sum(x):
+    """Sum the last axis by sequential left-to-right adds — the same
+    association order as ``np.nansum`` over a small axis. ``jnp.sum``
+    may re-associate, which breaks bit-exactness (§13.3)."""
+    acc = x[..., 0]
+    for j in range(1, x.shape[-1]):
+        acc = acc + x[..., j]
+    return acc
+
+
+def prep(cols, now):
+    """Canonical-order gather + the §11 elementwise projections, traced.
+
+    Returns a dict of (cap,) arrays in canonical row order; ``posv``
+    masks live positions, ``tseg`` is the global task-segment id (task
+    segments are contiguous in canonical order)."""
+    order = cols["order"]
+    cap = order.shape[0]
+    pos = jnp.arange(cap, dtype=jnp.int64)
+    posv = pos < cols["n_rows"]
+
+    def g(name):
+        return cols[name][order]
+
+    a_state = g("a_state")
+    t_state = g("t_state")
+    kind = g("kind")
+    node = g("node")
+    start = g("start")
+    work_total = g("work_total")
+    active = g("active") & posv
+    one = cols["one"]          # opaque 1.0 — the anti-FMA guard (§13.3)
+    sf = cols["sf"]            # opaque SHUFFLE_FRACTION
+    # ProgressScore ζ, replicating ArraySnapshot.progress_at op-for-op.
+    accrue = (a_state == 0) & ((kind == 0) | g("compute"))
+    wd = g("work_done") + (accrue * (
+        (now - g("last_sync")) * cols["node_speed"][node])) * one
+    wd = jnp.minimum(wd, work_total)
+    comp = wd / work_total
+    # int/int: numpy promotes to f64, jax to f32 — cast first (§13.3).
+    shuffle = g("fetched").astype(jnp.float64) / g("deps").astype(jnp.float64)
+    prog = jnp.where(kind == 0, comp,
+                     (sf * shuffle) * one + ((one - sf) * comp) * one)
+    jl = cols["job_local"][g("job")]
+    jls = jnp.where(jl >= 0, jl, 0)
+    torder = g("skey") >> 20
+    prev_t = jnp.concatenate([torder[:1] - 1, torder[:-1]])
+    tseg = jnp.cumsum(torder != prev_t).astype(jnp.int64) - 1
+    return {
+        "cap": cap, "pos": pos, "posv": posv, "order": order,
+        "a_state": a_state, "t_state": t_state, "kind": kind,
+        "node": node, "spec": g("spec"), "start": start, "active": active,
+        "prog": prog, "jl": jl, "jls": jls, "tseg": tseg,
+        "mark": g(TMARK) if TMARK in cols else None,
+        "tprog": g(TPROG) if TPROG in cols else None,
+        "running": active & (a_state == 0) & (t_state == 1),
+    }
+
+
+def seg_sum(mask, seg, vals, nb):
+    """Masked scatter-add into ``nb`` buckets (+1 dump), updates applied
+    in operand (canonical) order — bit-equal to np.bincount (§13.3)."""
+    idx = jnp.where(mask, seg, nb)
+    return jnp.zeros(nb + 1).at[idx].add(jnp.where(mask, vals, 0.0))[:nb]
+
+
+def seg_sum2(mask, seg, vals_a, vals_b, nb):
+    """Two parallel masked bincounts sharing one scatter pass (scatter
+    cost is per-update, so fusing the weight vectors halves it).
+    Per-bucket accumulation order is operand order, as in seg_sum."""
+    idx = jnp.where(mask, seg, nb)
+    upd = jnp.stack([jnp.where(mask, vals_a, 0.0),
+                     jnp.where(mask, vals_b, 0.0)], axis=-1)
+    acc = jnp.zeros((nb + 1, 2)).at[idx].add(upd)[:nb]
+    return acc[:, 0], acc[:, 1]
+
+
+def seg_max(mask, seg, vals, nb, init):
+    idx = jnp.where(mask, seg, nb)
+    return jnp.full(nb + 1, init).at[idx].max(
+        jnp.where(mask, vals, init))[:nb]
+
+
+def seg_any(mask, seg, nb):
+    return seg_sum(mask, seg, jnp.ones(mask.shape), nb) > 0
+
+
+def spatial_mask(P, nh):
+    """Eq. 1 over batched groups — mirror of
+    ``metrics.spatial_slow_mask_batch_np`` with unrolled k-sums."""
+    Pn = P[:, nh]                                  # (g, n, k)
+    valid = ~jnp.isnan(Pn)
+    cnt = valid.sum(axis=2)
+    mean = ordered_sum(jnp.where(valid, Pn, 0.0)) / jnp.maximum(cnt, 1)
+    var = ordered_sum(jnp.where(valid, (Pn - mean[:, :, None]) ** 2, 0.0)) \
+        / jnp.maximum(cnt, 1)
+    std = jnp.sqrt(var)
+    ok = (cnt >= 2) & ~jnp.isnan(P)
+    return ok & (P < (mean - std))
+
+
+def percentile_indexes(m, q, cap, one):
+    """numpy's virtual percentile index over ``m`` sorted samples:
+    (clipped floor index, clipped ceil index, interpolation weight).
+    ``one`` is the opaque anti-FMA guard (§13.3)."""
+    v = ((m - 1) * (q / 100.0)) * one
+    lo = jnp.floor(v)
+    gamma = v - lo
+    loi = jnp.clip(lo.astype(jnp.int64), 0, cap - 1)
+    hii = jnp.clip(loi + 1, 0, jnp.maximum(m - 1, 0))
+    return loi, hii, gamma
+
+
+def percentile_lerp(a, b, gamma, one):
+    """numpy's ``_lerp`` (including its t ≥ 0.5 symmetric form)."""
+    diff = b - a
+    return jnp.where(gamma >= 0.5, b - (diff * (1 - gamma)) * one,
+                     a + (diff * gamma) * one)
+
+
+def np_percentile_sorted(srt, m, q, one):
+    """``np.percentile(x, q)`` given ``srt`` = sorted x padded with +inf
+    and ``m`` live entries."""
+    loi, hii, gamma = percentile_indexes(m, q, srt.shape[-1], one)
+    a = jnp.take_along_axis(srt, loi[..., None], axis=-1)[..., 0]
+    b = jnp.take_along_axis(srt, hii[..., None], axis=-1)[..., 0]
+    return percentile_lerp(a, b, gamma, one)
+
+
+# ---------------------------------------------------------------------------
+# Cores (traced; shared by jit entry points, the pallas backend and the
+# batched sweep)
+# ---------------------------------------------------------------------------
+def spatial_core(cols, nh, now, jcap):
+    """(jcap, n_nodes) Eq. 1 hits (both phases merged)."""
+    p = prep(cols, now)
+    n = nh.shape[0]
+    rt = jnp.maximum(now - p["start"], 1e-9)
+    rho = p["prog"] / rt
+    seg = (p["jls"] * 2 + p["kind"]) * n + p["node"]
+    nb = jcap * 2 * n
+    m = p["running"]
+    sums, counts = seg_sum2(m, seg, rho, jnp.ones(rho.shape), nb)
+    P = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0),
+                  jnp.nan).reshape(jcap * 2, n)
+    fired = spatial_mask(P, nh)
+    return fired.reshape(jcap, 2, n).any(axis=1)
+
+
+def temporal_core(cols, now, samp, init, prevk, n_nodes):
+    """ζ sums per (job, node) over attempts alive at both samples, plus
+    the scratch write-back (returned, applied host-side)."""
+    p = prep(cols, now)
+    jcap = samp.shape[0]
+    n = n_nodes
+    m = p["running"]
+    samp_r = m & samp[p["jls"]]
+    init_r = m & init[p["jls"]]
+    alive = samp_r & (p["mark"] == prevk[p["jls"]])
+    seg = p["jls"] * n + p["node"]
+    nb = jcap * n
+    zn = seg_sum(alive, seg, p["prog"], nb)
+    zp = seg_sum(alive, seg, p["tprog"], nb)
+    cnt = seg_sum(alive, seg, jnp.ones(p["prog"].shape), nb)
+    zeta_now = jnp.where(cnt > 0, zn, jnp.nan).reshape(jcap, n)
+    zeta_prev = jnp.where(cnt > 0, zp, jnp.nan).reshape(jcap, n)
+    wmask = samp_r | init_r
+    newk = jnp.where(samp, prevk + 1, 0)
+    newmark = jnp.where(wmask, newk[p["jls"]], p["mark"])
+    newtprog = jnp.where(wmask, p["prog"], p["tprog"])
+    return zeta_now, zeta_prev, wmask, newmark, newtprog
+
+
+def failure_core(now, node_hb, node_marked, declared, thresholds,
+                 responsive_window):
+    silent = now - node_hb
+    resp = silent <= responsive_window
+    cand = ~resp & ~declared & ~node_marked & (silent > thresholds)
+    return resp, cand
+
+
+def _block_starts(keys, jcap):
+    """Per-job (count, exclusive-start) over a job-keyed sorted array
+    (dump entries carry key == jcap). Integer sums are exact under any
+    association, so the (jcap, cap) count matrix is bit-safe."""
+    jrow = jnp.arange(jcap, dtype=keys.dtype)[:, None]
+    cnt = (keys[None, :] == jrow).sum(axis=1)
+    return cnt, jnp.cumsum(cnt) - cnt
+
+
+def late_core(cols, now, min_runtime, q, jcap):
+    """(jcap,) LATE victim rows (-1 = no victim).
+
+    Selection runs on multi-key sorts instead of per-bucket scatters:
+    grouping keys first, value keys second, the canonical position as
+    the final tie-break — so 'max ζ, first-wins' and 'max estimate,
+    lowest segment' come out of block heads exactly as the reference
+    picks them, and the per-job percentile reads order statistics from
+    a job-keyed sorted run (§13.3: order statistics and first-of-max
+    picks are order-insensitive, hence bit-exact)."""
+    p = prep(cols, now)
+    cap = p["cap"]
+    m = p["running"]
+    big = jnp.int64(cap)
+    k1 = jnp.where(m, p["tseg"], big)
+    # Per-task best running attempt: max ζ first, canonical position as
+    # the tie-break (= Python max()'s first-wins).
+    k1s, _negp, bpos, best_prog, best_start, sjl = jax.lax.sort(
+        (k1, -p["prog"], p["pos"], p["prog"], p["start"], p["jls"]),
+        num_keys=3)
+    first = jnp.concatenate([jnp.ones(1, dtype=bool), k1s[1:] != k1s[:-1]])
+    rep = (k1s < big) & first                  # block head = the best row
+    # Any speculative sibling among the task's running attempts: same
+    # block structure (identical key multiset), spec-first ordering.
+    _k1s2, negspec = jax.lax.sort(
+        (k1, -p["spec"].astype(jnp.int64)), num_keys=2)
+    has_spec = negspec == -1
+    ok = rep & ~has_spec & (now - best_start >= min_runtime)
+    rho = best_prog / jnp.maximum(now - best_start, 1e-9)
+    est = (1.0 - best_prog) / jnp.maximum(rho, 1e-9)
+    # Per-job percentile over the ok candidates: job-keyed sorted run +
+    # numpy's linear interpolation on the block's order statistics.
+    kj = jnp.where(ok, sjl, jnp.int64(jcap))
+    kjs, rhos = jax.lax.sort((kj, rho), num_keys=2)
+    msel_j, starts_j = _block_starts(kjs, jcap)
+    one = cols["one"]
+    loi, hii, gamma = percentile_indexes(msel_j, q, cap, one)
+    a = rhos[jnp.clip(starts_j + loi, 0, cap - 1)]
+    b = rhos[jnp.clip(starts_j + hii, 0, cap - 1)]
+    thresh = percentile_lerp(a, b, gamma, one)
+    slow = ok & (rho < thresh[sjl])
+    # Victim = max est_remaining among slow, lowest task on ties.
+    kv = jnp.where(slow, sjl, jnp.int64(jcap))
+    kvs, _nege, _tie, vpos = jax.lax.sort((kv, -est, k1s, bpos),
+                                          num_keys=3)
+    nslow_j, starts_v = _block_starts(kvs, jcap)
+    vict_row = cols["order"][vpos[jnp.clip(starts_v, 0, cap - 1)] % cap]
+    nrows_j, _ = _block_starts(jnp.where(m, p["jls"], jnp.int64(jcap)),
+                               jcap)
+    good = (nrows_j >= 2) & (msel_j >= 2) & (nslow_j > 0)
+    return jnp.where(good, vict_row, -1)
+
+
+def winning_core(cols, now, win_factor, jcap):
+    """(jcap,) collective 'speculation is winning' verdicts."""
+    p = prep(cols, now)
+    cap = p["cap"]
+    m = p["active"] & (p["a_state"] == 0)    # running attempts, any task
+    tseg = p["tseg"]
+    rate = p["prog"] / jnp.maximum(now - p["start"], 1e-9)
+    hi = seg_max(m & p["spec"], tseg, rate, cap, -jnp.inf)
+    lo = seg_max(m & ~p["spec"], tseg, rate, cap, -jnp.inf)
+    has_spec = seg_any(m & p["spec"], tseg, cap)
+    has_orig = seg_any(m & ~p["spec"], tseg, cap)
+    win_seg = has_spec & (~has_orig | (hi > lo * win_factor))
+    wjl = seg_max(m, tseg, p["jls"], cap, jnp.int64(-1))
+    return seg_any(win_seg & (wjl >= 0), jnp.where(wjl >= 0, wjl, 0), jcap)
+
+
+def reap_core(cols, now):
+    """(cap,) canonical-position mask of reapable sibling attempts."""
+    p = prep(cols, now)
+    cap = p["cap"]
+    live = p["active"] & (p["t_state"] == 2)
+    done = seg_any(live & (p["a_state"] == 1), p["tseg"], cap)
+    return live & done[p["tseg"]] & (p["a_state"] == 0)
+
+
+def assess_summary_core(cols, nh, now, min_runtime, q, win_factor,
+                        declared, thresholds, responsive_window, jcap):
+    """One whole assessment step as a pure function — the unit the
+    batched sweep vmaps across fault scenarios (§13.4). Temporal state
+    is scenario-independent here: the sweep scores a single step, so ζ
+    deltas (which need two samples) are not part of the summary."""
+    hits = spatial_core(cols, nh, now, jcap)
+    resp, cand = failure_core(now, cols["node_hb"], cols["node_marked"],
+                              declared, thresholds, responsive_window)
+    victims = late_core(cols, now, min_runtime, q, jcap)
+    win = winning_core(cols, now, win_factor, jcap)
+    reap = reap_core(cols, now)
+    return {
+        "spatial_hits": hits,
+        "responsive": resp,
+        "failed": cand,
+        "late_victims": victims,
+        "winning": win,
+        "n_reap": reap.sum(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Jit entry points (module-level: the compile cache is shared across
+# simulations; padded shapes keep it warm)
+# ---------------------------------------------------------------------------
+_spatial_jit = jax.jit(spatial_core, static_argnames=("jcap",))
+_temporal_jit = jax.jit(temporal_core, static_argnames=("n_nodes",))
+_failure_jit = jax.jit(failure_core)
+_late_jit = jax.jit(late_core, static_argnames=("jcap",))
+_winning_jit = jax.jit(winning_core, static_argnames=("jcap",))
+_reap_jit = jax.jit(reap_core)
+
+
+class JaxBackend(AssessmentBackend):
+    name = "jax"
+
+    # Entry points — the pallas subclass overrides the hot two.
+    _spatial_fn = staticmethod(_spatial_jit)
+    _temporal_fn = staticmethod(_temporal_jit)
+    _late_fn = staticmethod(_late_jit)
+    _winning_fn = staticmethod(_winning_jit)
+    _reap_fn = staticmethod(_reap_jit)
+
+    def __init__(self) -> None:
+        self._dc: Optional[DeviceColumns] = None
+        self._memo: Tuple[float, Optional[tuple]] = (np.nan, None)
+        # The collective queries winning() once per straggler job within
+        # a tick; the whole (jcap,) vector is computed on the first call.
+        self._win_memo = (np.nan, np.nan, None, None)
+        self._nh_dev = None
+        self._nh_host = None
+
+    # ------------------------------------------------------------------
+    def _cols(self, arr: ArraySnapshot, now: float, active) -> tuple:
+        """Upload the padded mirror once per tick (assessments never
+        mutate state mid-tick; the clock strictly increases). Keyed on
+        the snapshot too — an instance may be shared across sims."""
+        if self._memo[0] == now and self._dc is not None \
+                and self._dc.arr is arr:
+            return self._memo[1]
+        if self._dc is None or self._dc.arr is not arr:
+            self._dc = DeviceColumns(arr)
+        arr.scratch(TMARK, np.int64, -1)
+        arr.scratch(TPROG, np.float64, np.nan)
+        host = self._dc.refresh(active, scratch_names=(TMARK, TPROG))
+        with enable_x64():
+            dev = {}
+            for k, v in host.items():
+                if isinstance(v, np.ndarray):
+                    dev[k] = jnp.asarray(v)
+                else:
+                    dev[k] = jnp.asarray(np.int64(v))
+            # Opaque scalars: anti-FMA guard + the shuffle fraction
+            # (shipped as data so the simplifier cannot re-fold, §13.3).
+            dev["one"] = jnp.float64(1.0)
+            dev["sf"] = jnp.float64(SHUFFLE_FRACTION)
+        out = (dev, self._dc.jcap)
+        self._memo = (now, out)
+        return out
+
+    def _nh(self, neighborhoods: np.ndarray):
+        if self._nh_host is not neighborhoods:
+            with enable_x64():
+                self._nh_dev = jnp.asarray(
+                    np.asarray(neighborhoods, dtype=np.int64))
+            self._nh_host = neighborhoods
+        return self._nh_dev
+
+    # ------------------------------------------------------------------
+    def spatial_hits(self, arr, now, active, neighborhoods):
+        cols, jcap = self._cols(arr, now, active)
+        with enable_x64():
+            hits = self._spatial_fn(cols, self._nh(neighborhoods),
+                                    jnp.float64(now), jcap=jcap)
+        return np.asarray(hits)[:len(active)]
+
+    def temporal_zeta(self, arr, now, active, samp_flag, init_flag, prevk):
+        cols, jcap = self._cols(arr, now, active)
+        J = len(active)
+        n = len(arr.node_ids)
+        sampd = np.zeros(jcap, dtype=bool)
+        sampd[:J] = samp_flag
+        initd = np.zeros(jcap, dtype=bool)
+        initd[:J] = init_flag
+        prevkd = np.full(jcap, -2, dtype=np.int64)
+        prevkd[:J] = prevk
+        with enable_x64():
+            zn, zp, wmask, newmark, newtprog = self._temporal_fn(
+                cols, jnp.float64(now), jnp.asarray(sampd),
+                jnp.asarray(initd), jnp.asarray(prevkd), n_nodes=n)
+        # Scratch write-back: the device computed this sample's marks in
+        # canonical order; apply them to the host columns.
+        n_rows = arr.n
+        w = np.asarray(wmask)[:n_rows]
+        if w.any():
+            rows = arr.order()[w]
+            arr.scratch(TMARK, np.int64, -1)[rows] = \
+                np.asarray(newmark)[:n_rows][w]
+            arr.scratch(TPROG, np.float64, np.nan)[rows] = \
+                np.asarray(newtprog)[:n_rows][w]
+        return np.asarray(zn)[:J], np.asarray(zp)[:J]
+
+    def failure_masks(self, now, node_hb, node_marked, declared,
+                      thresholds, responsive_window):
+        with enable_x64():
+            resp, cand = _failure_jit(
+                jnp.float64(now), jnp.asarray(node_hb),
+                jnp.asarray(node_marked), jnp.asarray(declared),
+                jnp.asarray(thresholds), jnp.float64(responsive_window))
+        return np.asarray(resp), np.asarray(cand)
+
+    def late_victims(self, arr, now, active, eligible, min_runtime,
+                     slow_task_percentile):
+        cols, jcap = self._cols(arr, now, active)
+        with enable_x64():
+            victims = self._late_fn(cols, jnp.float64(now),
+                                    jnp.float64(min_runtime),
+                                    jnp.float64(slow_task_percentile),
+                                    jcap=jcap)
+        return np.asarray(victims)[:len(active)]
+
+    def winning(self, arr, now, job_idx, win_factor):
+        active = arr.active_jobs()
+        if self._win_memo[0] == now and self._win_memo[1] == win_factor \
+                and self._win_memo[3] is arr:
+            win = self._win_memo[2]
+        else:
+            cols, jcap = self._cols(arr, now, active)
+            with enable_x64():
+                win = np.asarray(self._winning_fn(
+                    cols, jnp.float64(now), jnp.float64(win_factor),
+                    jcap=jcap))
+            self._win_memo = (now, win_factor, win, arr)
+        jl = arr.job_local_map(active)
+        pos = jl[job_idx] if 0 <= job_idx < len(jl) else -1
+        if pos < 0:
+            return False
+        return bool(win[pos])
+
+    def reap_rows(self, arr, now):
+        active = arr.active_jobs()
+        cols, _jcap = self._cols(arr, now, active)
+        with enable_x64():
+            reap = self._reap_fn(cols, jnp.float64(now))
+        mask = np.asarray(reap)[:arr.n]
+        return arr.order()[mask]
+
+
+__all__ = [
+    "JaxBackend",
+    "assess_summary_core",
+    "late_core",
+    "np_percentile_sorted",
+    "ordered_sum",
+    "percentile_indexes",
+    "percentile_lerp",
+    "prep",
+    "reap_core",
+    "spatial_core",
+    "spatial_mask",
+    "temporal_core",
+    "winning_core",
+]

@@ -1,0 +1,172 @@
+"""The reference assessment backend: PR 1's columnar numpy reductions,
+moved verbatim behind :class:`~repro.accel.base.AssessmentBackend`.
+
+This is the bit-exactness anchor: every op replicates the per-object
+reference arithmetic operation-for-operation (DESIGN.md §11.3), and the
+jax/pallas backends are in turn gated bit-exact against *this* module
+(§13.3, tests/test_accel.py).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.accel.base import TMARK, TPROG, AssessmentBackend
+from repro.core import metrics as M
+from repro.core.arrays import A_RUNNING, T_RUNNING, ArraySnapshot
+
+
+class NumpyBackend(AssessmentBackend):
+    name = "numpy"
+
+    def __init__(self) -> None:
+        # Per-tick memo of the shared running-row extraction (glance
+        # spatial + temporal both consume it within one assess call; the
+        # clock strictly increases between assessments). Keyed on the
+        # snapshot too — a backend instance may be shared across sims.
+        self._memo: Tuple[float, Optional[ArraySnapshot], Optional[tuple]] \
+            = (np.nan, None, None)
+
+    # ------------------------------------------------------------------
+    def _tick(self, arr: ArraySnapshot, now: float,
+              active: List[Tuple[str, int]]) -> tuple:
+        if self._memo[0] == now and self._memo[1] is arr:
+            return self._memo[2]
+        rows = arr.running_rows(now)
+        prog = arr.progress_at(now, rows)
+        jl = arr.job_local_map(active)[arr.job[rows]]
+        data = (rows, prog, jl)
+        self._memo = (now, arr, data)
+        return data
+
+    # -- Eq. 1 ----------------------------------------------------------
+    def spatial_hits(self, arr, now, active, neighborhoods):
+        rows, prog, jl = self._tick(arr, now, active)
+        n = len(arr.node_ids)
+        J = len(active)
+        fired = np.zeros((J * 2, n), dtype=bool)
+        if len(rows):
+            rt = np.maximum(now - arr.start[rows], 1e-9)
+            rho = prog / rt
+            seg = (jl * 2 + arr.kind[rows]) * n + arr.node[rows]
+            # bincount accumulates sequentially in input order — the same
+            # partial-sum order as the reference append loops.
+            sums = np.bincount(seg, weights=rho, minlength=J * 2 * n)
+            counts = np.bincount(seg, minlength=J * 2 * n).astype(float)
+            with np.errstate(invalid="ignore"):
+                P = np.where(counts > 0, sums / np.maximum(counts, 1.0),
+                             np.nan).reshape(J * 2, n)
+            fired = M.spatial_slow_mask_batch_np(P, neighborhoods)
+        return fired.reshape(J, 2, n).any(axis=1)
+
+    # -- Eq. 2–3 --------------------------------------------------------
+    def temporal_zeta(self, arr, now, active, samp_flag, init_flag, prevk):
+        rows, prog, jl = self._tick(arr, now, active)
+        n = len(arr.node_ids)
+        J = len(active)
+        mark = arr.scratch(TMARK, np.int64, -1)
+        tprog = arr.scratch(TPROG, np.float64, np.nan)
+        if not len(rows):
+            return np.full((J, n), np.nan), np.full((J, n), np.nan)
+        # Sampled jobs: ζ sums by (job, node) over attempts alive at both
+        # samples, one bincount pass for every job at once.
+        smask = samp_flag[jl]
+        srows, sprog, sjl = rows[smask], prog[smask], jl[smask]
+        alive = mark[srows] == prevk[sjl]
+        arows, ajl = srows[alive], sjl[alive]
+        seg = ajl * n + arr.node[arows]
+        zn = np.bincount(seg, weights=sprog[alive], minlength=J * n)
+        zp = np.bincount(seg, weights=tprog[arows], minlength=J * n)
+        cnt = np.bincount(seg, minlength=J * n)
+        zeta_now = np.where(cnt > 0, zn, np.nan).reshape(J, n)
+        zeta_prev = np.where(cnt > 0, zp, np.nan).reshape(J, n)
+        # Record this sample's per-attempt ζ (sampled + newly seen jobs).
+        wmask = smask | init_flag[jl]
+        wrows = rows[wmask]
+        newk = np.where(samp_flag, prevk + 1, 0)
+        mark[wrows] = newk[jl[wmask]]
+        tprog[wrows] = prog[wmask]
+        return zeta_now, zeta_prev
+
+    # -- Eq. 4 ----------------------------------------------------------
+    def failure_masks(self, now, node_hb, node_marked, declared,
+                      thresholds, responsive_window):
+        silent = now - node_hb
+        resp = silent <= responsive_window
+        cand = ~resp & ~declared & ~node_marked & (silent > thresholds)
+        return resp, cand
+
+    # -- LATE -----------------------------------------------------------
+    def late_victims(self, arr, now, active, eligible, min_runtime,
+                     slow_task_percentile):
+        victims = np.full(len(active), -1, dtype=np.int64)
+        for pos, (_jid, jidx) in enumerate(active):
+            if eligible[pos]:
+                victims[pos] = self._late_victim(
+                    arr, now, jidx, min_runtime, slow_task_percentile)
+        return victims
+
+    def _late_victim(self, arr, now, job_idx, min_runtime,
+                     slow_task_percentile) -> int:
+        m = arr.active[:arr.n] & (arr.job[:arr.n] == job_idx) \
+            & (arr.a_state[:arr.n] == A_RUNNING) \
+            & (arr.t_state[:arr.n] == T_RUNNING)
+        rows = arr.rows_where(m)
+        if len(rows) < 2:
+            return -1
+        # Segment per task (rows are canonical, so task segments are
+        # contiguous); per task pick the max-progress running attempt,
+        # first-wins on ties — exactly Python's max() over attempt order.
+        torder = arr.skey[rows] >> 20
+        starts, inv = arr.task_segments(torder)
+        has_spec = np.bincount(inv, weights=arr.spec[rows],
+                               minlength=len(starts)) > 0
+        prog = arr.progress_at(now, rows)
+        segmax = np.maximum.reduceat(prog, starts)
+        cand = np.flatnonzero(prog == segmax[inv])
+        _, first = np.unique(inv[cand], return_index=True)
+        best = cand[first]                      # one row-position per task
+        ok = ~has_spec & (now - arr.start[rows[best]] >= min_runtime)
+        sel = best[ok]
+        if len(sel) < 2:
+            # LATE needs variation among tasks to rank stragglers — with
+            # zero or one candidate there is nothing to compare against
+            # (the scope-limited myopia, faithfully reproduced).
+            return -1
+        p = prog[sel]
+        rho = p / np.maximum(now - arr.start[rows[sel]], 1e-9)
+        est_remaining = (1.0 - p) / np.maximum(rho, 1e-9)
+        thresh = np.percentile(rho, slow_task_percentile)
+        slow = np.flatnonzero(rho < thresh)
+        if not len(slow):
+            return -1
+        return int(rows[sel][slow[np.argmax(est_remaining[slow])]])
+
+    # -- collective -----------------------------------------------------
+    def winning(self, arr, now, job_idx, win_factor):
+        """Per-task max progress rate of original vs speculative running
+        attempts, any task wins ⇒ ramp. Boolean-equivalent to the
+        reference scan (max is order-free and each rate is computed with
+        identical arithmetic)."""
+        m = arr.active[:arr.n] & (arr.job[:arr.n] == job_idx) \
+            & (arr.a_state[:arr.n] == A_RUNNING)
+        rows = arr.rows_where(m)
+        if not len(rows) or not arr.spec[rows].any():
+            return False
+        rate = arr.progress_at(now, rows) \
+            / np.maximum(now - arr.start[rows], 1e-9)
+        starts, inv = arr.task_segments(arr.skey[rows] >> 20)
+        k = len(starts)
+        lo = np.full(k, -np.inf)   # max original rate per task
+        hi = np.full(k, -np.inf)   # max speculative rate per task
+        sp = arr.spec[rows]
+        np.maximum.at(hi, inv[sp], rate[sp])
+        np.maximum.at(lo, inv[~sp], rate[~sp])
+        has_spec = np.bincount(inv, weights=sp, minlength=k) > 0
+        has_orig = np.bincount(inv, weights=~sp, minlength=k) > 0
+        win = has_spec & (~has_orig | (hi > lo * win_factor))
+        return bool(win.any())
+
+    def reap_rows(self, arr, now):
+        return arr.reap_rows()

@@ -31,6 +31,7 @@ from repro.core.types import AttemptState, TaskKind, TaskState
 
 __all__ = [
     "ArraySnapshot",
+    "DeviceColumns",
     "SHUFFLE_FRACTION",
     "ASTATE",
     "TSTATE",
@@ -354,3 +355,153 @@ class ArraySnapshot:
         for pos, (_jid, jidx) in enumerate(active):
             local[jidx] = pos
         return local
+
+    def clone_for_assessment(self) -> "ArraySnapshot":
+        """Deep-copy the columns and registries (NOT the substrate owners)
+        so a fault-scenario sweep can perturb node/attempt state without
+        touching the live simulation (DESIGN.md §13.4)."""
+        c = ArraySnapshot.__new__(ArraySnapshot)
+        c.node_ids = list(self.node_ids)
+        c.node_index = dict(self.node_index)
+        for name in ("node_hb", "node_speed", "node_free", "node_total",
+                     "node_marked"):
+            setattr(c, name, getattr(self, name).copy())
+        c.job_index = dict(self.job_index)
+        c.job_ids = list(self.job_ids)
+        c._job_active = list(self._job_active)
+        c._job_tasks = list(self._job_tasks)
+        c.n = self.n
+        c._float_cols = list(self._float_cols)
+        c._int_like_cols = list(self._int_like_cols)
+        for name in c._float_cols + c._int_like_cols:
+            setattr(c, name, getattr(self, name).copy())
+        c.attempt_ids = list(self.attempt_ids)
+        c.task_ids = list(self.task_ids)
+        c._owners = [None] * len(self._owners)
+        c._scratch = {name: (col.copy(), fill)
+                      for name, (col, fill) in self._scratch.items()}
+        c._order = None if self._order is None else self._order.copy()
+        c._n_dead = self._n_dead
+        c._rr_memo = (np.nan, None)
+        # Drift guard: a field added to __init__ but not cloned here
+        # would leak live state into (or crash) the scenario sweep.
+        assert set(c.__dict__) == set(self.__dict__), \
+            set(self.__dict__) ^ set(c.__dict__)
+        return c
+
+
+# ---------------------------------------------------------------------------
+# Padded device mirrors (DESIGN.md §13.2)
+# ---------------------------------------------------------------------------
+class DeviceColumns:
+    """Padded, fixed-shape host mirrors of an :class:`ArraySnapshot` for
+    jit/Pallas assessment kernels (DESIGN.md §13.2).
+
+    Device kernels need static shapes or every tick retraces. This
+    exporter keeps one pre-padded buffer per attempt column:
+
+    - row capacity is a power of two (min :data:`MIN_ROWS`), grown by
+      doubling and **never shrunk** — a jit specialization is re-used
+      until the simulation genuinely outgrows it;
+    - pad rows (and rows vacated by compaction) hold neutral fills:
+      zeros, except ``work_total``/``deps`` = 1 so unmasked elementwise
+      math (the ζ progress projection divides by both) stays finite —
+      kernels must still mask with ``position < n_rows`` before any
+      reduction;
+    - the canonical row order (:meth:`ArraySnapshot.order`) is exported
+      zero-padded, so device segmented reductions visit live rows in
+      exactly the reference accumulation order (§11.3);
+    - the job axis is padded the same way (``jobs_cap`` for the
+      job-registry axis, ``jcap`` for the active-job output axis).
+
+    ``refresh`` returns plain numpy arrays; the caller owns the
+    host→device transfer (keeping this module import-light).
+    """
+
+    MIN_ROWS = 256
+    MIN_JOBS = 4
+
+    # Columns exported per attempt row, with their pad fill.
+    _FILLS = {
+        "a_state": 0, "t_state": 0, "kind": 0, "job": 0, "node": 0,
+        "spec": False, "start": 0.0, "work_done": 0.0, "work_total": 1.0,
+        "last_sync": 0.0, "fetched": 0, "deps": 1, "compute": False,
+        "active": False, "skey": 0, "sh_ready": 0, "sh_inflight": 0,
+        "sh_fail": 0,
+    }
+
+    def __init__(self, arr: ArraySnapshot):
+        self.arr = arr
+        self.cap = 0
+        self.jobs_cap = 0
+        self.jcap = 0
+        self._buf: Dict[str, np.ndarray] = {}
+        self._scratch_buf: Dict[str, np.ndarray] = {}
+        self._order_buf = np.zeros(0, dtype=np.int64)
+        self._jl_buf = np.zeros(0, dtype=np.int64)
+        self._last_n = 0
+
+    @staticmethod
+    def _pow2(n: int, floor: int) -> int:
+        cap = floor
+        while cap < n:
+            cap *= 2
+        return cap
+
+    def refresh(self, active: List[Tuple[str, int]],
+                scratch_names: Tuple[str, ...] = ()) -> Dict[str, object]:
+        """Re-mirror the snapshot; returns the padded column dict."""
+        arr = self.arr
+        n = arr.n
+        cap = self._pow2(max(n, 1), max(self.cap, self.MIN_ROWS))
+        if cap != self.cap:
+            self.cap = cap
+            for name, fill in self._FILLS.items():
+                col = getattr(arr, name)
+                self._buf[name] = np.full(cap, fill, dtype=col.dtype)
+            self._scratch_buf = {}
+            self._order_buf = np.zeros(cap, dtype=np.int64)
+            self._last_n = 0
+        for name in scratch_names:
+            if name not in self._scratch_buf:
+                col, fill = arr._scratch[name]
+                self._scratch_buf[name] = np.full(cap, fill,
+                                                  dtype=col.dtype)
+        # Rows vacated since the last refresh (compaction) must re-pad.
+        clear_to = max(self._last_n, n)
+        for name, fill in self._FILLS.items():
+            buf = self._buf[name]
+            buf[:n] = getattr(arr, name)[:n]
+            if clear_to > n:
+                buf[n:clear_to] = fill
+        for name, buf in self._scratch_buf.items():
+            col, fill = arr._scratch[name]
+            buf[:n] = col[:n]
+            if clear_to > n:
+                buf[n:clear_to] = fill
+        order = arr.order()
+        self._order_buf[:n] = order
+        if clear_to > n:
+            self._order_buf[n:clear_to] = 0
+        self._last_n = n
+        # Job axes: the registry axis (job_local gather) and the active
+        # axis (per-job kernel outputs) both grow by doubling.
+        self.jobs_cap = self._pow2(max(len(arr.job_ids), 1),
+                                   max(self.jobs_cap, self.MIN_JOBS))
+        jl = arr.job_local_map(active)
+        if len(self._jl_buf) != self.jobs_cap:
+            self._jl_buf = np.full(self.jobs_cap, -1, dtype=np.int64)
+        self._jl_buf[:len(jl)] = jl
+        self._jl_buf[len(jl):] = -1
+        self.jcap = self._pow2(max(len(active), 1),
+                               max(self.jcap, self.MIN_JOBS))
+        out: Dict[str, object] = dict(self._buf)
+        out.update(self._scratch_buf)
+        out["order"] = self._order_buf
+        out["job_local"] = self._jl_buf
+        out["n_rows"] = n
+        out["n_jobs"] = len(active)
+        out["node_hb"] = arr.node_hb
+        out["node_speed"] = arr.node_speed
+        out["node_marked"] = arr.node_marked
+        return out

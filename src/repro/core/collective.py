@@ -17,8 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-import numpy as np
-
+from repro.accel.base import AssessmentBackend, get_backend
 from repro.core.types import (
     AttemptState,
     ClusterSnapshot,
@@ -44,8 +43,10 @@ class CollectiveConfig:
 class CollectiveSpeculation:
     """Tracks the ramp state and turns straggler sets into launch actions."""
 
-    def __init__(self, cfg: CollectiveConfig = CollectiveConfig()):
+    def __init__(self, cfg: CollectiveConfig = CollectiveConfig(),
+                 backend: "Optional[str | AssessmentBackend]" = None):
         self.cfg = cfg
+        self.backend = get_backend(backend)
         # Per job: ramp round and last ramp time.
         self._round: Dict[str, int] = {}
         self._last_check: Dict[str, float] = {}
@@ -58,7 +59,11 @@ class CollectiveSpeculation:
         the gate for continuing the geometric ramp."""
         arr = getattr(snap, "arrays", None)
         if arr is not None:
-            return self._winning_arrays(snap.now, arr, job_id)
+            jidx = arr.job_index.get(job_id)
+            if jidx is None:
+                return False
+            return self.backend.winning(arr, snap.now, jidx,
+                                        self.cfg.win_factor)
         for t in snap.tasks.values():
             if t.job_id != job_id:
                 continue
@@ -73,34 +78,6 @@ class CollectiveSpeculation:
             if s > o * self.cfg.win_factor:
                 return True
         return False
-
-    def _winning_arrays(self, now: float, arr, job_id: str) -> bool:
-        """Columnar mirror of the winning test: per-task max progress rate
-        of original vs speculative running attempts, any task wins ⇒ ramp.
-        Boolean-equivalent to the reference scan (max is order-free and
-        each rate is computed with identical arithmetic)."""
-        from repro.core.arrays import A_RUNNING
-        jidx = arr.job_index.get(job_id)
-        if jidx is None:
-            return False
-        m = arr.active[:arr.n] & (arr.job[:arr.n] == jidx) \
-            & (arr.a_state[:arr.n] == A_RUNNING)
-        rows = arr.rows_where(m)
-        if not len(rows) or not arr.spec[rows].any():
-            return False
-        rate = arr.progress_at(now, rows) \
-            / np.maximum(now - arr.start[rows], 1e-9)
-        starts, inv = arr.task_segments(arr.skey[rows] >> 20)
-        k = len(starts)
-        lo = np.full(k, -np.inf)   # max original rate per task
-        hi = np.full(k, -np.inf)   # max speculative rate per task
-        sp = arr.spec[rows]
-        np.maximum.at(hi, inv[sp], rate[sp])
-        np.maximum.at(lo, inv[~sp], rate[~sp])
-        has_spec = np.bincount(inv, weights=sp, minlength=k) > 0
-        has_orig = np.bincount(inv, weights=~sp, minlength=k) > 0
-        win = has_spec & (~has_orig | (hi > lo * self.cfg.win_factor))
-        return bool(win.any())
 
     def _free_in(self, snap: ClusterSnapshot, nodes: Sequence[str]) -> int:
         return sum(snap.nodes[n].free_containers for n in nodes
@@ -181,7 +158,7 @@ class CollectiveSpeculation:
         if arr is not None:
             return [KillAttempt(attempt_id=arr.attempt_ids[r],
                                 reason="sibling attempt completed")
-                    for r in arr.reap_rows()]
+                    for r in self.backend.reap_rows(arr, snap.now)]
         kills: List[KillAttempt] = []
         for t in snap.tasks.values():
             # Task must be COMPLETED *now*: a re-activated producer (output

@@ -16,6 +16,12 @@ Two assessment paths share all state semantics (DESIGN.md §11):
   Eq. 4 monitor is a handful of whole-cluster array ops. It is
   bit-equivalent to the reference path (same operand order, same
   accumulation order) — enforced by tests/test_columnar.py.
+
+The vectorized path's dense math runs behind a pluggable
+``AssessmentBackend`` (DESIGN.md §13): ``numpy`` (the reference),
+``jax`` (jit device kernels), or ``pallas`` — selected via
+``GlanceConfig.assess_backend``. All glance *state* (streaks, Δ
+histories, outage windows) stays host-side regardless of backend.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.accel.base import AssessmentBackend, get_backend
 from repro.core import metrics as M
 from repro.core.types import AttemptState, ClusterSnapshot, TaskKind, TaskState
 
@@ -63,6 +70,33 @@ class GlanceConfig:
     enable_spatial: bool = True
     enable_temporal: bool = True
     enable_failure: bool = True
+    # Assessment-compute backend for the vectorized (columnar) path:
+    # "numpy" | "jax" | "pallas" (DESIGN.md §13).
+    assess_backend: str = "numpy"
+
+
+def build_neighborhoods(node_ids: Sequence[str], size_neighbor: int = 4,
+                        topology: Optional[Dict[str, Sequence[str]]] = None
+                        ) -> np.ndarray:
+    """(n, k) neighborhood index rows. Default = ring segments of
+    ``size_neighbor`` (the ICI-torus segment / rack analogue); an
+    explicit adjacency overrides. Shared by the glance and the batched
+    sweep (DESIGN.md §13.4)."""
+    n = len(node_ids)
+    k = min(size_neighbor, n)
+    if topology is not None:
+        node_index = {nid: i for i, nid in enumerate(node_ids)}
+        rows = []
+        for nid in node_ids:
+            nh = [node_index[m] for m in topology[nid]][:k]
+            while len(nh) < k:  # pad with self
+                nh.append(node_index[nid])
+            rows.append(nh)
+        return np.asarray(rows, dtype=int)
+    # Ring: node i's neighborhood = {i, i±1, ...} wrapped, k wide.
+    offsets = np.arange(k) - (k // 2)
+    idx = (np.arange(n)[:, None] + offsets[None, :]) % n
+    return idx.astype(int)
 
 
 @dataclasses.dataclass
@@ -79,8 +113,11 @@ class NeighborhoodGlance:
     """Stateful tri-assessment over coordinator snapshots."""
 
     def __init__(self, node_ids: Sequence[str], cfg: GlanceConfig = GlanceConfig(),
-                 topology: Optional[Dict[str, Sequence[str]]] = None):
+                 topology: Optional[Dict[str, Sequence[str]]] = None,
+                 backend: Optional[AssessmentBackend] = None):
         self.cfg = cfg
+        self.backend = backend if backend is not None \
+            else get_backend(cfg.assess_backend)
         self.node_ids: List[str] = list(node_ids)
         self.node_index = {n: i for i, n in enumerate(self.node_ids)}
         self._neighborhoods = self._build_neighborhoods(topology)
@@ -107,25 +144,9 @@ class NeighborhoodGlance:
         self._spatial_streak: Dict[Tuple[str, str], int] = {}
         self._v_streak: Dict[str, np.ndarray] = {}
 
-    # ------------------------------------------------------------------
-    # Topology: default = ring segments of size_neighbor (the ICI-torus
-    # segment / rack analogue); callers may pass an explicit adjacency.
-    # ------------------------------------------------------------------
     def _build_neighborhoods(self, topology) -> np.ndarray:
-        n = len(self.node_ids)
-        k = min(self.cfg.size_neighbor, n)
-        if topology is not None:
-            rows = []
-            for nid in self.node_ids:
-                nh = [self.node_index[m] for m in topology[nid]][:k]
-                while len(nh) < k:  # pad with self
-                    nh.append(self.node_index[nid])
-                rows.append(nh)
-            return np.asarray(rows, dtype=int)
-        # Ring: node i's neighborhood = {i, i±1, ...} wrapped, k wide.
-        offsets = np.arange(k) - (k // 2)
-        idx = (np.arange(n)[:, None] + offsets[None, :]) % n
-        return idx.astype(int)
+        return build_neighborhoods(self.node_ids, self.cfg.size_neighbor,
+                                   topology)
 
     def neighbors_of(self, node_id: str) -> List[str]:
         row = self._neighborhoods[self.node_index[node_id]]
@@ -303,17 +324,10 @@ class NeighborhoodGlance:
         J = len(active)
         spatial_fire = temporal_fire = None
         if J and (self.cfg.enable_spatial or self.cfg.enable_temporal):
-            # One shared candidate extraction: attempt RUNNING ∧ task
-            # RUNNING ∧ job active, rows in canonical reference order.
-            rows = arr.running_rows(now)
-            prog = arr.progress_at(now, rows)
-            jl = arr.job_local_map(active)[arr.job[rows]]
             if self.cfg.enable_spatial:
-                spatial_fire = self._spatial_arrays(
-                    now, arr, rows, prog, jl, active)
+                spatial_fire = self._spatial_arrays(now, arr, active)
             if self.cfg.enable_temporal:
-                temporal_fire = self._temporal_arrays(
-                    now, arr, rows, prog, jl, active)
+                temporal_fire = self._temporal_arrays(now, arr, active)
         slow: List[Tuple[str, str, str]] = []
         for pos, (jid, _jidx) in enumerate(active):
             if spatial_fire is not None:
@@ -324,25 +338,12 @@ class NeighborhoodGlance:
                     slow.append((jid, self.node_ids[i], "temporal"))
         return GlanceVerdict(slow_nodes=slow, failed_nodes=failed)
 
-    # --- Eq. 1, all jobs × both phases in one segmented pass -----------
-    def _spatial_arrays(self, now: float, arr, rows, prog, jl,
-                        active) -> np.ndarray:
+    # --- Eq. 1, all jobs × both phases in one backend pass -------------
+    def _spatial_arrays(self, now: float, arr, active) -> np.ndarray:
         n = len(self.node_ids)
         J = len(active)
-        fired = np.zeros((J * 2, n), dtype=bool)
-        if len(rows):
-            rt = np.maximum(now - arr.start[rows], 1e-9)
-            rho = prog / rt
-            seg = (jl * 2 + arr.kind[rows]) * n + arr.node[rows]
-            # bincount accumulates sequentially in input order — the same
-            # partial-sum order as the reference append loops.
-            sums = np.bincount(seg, weights=rho, minlength=J * 2 * n)
-            counts = np.bincount(seg, minlength=J * 2 * n).astype(float)
-            with np.errstate(invalid="ignore"):
-                P = np.where(counts > 0, sums / np.maximum(counts, 1.0),
-                             np.nan).reshape(J * 2, n)
-            fired = M.spatial_slow_mask_batch_np(P, self._neighborhoods)
-        hits = fired.reshape(J, 2, n).any(axis=1)
+        hits = self.backend.spatial_hits(arr, now, active,
+                                         self._neighborhoods)
         fire = np.zeros((J, n), dtype=bool)
         for pos, (jid, _jidx) in enumerate(active):
             streak = self._v_streak.get(jid)
@@ -358,13 +359,10 @@ class NeighborhoodGlance:
         return fire
 
     # --- Eq. 2–3, per-attempt work batched across all sampled jobs -----
-    def _temporal_arrays(self, now: float, arr, rows, prog, jl,
-                         active) -> np.ndarray:
+    def _temporal_arrays(self, now: float, arr, active) -> np.ndarray:
         n = len(self.node_ids)
         J = len(active)
         fire = np.zeros((J, n), dtype=bool)
-        mark = arr.scratch("glance_tmark", np.int64, -1)
-        tprog = arr.scratch("glance_tprog", np.float64, np.nan)
         init_flag = np.zeros(J, dtype=bool)
         samp_flag = np.zeros(J, dtype=bool)
         prevk = np.full(J, -2, dtype=np.int64)
@@ -379,28 +377,8 @@ class NeighborhoodGlance:
                 samp_flag[pos] = True
                 prevk[pos] = st["k"]
             states.append(st)
-        if len(rows):
-            # Sampled jobs: ζ sums by (job, node) over attempts alive at
-            # both samples, one np.add.at pass for every job at once.
-            smask = samp_flag[jl]
-            srows, sprog, sjl = rows[smask], prog[smask], jl[smask]
-            alive = mark[srows] == prevk[sjl]
-            arows, ajl = srows[alive], sjl[alive]
-            seg = ajl * n + arr.node[arows]
-            zn = np.bincount(seg, weights=sprog[alive], minlength=J * n)
-            zp = np.bincount(seg, weights=tprog[arows], minlength=J * n)
-            cnt = np.bincount(seg, minlength=J * n)
-            zeta_now = np.where(cnt > 0, zn, np.nan).reshape(J, n)
-            zeta_prev = np.where(cnt > 0, zp, np.nan).reshape(J, n)
-            # Record this sample's per-attempt ζ (sampled + newly seen jobs).
-            wmask = smask | init_flag[jl]
-            wrows = rows[wmask]
-            newk = np.where(samp_flag, prevk + 1, 0)
-            mark[wrows] = newk[jl[wmask]]
-            tprog[wrows] = prog[wmask]
-        else:
-            zeta_now = np.full((J, n), np.nan)
-            zeta_prev = np.full((J, n), np.nan)
+        zeta_now, zeta_prev = self.backend.temporal_zeta(
+            arr, now, active, samp_flag, init_flag, prevk)
         for pos in np.flatnonzero(samp_flag):
             st = states[pos]
             dt = now - st["t"]
@@ -413,8 +391,9 @@ class NeighborhoodGlance:
 
     # --- Eq. 4, whole-cluster array ops --------------------------------
     def _assess_failure_arrays(self, now: float, arr) -> List[str]:
-        silent = now - arr.node_hb
-        resp = silent <= self.cfg.responsive_window
+        resp, cand = self.backend.failure_masks(
+            now, arr.node_hb, arr.node_marked, self._declared,
+            self._thresholds, self.cfg.responsive_window)
         resumed = resp & ~np.isnan(self._lost)
         for i in np.flatnonzero(resumed):
             # A resuming heartbeat from a previously lost node (rare):
@@ -422,10 +401,7 @@ class NeighborhoodGlance:
             self._record_outage(self.node_ids[i], now - self._lost[i])
         self._lost[resp] = np.nan
         self._declared[resp] = False
-        ns = ~resp
-        newlost = ns & np.isnan(self._lost)
+        newlost = ~resp & np.isnan(self._lost)
         self._lost[newlost] = arr.node_hb[newlost]
-        cand = ns & ~self._declared & ~arr.node_marked \
-            & (silent > self._thresholds)
         self._declared[cand] = True
         return [self.node_ids[i] for i in np.flatnonzero(cand)]

@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.accel.base import AssessmentBackend, get_backend
 from repro.core.collective import CollectiveConfig, CollectiveSpeculation
 from repro.core.dependency import DependencyConfig, DependencyTracker
 from repro.core.glance import GlanceConfig, NeighborhoodGlance
@@ -63,8 +64,10 @@ class LateConfig:
 
 
 class YarnLateSpeculator(Speculator):
-    def __init__(self, cfg: LateConfig = LateConfig()):
+    def __init__(self, cfg: LateConfig = LateConfig(),
+                 assess_backend: "Optional[str | AssessmentBackend]" = None):
         self.cfg = cfg
+        self.backend = get_backend(assess_backend)
         self._last_launch: Dict[str, float] = {}
         self._spec_count: Dict[str, int] = {}
 
@@ -138,63 +141,40 @@ class YarnLateSpeculator(Speculator):
         self._last_launch.pop(job_id, None)
         self._spec_count.pop(job_id, None)
 
-    # --- vectorized path (columnar snapshots, DESIGN.md §11) ----------
+    # --- vectorized path (columnar snapshots, DESIGN.md §11/§13) ------
     def _assess_arrays(self, snap: ClusterSnapshot, arr) -> List[Action]:
+        now = snap.now
         actions: List[Action] = [
             KillAttempt(arr.attempt_ids[r], "sibling completed")
-            for r in arr.reap_rows()]
-        for jid, jidx in arr.active_jobs():
-            action = self._assess_job_arrays(snap.now, arr, jid, jidx)
-            if action is not None:
-                actions.append(action)
+            for r in self.backend.reap_rows(arr, now)]
+        active = arr.active_jobs()
+        if not active:
+            return actions
+        # Serial-speculation and cap gates are host policy state; jobs
+        # failing them need no ranking work (and assessment is pure, so
+        # backends may rank every job regardless — results are dropped).
+        eligible = np.zeros(len(active), dtype=bool)
+        for pos, (jid, jidx) in enumerate(active):
+            if now - self._last_launch.get(jid, -1e18) \
+                    < self.cfg.launch_delay:
+                continue  # serial speculation with fixed delay
+            n_total = arr.job_task_count(jidx)
+            if self._spec_count.get(jid, 0) >= max(
+                    1, int(self.cfg.speculative_cap * n_total)):
+                continue
+            eligible[pos] = True
+        if eligible.any():
+            victims = self.backend.late_victims(
+                arr, now, active, eligible, self.cfg.min_runtime,
+                self.cfg.slow_task_percentile)
+            for pos, (jid, _jidx) in enumerate(active):
+                if not eligible[pos] or victims[pos] < 0:
+                    continue
+                self._last_launch[jid] = now
+                self._spec_count[jid] = self._spec_count.get(jid, 0) + 1
+                actions.append(SpeculateTask(
+                    task_id=arr.task_ids[victims[pos]], reason="late"))
         return actions
-
-    def _assess_job_arrays(self, now: float, arr, job_id: str,
-                           job_idx: int) -> Optional[SpeculateTask]:
-        from repro.core.arrays import A_RUNNING, T_RUNNING
-        last = self._last_launch.get(job_id, -1e18)
-        if now - last < self.cfg.launch_delay:
-            return None  # serial speculation with fixed delay
-        n_total = arr.job_task_count(job_idx)
-        if self._spec_count.get(job_id, 0) >= max(
-                1, int(self.cfg.speculative_cap * n_total)):
-            return None
-        m = arr.active[:arr.n] & (arr.job[:arr.n] == job_idx) \
-            & (arr.a_state[:arr.n] == A_RUNNING) \
-            & (arr.t_state[:arr.n] == T_RUNNING)
-        rows = arr.rows_where(m)
-        if len(rows) < 2:
-            return None
-        # Segment per task (rows are canonical, so task segments are
-        # contiguous); per task pick the max-progress running attempt,
-        # first-wins on ties — exactly Python's max() over attempt order.
-        torder = arr.skey[rows] >> 20
-        starts, inv = arr.task_segments(torder)
-        has_spec = np.bincount(inv, weights=arr.spec[rows],
-                               minlength=len(starts)) > 0
-        prog = arr.progress_at(now, rows)
-        segmax = np.maximum.reduceat(prog, starts)
-        cand = np.flatnonzero(prog == segmax[inv])
-        _, first = np.unique(inv[cand], return_index=True)
-        best = cand[first]                      # one row-position per task
-        ok = ~has_spec & (now - arr.start[rows[best]] >= self.cfg.min_runtime)
-        sel = best[ok]
-        if len(sel) < 2:
-            # LATE needs variation among tasks to rank stragglers — with
-            # zero or one candidate there is nothing to compare against
-            # (the scope-limited myopia, faithfully reproduced).
-            return None
-        p = prog[sel]
-        rho = p / np.maximum(now - arr.start[rows[sel]], 1e-9)
-        est_remaining = (1.0 - p) / np.maximum(rho, 1e-9)
-        thresh = np.percentile(rho, self.cfg.slow_task_percentile)
-        slow = np.flatnonzero(rho < thresh)
-        if not len(slow):
-            return None
-        victim_row = rows[sel][slow[np.argmax(est_remaining[slow])]]
-        self._last_launch[job_id] = now
-        self._spec_count[job_id] = self._spec_count.get(job_id, 0) + 1
-        return SpeculateTask(task_id=arr.task_ids[victim_row], reason="late")
 
 
 # ---------------------------------------------------------------------------
@@ -226,10 +206,18 @@ class BinoConfig:
 class BinocularSpeculator(Speculator):
     def __init__(self, node_ids: Sequence[str],
                  cfg: BinoConfig = BinoConfig(),
-                 topology: Optional[Dict[str, Sequence[str]]] = None):
+                 topology: Optional[Dict[str, Sequence[str]]] = None,
+                 assess_backend: "Optional[str | AssessmentBackend]" = None):
         self.cfg = cfg
-        self.glance = NeighborhoodGlance(node_ids, cfg.glance, topology)
-        self.collective = CollectiveSpeculation(cfg.collective)
+        # One backend instance serves glance + collective (it memoizes the
+        # per-tick extraction / device upload across both).
+        self.backend = get_backend(
+            assess_backend if assess_backend is not None
+            else cfg.glance.assess_backend)
+        self.glance = NeighborhoodGlance(node_ids, cfg.glance, topology,
+                                         backend=self.backend)
+        self.collective = CollectiveSpeculation(cfg.collective,
+                                                backend=self.backend)
         self.dependency = DependencyTracker(cfg.dependency)
         self.rollback = RollbackRegistry()
         # Nodes currently assessed unhealthy (slow or failed).

@@ -10,6 +10,7 @@ scope-limited myopia (§II.D.2).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Dict, List, Optional, Set
 
 # 1 GbE effective goodput and a single SATA disk.
@@ -68,6 +69,17 @@ class Cluster:
             for i in range(n_workers)
         }
         self.node_ids: List[str] = list(self.nodes)
+        self._node_pos: Dict[str, int] = {
+            n: i for i, n in enumerate(self.node_ids)}
+        # Free-container index: a lazy min-heap of node positions that MAY
+        # have a free container. Invariant: every alive node with a free
+        # container is flagged in the heap; stale entries (consumed slots,
+        # dead nodes) are dropped at pop time. ``note_free`` re-arms a node
+        # whenever an event can open a slot (complete/kill/crash-teardown/
+        # restore), so the global placement scan is O(log n) per launch
+        # instead of O(n_workers).
+        self._free_heap: List[int] = list(range(n_workers))
+        self._in_heap: List[bool] = [True] * n_workers
 
     def fetch_throughput(self, src: str, dst: str) -> float:
         """Quasi-static per-flow rate for a shuffle fetch, decided at flow
@@ -79,18 +91,52 @@ class Cluster:
         d = NIC_BW / max(1, self.nodes[dst].active_flows + 1)
         return min(s, d)
 
+    def note_free(self, node_id: str) -> None:
+        """Re-arm ``node_id`` in the free-container index. Called by the
+        substrate wherever a container may have opened (attempt complete/
+        kill/fail teardown, node restore); a no-op while the node has no
+        free slot or is already armed."""
+        i = self._node_pos[node_id]
+        if self._in_heap[i]:
+            return
+        n = self.nodes[node_id]
+        if n.alive and n.free_containers > 0:
+            heapq.heappush(self._free_heap, i)
+            self._in_heap[i] = True
+
     def pick_container(self, preference: List[str],
                        exclude: Optional[Set[str]] = None) -> Optional[str]:
         """First node with a free container: preference order first, then
-        pack-first over the cluster (deterministic; co-locates small jobs)."""
+        pack-first over the cluster (deterministic; co-locates small jobs).
+
+        The pack-first scan pops the free-container heap instead of
+        walking every node: the heap yields candidates in node order, so
+        the choice matches the seed's linear scan exactly (property-tested
+        in tests/test_cluster_index.py). Excluded-but-free nodes are
+        re-pushed after the query — exclusion is per-call state."""
         exclude = exclude or set()
         for nid in preference:
             n = self.nodes.get(nid)
             if n is not None and n.alive and nid not in exclude \
                     and n.free_containers > 0:
                 return nid
-        for nid in self.node_ids:
+        chosen: Optional[str] = None
+        excluded_free: List[int] = []
+        heap = self._free_heap
+        while heap:
+            i = heap[0]
+            nid = self.node_ids[i]
             n = self.nodes[nid]
-            if n.alive and nid not in exclude and n.free_containers > 0:
-                return nid
-        return None
+            if not n.alive or n.free_containers <= 0:
+                heapq.heappop(heap)          # stale entry: slot consumed
+                self._in_heap[i] = False
+                continue
+            if nid in exclude:
+                heapq.heappop(heap)          # still free; restore below
+                excluded_free.append(i)
+                continue
+            chosen = nid
+            break
+        for i in excluded_free:
+            heapq.heappush(heap, i)
+        return chosen

@@ -333,7 +333,9 @@ class Simulation:
     against. ``shuffle="event"`` (the default) selects the indexed
     ready-queue shuffle substrate; ``shuffle="rescan"`` the seed's
     poll-and-rescan reference (byte-identical traces, DESIGN.md §12.3).
-    ``record_actions=True`` appends ``(time, repr(action))`` to
+    ``assess_backend`` selects the assessment-compute backend for the
+    vectorized policies ("numpy" default, "jax", "pallas" — DESIGN.md
+    §13). ``record_actions=True`` appends ``(time, repr(action))`` to
     ``action_trace`` for those comparisons."""
 
     def __init__(self, *, policy: str = "yarn",
@@ -341,6 +343,7 @@ class Simulation:
                  n_workers: int = 20, n_containers: int = 8,
                  params: Optional[SimParams] = None, seed: int = 0,
                  columnar: bool = True, shuffle: str = "event",
+                 assess_backend: Optional[str] = None,
                  record_actions: bool = False):
         self.engine = Engine()
         self.cluster = Cluster(n_workers, n_containers)
@@ -361,13 +364,16 @@ class Simulation:
         if params is None:
             params = BINO_PARAMS if policy == "bino" else SimParams()
         self.params = params
+        self.assess_backend = assess_backend
         if policy_factory is not None:
             self.speculator = policy_factory(self.cluster.node_ids)
         elif policy == "bino":
-            self.speculator = BinocularSpeculator(self.cluster.node_ids)
+            self.speculator = BinocularSpeculator(
+                self.cluster.node_ids, assess_backend=assess_backend)
         else:
             from repro.core.speculator import YarnLateSpeculator
-            self.speculator = YarnLateSpeculator()
+            self.speculator = YarnLateSpeculator(
+                assess_backend=assess_backend)
         self.jobs: Dict[str, SimJob] = {}
         self.active_jobs: Dict[str, SimJob] = {}
         self.sched = Dispatcher(self)
@@ -395,6 +401,9 @@ class Simulation:
             arr.set_task_state([a.row for a in task.attempts], task.state)
 
     def _arr_node_free(self, node_id: str) -> None:
+        # Free-slot count changed (either direction): refresh the columnar
+        # mirror and re-arm the cluster's free-container index.
+        self.cluster.note_free(node_id)
         arr = self.arrays
         if arr is not None:
             arr.node_free[arr.node_index[node_id]] = \
@@ -558,6 +567,7 @@ class Simulation:
         a.state = AttemptState.COMPLETED
         a.end_time = self.engine.now
         a.node.busy.discard(a.attempt_id)
+        self._arr_node_free(a.node_id)
         a.node.mofs[task.task_id] = task.job.spec.mof_bytes()
         if a.node_id not in task.output_nodes:
             task.output_nodes.append(a.node_id)
@@ -570,7 +580,6 @@ class Simulation:
         if a.row >= 0:
             self.arrays.set_attempt_state(a.row, a.state)
             self._arr_task_state(task)
-            self._arr_node_free(a.node_id)
         self._kill_siblings(task, keep=a.attempt_id)
         # fresh MOF: register the source and notify waiting fetchers
         self.shuffle.on_producer_completed(task, a.node_id)
@@ -647,13 +656,13 @@ class Simulation:
         a.state = AttemptState.COMPLETED
         a.end_time = self.engine.now
         a.node.busy.discard(a.attempt_id)
+        self._arr_node_free(a.node_id)
         task.state = TaskState.COMPLETED
         if task.completed_at is None:
             task.completed_at = self.engine.now
         if a.row >= 0:
             self.arrays.set_attempt_state(a.row, a.state)
             self._arr_task_state(task)
-            self._arr_node_free(a.node_id)
         self._kill_siblings(task, keep=a.attempt_id)
         self._check_job_done(task.job)
         self._dispatch()
@@ -836,6 +845,7 @@ class Simulation:
                 self._attempt_failed(a, reason="node-restarted")
         node.restore()
         node.last_heartbeat = self.engine.now
+        self.cluster.note_free(node_id)
         self._marked_failed.discard(node_id)
         self.truth_crashed.discard(node_id)
         if self.arrays is not None:

@@ -19,9 +19,11 @@ FaultFn = Callable[[Simulation, SimJob], None]
 def run_single(policy: str, spec: JobSpec, fault: Optional[FaultFn] = None,
                *, seed: int = 0, n_workers: int = 20, n_containers: int = 8,
                params: Optional[SimParams] = None,
+               assess_backend: Optional[str] = None,
                policy_factory=None) -> JobResult:
     sim = Simulation(policy=policy, seed=seed, n_workers=n_workers,
                      n_containers=n_containers, params=params,
+                     assess_backend=assess_backend,
                      policy_factory=policy_factory)
     job = sim.submit(spec)
     if fault is not None:
@@ -50,9 +52,11 @@ def baseline_jct(bench: str, input_gb: float, *, seed: int = 0,
 def slowdown(policy: str, spec: JobSpec, fault: Optional[FaultFn],
              *, seed: int = 0, n_workers: int = 20,
              n_containers: int = 8, params: Optional[SimParams] = None,
+             assess_backend: Optional[str] = None,
              policy_factory=None) -> Tuple[float, JobResult]:
     res = run_single(policy, spec, fault, seed=seed, n_workers=n_workers,
                      n_containers=n_containers, params=params,
+                     assess_backend=assess_backend,
                      policy_factory=policy_factory)
     base = baseline_jct(spec.bench, spec.input_gb, seed=seed,
                         n_workers=n_workers, n_containers=n_containers)
@@ -63,9 +67,11 @@ def run_workload(policy: str, specs: Sequence[JobSpec],
                  fault_script: Optional[Callable[[Simulation], None]] = None,
                  *, seed: int = 0, n_workers: int = 20,
                  n_containers: int = 8,
-                 params: Optional[SimParams] = None) -> List[JobResult]:
+                 params: Optional[SimParams] = None,
+                 assess_backend: Optional[str] = None) -> List[JobResult]:
     sim = Simulation(policy=policy, seed=seed, n_workers=n_workers,
-                     n_containers=n_containers, params=params)
+                     n_containers=n_containers, params=params,
+                     assess_backend=assess_backend)
     for spec in specs:
         sim.submit(spec)
     if fault_script is not None:

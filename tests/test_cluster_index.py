@@ -1,0 +1,124 @@
+"""Property gate for the free-container index (ISSUE 3 satellite).
+
+``Cluster.pick_container`` now serves the pack-first scan from a lazy
+min-heap of node positions instead of an O(n_workers) walk. The pick
+must stay *identical* to the seed's linear scan under any interleaving
+of occupy / release / crash / restore and any preference/exclusion set
+— these tests drive random schedules and compare against the reference
+scan after every step.
+"""
+import numpy as np
+import pytest
+
+from repro.sim.cluster import Cluster
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 must collect on a bare interpreter
+    HAVE_HYPOTHESIS = False
+
+
+def _linear_pick(cluster, preference, exclude=None):
+    """The seed's O(n_workers) scan, verbatim."""
+    exclude = exclude or set()
+    for nid in preference:
+        n = cluster.nodes.get(nid)
+        if n is not None and n.alive and nid not in exclude \
+                and n.free_containers > 0:
+            return nid
+    for nid in cluster.node_ids:
+        n = cluster.nodes[nid]
+        if n.alive and nid not in exclude and n.free_containers > 0:
+            return nid
+    return None
+
+
+def _apply_op(cluster, op, rng, counter):
+    """One mutation, with the substrate's note_free discipline: every
+    event that can open a slot re-arms the index (mapreduce.py calls
+    cluster.note_free from _arr_node_free / completion / restore)."""
+    nid = cluster.node_ids[int(rng.integers(0, len(cluster.node_ids)))]
+    node = cluster.nodes[nid]
+    if op == 0:      # launch: consume via the picker itself
+        got = cluster.pick_container([nid])
+        if got is not None:
+            cluster.nodes[got].busy.add(f"a{next(counter)}")
+    elif op == 1:    # attempt finished / killed: release a container
+        if node.busy:
+            node.busy.discard(next(iter(node.busy)))
+        cluster.note_free(nid)
+    elif op == 2:    # crash
+        node.fail()
+        cluster.note_free(nid)
+    else:            # restore
+        node.restore()
+        cluster.note_free(nid)
+
+
+def _random_query(cluster, rng):
+    ids = cluster.node_ids
+    pref = [ids[i] for i in rng.integers(0, len(ids),
+                                         size=rng.integers(0, 3))]
+    excl = {ids[i] for i in rng.integers(0, len(ids),
+                                         size=rng.integers(0, 4))}
+    return pref, excl
+
+
+def _check_schedule(ops, n_workers, n_containers, seed):
+    import itertools
+    rng = np.random.default_rng(seed)
+    cluster = Cluster(n_workers, n_containers)
+    counter = itertools.count()
+    for op in ops:
+        _apply_op(cluster, op, rng, counter)
+        pref, excl = _random_query(cluster, rng)
+        got = cluster.pick_container(pref, exclude=set(excl))
+        want = _linear_pick(cluster, pref, excl)
+        assert got == want, (got, want, pref, sorted(excl))
+    # Index invariant: every alive node with a free slot is armed.
+    for i, nid in enumerate(cluster.node_ids):
+        n = cluster.nodes[nid]
+        if n.alive and n.free_containers > 0:
+            assert cluster._in_heap[i], nid
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_pick_matches_linear_scan_hypothesis():
+    @settings(max_examples=60, deadline=None)
+    @given(ops=st.lists(st.integers(min_value=0, max_value=3),
+                        min_size=1, max_size=150),
+           n_workers=st.integers(min_value=1, max_value=9),
+           n_containers=st.integers(min_value=1, max_value=3),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def inner(ops, n_workers, n_containers, seed):
+        _check_schedule(ops, n_workers, n_containers, seed)
+    inner()
+
+
+def test_pick_matches_linear_scan_seeded():
+    # Bare-interpreter fallback: long seeded random schedules.
+    rng = np.random.default_rng(11)
+    for trial in range(8):
+        ops = list(rng.integers(0, 4, size=300))
+        _check_schedule(ops, int(rng.integers(1, 10)),
+                        int(rng.integers(1, 4)), int(rng.integers(1e9)))
+
+
+def test_exhausted_cluster_returns_none():
+    c = Cluster(2, 1)
+    assert c.pick_container([]) == "n00"
+    c.nodes["n00"].busy.add("a")
+    c.nodes["n01"].busy.add("b")
+    assert c.pick_container([]) is None
+    assert c.pick_container([], exclude={"n00"}) is None
+    c.nodes["n01"].busy.clear()
+    c.note_free("n01")
+    assert c.pick_container([]) == "n01"
+
+
+def test_excluded_nodes_stay_armed():
+    c = Cluster(3, 1)
+    # n00 excluded by the query must remain pickable afterwards.
+    assert c.pick_container([], exclude={"n00"}) == "n01"
+    assert c.pick_container([]) == "n00"
