@@ -4,11 +4,18 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test lint bench bench-perf bench-perf-full bench-accel \
+.PHONY: test test-fuzz lint bench bench-perf bench-perf-full bench-accel \
 	bench-accel-full
 
 test:
 	$(PY) -m pytest -x -q
+
+# Differential fault-fuzz lane (DESIGN.md §14.4): the pinned corpus runs
+# everywhere; with hypothesis installed the random-script budget widens
+# to REPRO_FUZZ_EXAMPLES per strategy (CI pins the seed budget here).
+test-fuzz:
+	REPRO_FUZZ_EXAMPLES=25 $(PY) -m pytest -q \
+		tests/test_fuzz_equivalence.py tests/test_engine.py
 
 # Ruff config lives in pyproject.toml ([tool.ruff]). Scope = the layers
 # the shuffle refactor owns; widen as seed modules are modernized.
@@ -16,7 +23,8 @@ test:
 # container has no network; CI installs it).
 LINT_PATHS = src/repro/sim src/repro/core/arrays.py src/repro/accel \
 	benchmarks examples/cluster_sim.py tests/test_shuffle.py \
-	tests/test_columnar.py tests/test_accel.py tests/test_cluster_index.py
+	tests/test_columnar.py tests/test_accel.py tests/test_cluster_index.py \
+	tests/test_engine.py tests/test_fuzz_equivalence.py tests/conftest.py
 
 lint:
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \

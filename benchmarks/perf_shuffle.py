@@ -5,9 +5,12 @@ PR 1 made the assessment path columnar; the measured wall after that was
 the simulator's own shuffle bookkeeping (``_fetch_candidates`` rescanned a
 reducer's full dependency list per free fetch slot — O(n_maps) per slot,
 ~2/3 of a 500-node run). This harness runs the same proportionally-sized
-job (4 map splits per worker) to *completion or the sim cap* under both
-shuffle engines and records whole-run wall-clock — the rescan row is the
-PR 1 baseline, the acceptance gate is ``event_speedup_500 ≥ 3``.
+job (4 map splits per worker) to *completion or the sim cap* under all
+three shuffle engines and records whole-run wall-clock — the rescan row
+is the PR 1 baseline (gate: ``event_speedup_500 ≥ 3``), the event row is
+the PR 2 baseline for the macro-event fetch plane (ISSUE 4 gate:
+``batch`` ≥ 2× over ``event`` at 1000 nodes in the full sweep, with a
+softer 500-node smoke gate on the quick budget).
 
 Results land in ``BENCH_scale.json`` next to the ``perf_scale`` rows (the
 file is a per-benchmark map with a shared history; see ``_bench_json``).
@@ -40,6 +43,12 @@ from repro.sim.mapreduce import BINO_PARAMS, SimParams, Simulation
 # Acceptance gate (ISSUE 2): end-to-end 500-node wall-clock at least this
 # much faster than the PR 1 rescan substrate. Asserted, not just printed.
 GATE_SPEEDUP_500 = 3.0
+# Acceptance gate (ISSUE 4): the batch fetch plane's end-to-end wall vs
+# the PR 2 event substrate — 2x at 1000 nodes (full sweep); the quick
+# sweep tops out at 500 nodes where the fetch plane is a smaller share
+# of total wall, so its smoke gate is softer.
+GATE_BATCH_SPEEDUP_1000 = 2.0
+GATE_BATCH_SMOKE_500 = 1.3
 
 
 def measure(policy: str, n_workers: int, *, mode: str,
@@ -80,35 +89,66 @@ def run() -> List[Row]:
     results: List[Dict] = []
     rows: List[Row] = []
     speedup_at = {}
+    batch_speedup_at: Dict[int, Dict[str, float]] = {}
     for n in sizes:
         for policy in ("yarn", "bino"):
             ev = measure(policy, n, mode="event", sim_seconds=sim_seconds)
             rs = measure(policy, n, mode="rescan", sim_seconds=sim_seconds)
-            results.extend([ev, rs])
-            if ev["slots_filled"] != rs["slots_filled"]:
+            ba = measure(policy, n, mode="batch", sim_seconds=sim_seconds)
+            results.extend([ev, rs, ba])
+            if not (ev["slots_filled"] == rs["slots_filled"]
+                    == ba["slots_filled"]):
                 raise AssertionError(
                     f"engines diverged at {policy}/{n}n: "
                     f"event filled {ev['slots_filled']} fetch slots, "
-                    f"rescan {rs['slots_filled']}")
+                    f"rescan {rs['slots_filled']}, "
+                    f"batch {ba['slots_filled']}")
             speedup = rs["wall_s"] / max(ev["wall_s"], 1e-9)
+            b_speedup = ev["wall_s"] / max(ba["wall_s"], 1e-9)
             rows.append((
                 f"perf_shuffle/{policy}_{n}n_event_wall_s", ev["wall_s"],
                 f"rescan={rs['wall_s']:.2f}s speedup={speedup:.1f}x"))
+            rows.append((
+                f"perf_shuffle/{policy}_{n}n_batch_wall_s", ba["wall_s"],
+                f"event={ev['wall_s']:.2f}s speedup={b_speedup:.1f}x"))
             if n == 500:
                 speedup_at[policy] = round(speedup, 2)
                 rows.append((
                     f"perf_shuffle/{policy}_500n_speedup", speedup,
                     f"gate: >={GATE_SPEEDUP_500:g}x over PR1 rescan "
                     f"substrate"))
+            if n in (500, 1000):
+                batch_speedup_at.setdefault(n, {})[policy] = \
+                    round(b_speedup, 2)
+                if n == 1000:
+                    rows.append((
+                        f"perf_shuffle/{policy}_1000n_batch_speedup",
+                        b_speedup,
+                        f"gate: >={GATE_BATCH_SPEEDUP_1000:g}x over PR2 "
+                        f"event substrate"))
     if speedup_at and max(speedup_at.values()) < GATE_SPEEDUP_500:
         raise AssertionError(
             f"event-shuffle 500-node speedup gate failed: {speedup_at} "
             f"all below {GATE_SPEEDUP_500}x")
+    at_1000 = batch_speedup_at.get(1000)
+    if at_1000 and max(at_1000.values()) < GATE_BATCH_SPEEDUP_1000:
+        raise AssertionError(
+            f"batch fetch-plane 1000-node speedup gate failed: {at_1000} "
+            f"all below {GATE_BATCH_SPEEDUP_1000}x")
+    at_500 = batch_speedup_at.get(500)
+    if quick and at_500 and max(at_500.values()) < GATE_BATCH_SMOKE_500:
+        # Quick budget only: the full sweep's acceptance gate is the
+        # 1000-node assertion above.
+        raise AssertionError(
+            f"batch fetch-plane 500-node smoke gate failed: {at_500} "
+            f"all below {GATE_BATCH_SMOKE_500}x")
     payload = {
         "sim_seconds": sim_seconds,
         "splits_per_worker": SCALE_SPLITS_PER_WORKER,
         "results": results,
         "speedup_at_500": speedup_at,
+        "batch_speedup_at": {str(k): v
+                             for k, v in batch_speedup_at.items()},
     }
     path = bench_json_update("perf_shuffle", payload,
                              mode="quick" if quick else "full")

@@ -11,6 +11,9 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run --only fig4a,fig9
     PYTHONPATH=src python -m benchmarks.run --jobs 4
     PYTHONPATH=src python -m benchmarks.run --only perf_scale --quick
+    # shuffle-substrate rows incl. the batch fetch-plane gate (>=2x over
+    # event at 1000 nodes, full sweep) merged into BENCH_scale.json:
+    PYTHONPATH=src python -m benchmarks.run --only perf_shuffle
 """
 from __future__ import annotations
 

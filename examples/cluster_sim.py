@@ -1,8 +1,9 @@
 """The paper in one terminal screen: a 1 GB Terasort job on a 20-node YARN
 cluster, one node crash at 50 % map progress, under both speculation
 policies — with the recovery timeline printed, plus a shuffle-substrate
-profile comparing the event-driven engine against the seed's rescan path
-(fetch slots filled per unit of candidate-selection work).
+profile comparing the batched macro-event fetch plane (the default) and
+the event-driven engine against the seed's rescan path (fetch slots
+filled per unit of candidate-selection work; DESIGN.md §12/§14).
 
 ``--assess-backend {numpy,jax,pallas}`` runs the policies' assessment
 math on the chosen compute backend (byte-identical decisions, DESIGN.md
@@ -22,7 +23,7 @@ from repro.sim import JobSpec, Simulation, faults
 
 
 def run(policy: str, gb: float, frac: float, seed: int,
-        shuffle: str = "event", assess_backend: str = "numpy"):
+        shuffle: str = "batch", assess_backend: str = "numpy"):
     sim = Simulation(policy=policy, seed=seed, shuffle=shuffle,
                      assess_backend=assess_backend)
     job = sim.submit(JobSpec("demo", "terasort", gb))
@@ -52,30 +53,40 @@ def run(policy: str, gb: float, frac: float, seed: int,
     return job.result, timeline, sim
 
 
-def _print_shuffle_profile(event_prof, gb: float, frac: float,
+def _print_shuffle_profile(batch_prof, gb: float, frac: float,
                            seed: int) -> None:
-    """The substrate win, demoed: same crashed run under both engines —
-    identical slots filled, orders of magnitude less selection work.
-    ``event_prof`` is reused from the main loop's yarn run; only the
-    rescan reference is re-simulated."""
+    """The substrate win, demoed: same crashed run under all three
+    engines — identical slots filled, orders of magnitude less selection
+    work, and the batch plane's try_start fan-out collapsed by the
+    completion log. ``batch_prof`` is reused from the main loop's yarn
+    run; the rescan and event references are re-simulated."""
     _, _, rescan_sim = run("yarn", gb, frac, seed, shuffle="rescan")
+    _, _, event_sim = run("yarn", gb, frac, seed, shuffle="event")
     rescan_prof = rescan_sim.shuffle.profile
-    print("\n=== shuffle substrate profile (same run, both engines) ===")
-    print(f"{'engine':>8} {'slots':>7} {'notifies':>9} "
-          f"{'selection work':>15} {'slots/1k work':>14}")
-    for mode, prof in (("rescan", rescan_prof), ("event", event_prof)):
+    event_prof = event_sim.shuffle.profile
+    print("\n=== shuffle substrate profile (same run, three engines) ===")
+    print(f"{'engine':>8} {'slots':>7} {'notifies':>9} {'try_start':>10} "
+          f"{'selection work':>16} {'slots/1k work':>14}")
+    for mode, prof in (("rescan", rescan_prof), ("event", event_prof),
+                       ("batch", batch_prof)):
         work = (f"{prof.deps_scanned} scanned" if mode == "rescan"
                 else f"{prof.heap_pops} heap pops")
         print(f"{mode:>8} {prof.slots_filled:>7} {prof.notifies:>9} "
-              f"{work:>15} {prof.slots_per_kwork():>14.1f}")
+              f"{prof.try_calls:>10} {work:>16} "
+              f"{prof.slots_per_kwork():>14.1f}")
     ratio = rescan_prof.selection_work \
         / max(1, event_prof.selection_work)
     same = (rescan_prof.slots_filled == event_prof.slots_filled
-            and rescan_prof.notifies == event_prof.notifies)
+            == batch_prof.slots_filled
+            and rescan_prof.notifies == event_prof.notifies
+            == batch_prof.notifies)
     behaviour = ("identical fetch behaviour" if same
                  else "ENGINES DIVERGED (file a bug!)")
     print(f"  → {behaviour} with {ratio:.0f}× less "
-          f"candidate-selection work (O(1) pops vs O(n_maps) rescans)")
+          f"candidate-selection work (O(1) pops vs O(n_maps) rescans); "
+          f"batch applied {batch_prof.lane_records} lane records and "
+          f"skipped {event_prof.try_calls - batch_prof.try_calls} "
+          f"no-op try_starts")
 
 
 def _print_assess_profile(profiles) -> None:

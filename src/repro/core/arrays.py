@@ -238,6 +238,18 @@ class ArraySnapshot:
         for r in rows:
             self.t_state[r] = code
 
+    def write_shuffle_rows(self, rows, fetched, ready, inflight,
+                           fail) -> None:
+        """Bulk shuffle-health write-through: one fancy-indexed store per
+        column for a whole drain's worth of fetch-state transitions
+        (DESIGN.md §14.2), instead of four scalar writes per transition.
+        ``rows`` are live row indices; the value lists are parallel."""
+        idx = np.asarray(rows, dtype=np.int64)
+        self.fetched[idx] = fetched
+        self.sh_ready[idx] = ready
+        self.sh_inflight[idx] = inflight
+        self.sh_fail[idx] = fail
+
     def _compact(self) -> None:
         keep = np.flatnonzero(self.active[:self.n])
         for _, col in self._cols():
@@ -348,6 +360,27 @@ class ArraySnapshot:
             minlength=len(starts)) > 0
         victims = done[inv] & (self.a_state[rows] == A_RUNNING)
         return rows[victims]
+
+    def idle_task_rows(self) -> np.ndarray:
+        """Canonical-order rows of the *first* attempt of each task whose
+        task-state is RUNNING while no attempt row is — the AM
+        watchdog's re-enqueue candidates (same segment idiom as
+        :meth:`reap_rows`; a RUNNING task always has at least one row,
+        since PENDING→RUNNING happens at first attempt start and
+        COMPLETED→RUNNING re-activation implies prior attempts)."""
+        live = self.active[:self.n] & (self.t_state[:self.n] == T_RUNNING)
+        if not live.any():
+            return np.empty(0, dtype=np.int64)
+        rows = self.rows_where(live)
+        starts, inv = self.task_segments(self.skey[rows] // _KEY_STRIDE)
+        has_running = np.bincount(
+            inv, weights=self.a_state[rows] == A_RUNNING,
+            minlength=len(starts)) > 0
+        return rows[starts[~has_running]]
+
+    def owner(self, row: int) -> object:
+        """The substrate object (attempt) that owns ``row``."""
+        return self._owners[row]
 
     def job_local_map(self, active: List[Tuple[str, int]]) -> np.ndarray:
         """job_idx → position in the active job list (-1 if inactive)."""

@@ -9,12 +9,17 @@ from repro.sim.dispatch import Dispatcher, LaunchRequest
 from repro.sim.engine import Engine
 from repro.sim.job import BENCHMARKS, BenchProfile, JobResult, JobSpec
 from repro.sim.mapreduce import BINO_PARAMS, SimParams, Simulation
-from repro.sim.shuffle import EventShuffle, MofRegistry, RescanShuffle
+from repro.sim.shuffle import (
+    BatchShuffle,
+    EventShuffle,
+    MofRegistry,
+    RescanShuffle,
+)
 from repro.sim import dispatch, faults, runner, shuffle, workload
 
 __all__ = [
-    "BENCHMARKS", "BINO_PARAMS", "BenchProfile", "Cluster", "Dispatcher",
-    "Engine", "EventShuffle", "JobResult", "JobSpec", "LaunchRequest",
-    "MofRegistry", "RescanShuffle", "SimNode", "SimParams", "Simulation",
-    "dispatch", "faults", "runner", "shuffle", "workload",
+    "BENCHMARKS", "BINO_PARAMS", "BatchShuffle", "BenchProfile", "Cluster",
+    "Dispatcher", "Engine", "EventShuffle", "JobResult", "JobSpec",
+    "LaunchRequest", "MofRegistry", "RescanShuffle", "SimNode", "SimParams",
+    "Simulation", "dispatch", "faults", "runner", "shuffle", "workload",
 ]

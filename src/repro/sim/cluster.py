@@ -40,6 +40,9 @@ class SimNode:
     hb_suppressed_until: float = 0.0
 
     def heartbeat_suppressed(self, now: float) -> bool:
+        # Single source of the suppression rule. The per-second RM tick
+        # (Simulation._heartbeat_tick) inlines this comparison over its
+        # 1000-node loop — keep the two in sync if the rule changes.
         return now < self.hb_suppressed_until
 
     @property

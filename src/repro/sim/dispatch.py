@@ -38,6 +38,8 @@ class Dispatcher:
     def enqueue(self, req: LaunchRequest) -> None:
         if req.task.state == TaskState.COMPLETED and not req.speculative:
             # re-execution of a completed producer
+            if req.task.kind == TaskKind.MAP:
+                req.task.job.n_maps_done -= 1
             req.task.state = TaskState.RUNNING
             req.task.output_available = bool(req.task.output_nodes)
             self.sim._arr_task_state(req.task)
@@ -68,15 +70,34 @@ class Dispatcher:
 
     def watchdog(self) -> None:
         """AM retry loop: any live task with no running attempt and no
-        queued launch gets re-enqueued (covers killed/failed edges)."""
+        queued launch gets re-enqueued (covers killed/failed edges).
+
+        With the columnar mirror available, the candidate scan is one
+        segmented reduction over the attempt columns
+        (:meth:`ArraySnapshot.idle_task_rows`) instead of an
+        O(tasks × attempts) object walk per tick; rows arrive in
+        canonical §11.3 order, which is exactly the reference loop's
+        job-submission → task-creation order, so the enqueue sequence
+        is identical (test_columnar's trace gate covers this).
+        """
         sim = self.sim
-        queued = {r.task.task_id for r in self.pending}
-        for job in sim.active_jobs.values():
-            for t in job.tasks:
-                if t.state != TaskState.RUNNING:
+        arr = sim.arrays
+        candidates: List["SimTask"] = []
+        if arr is not None:
+            for r in arr.idle_task_rows():
+                candidates.append(arr.owner(r).task)
+        else:
+            for job in sim.active_jobs.values():
+                for t in job.tasks:
+                    if t.state == TaskState.RUNNING \
+                            and not t.running_attempts():
+                        candidates.append(t)
+        if candidates:
+            queued = {r.task.task_id for r in self.pending}
+            for t in candidates:
+                if t.kind == TaskKind.REDUCE \
+                        and not t.job.reduces_scheduled:
                     continue
-                if t.kind == TaskKind.REDUCE and not job.reduces_scheduled:
-                    continue
-                if not t.running_attempts() and t.task_id not in queued:
+                if t.task_id not in queued:
                     self.enqueue(LaunchRequest(t, reason="am-watchdog"))
         self.dispatch()

@@ -124,6 +124,10 @@ class SimAttempt:
         self._milestone: Optional[EventHandle] = None
         # Map-only: progress point where an injected disk exception fires.
         self.disk_exception_at: Optional[float] = None
+        # Milestone-ladder cache: (disk_exception_at, points) — the
+        # ladder only changes when a disk exception is injected, so the
+        # per-spill rescheduling stops rebuilding and re-sorting it.
+        self._milestones_cache: Optional[Tuple[Optional[float], list]] = None
         # Reduce-only: shuffle bookkeeping, attached by the shuffle engine.
         self.shuffle: Optional[ShuffleState] = None
         self.compute_started = False
@@ -238,6 +242,12 @@ class SimJob:
         self.n_spec_attempts = 0
         self.n_attempts = 0
         self.n_fetch_failures = 0
+        # COMPLETED map-task count, maintained at the three task-state
+        # flip sites (first completion, re-activation of a completed
+        # producer in Dispatcher.enqueue / _apply_speculate) so slowstart
+        # and the fault triggers stop recounting the map list; verified
+        # against a recount in verify_arrays.
+        self.n_maps_done = 0
         # Map-progress triggers for fault injection (fraction → callbacks).
         self.map_progress_triggers: List[Tuple[float, Callable]] = []
 
@@ -246,7 +256,7 @@ class SimJob:
         return self.maps + self.reduces
 
     def maps_completed(self) -> int:
-        return sum(1 for t in self.maps if t.state == TaskState.COMPLETED)
+        return self.n_maps_done
 
     def map_phase_progress(self) -> float:
         if not self.maps:
@@ -330,9 +340,13 @@ class Simulation:
     and hands the policies lazy snapshots, activating their vectorized
     assessment paths; ``columnar=False`` rebuilds eager per-object
     snapshots each tick — the reference path the equivalence tests compare
-    against. ``shuffle="event"`` (the default) selects the indexed
-    ready-queue shuffle substrate; ``shuffle="rescan"`` the seed's
-    poll-and-rescan reference (byte-identical traces, DESIGN.md §12.3).
+    against. ``shuffle="batch"`` (the default) selects the macro-event
+    fetch plane — the indexed ready-queue substrate with fetch timers
+    coalesced into the engine's calendar lane (DESIGN.md §14);
+    ``shuffle="event"`` the PR 2 per-event substrate; ``shuffle="rescan"``
+    the seed's poll-and-rescan reference. All three emit byte-identical
+    traces (DESIGN.md §12.3/§14.3, fuzzed in
+    tests/test_fuzz_equivalence.py).
     ``assess_backend`` selects the assessment-compute backend for the
     vectorized policies ("numpy" default, "jax", "pallas" — DESIGN.md
     §13). ``record_actions=True`` appends ``(time, repr(action))`` to
@@ -342,7 +356,7 @@ class Simulation:
                  policy_factory: Optional[Callable[[Sequence[str]], Speculator]] = None,
                  n_workers: int = 20, n_containers: int = 8,
                  params: Optional[SimParams] = None, seed: int = 0,
-                 columnar: bool = True, shuffle: str = "event",
+                 columnar: bool = True, shuffle: str = "batch",
                  assess_backend: Optional[str] = None,
                  record_actions: bool = False):
         self.engine = Engine()
@@ -511,12 +525,17 @@ class Simulation:
     # Map execution: spill milestones, disk exceptions, completion
     # ------------------------------------------------------------------
     def _map_milestones(self, a: SimAttempt) -> List[Tuple[float, str]]:
+        cache = a._milestones_cache
+        if cache is not None and cache[0] == a.disk_exception_at:
+            return cache[1]
         n = a.task.job.spec.n_spills
         pts = [(k / n, "spill") for k in range(1, n)]
         if a.disk_exception_at is not None:
             pts.append((a.disk_exception_at, "disk_exception"))
         pts.append((1.0, "complete"))
-        return sorted(pts)
+        pts.sort()
+        a._milestones_cache = (a.disk_exception_at, pts)
+        return pts
 
     def _schedule_map_milestone(self, a: SimAttempt) -> None:
         if a._milestone is not None:
@@ -572,6 +591,8 @@ class Simulation:
         if a.node_id not in task.output_nodes:
             task.output_nodes.append(a.node_id)
         first_completion = task.state != TaskState.COMPLETED
+        if first_completion:
+            task.job.n_maps_done += 1
         task.state = TaskState.COMPLETED
         task.output_available = True
         task.fetch_reports = 0
@@ -864,14 +885,16 @@ class Simulation:
     def _heartbeat_tick(self) -> None:
         now = self.engine.now
         arr = self.arrays
+        hb = arr.node_hb if arr is not None else None
+        marked = self._marked_failed
         for i, node in enumerate(self.cluster.nodes.values()):
-            if node.alive and not node.heartbeat_suppressed(now):
+            if node.alive and now >= node.hb_suppressed_until:
                 node.last_heartbeat = now
-                if arr is not None:
-                    arr.node_hb[i] = now
-                if node.node_id in self._marked_failed:
+                if hb is not None:
+                    hb[i] = now
+                if marked and node.node_id in marked:
                     # transient outage misjudged as failure: NM rejoins
-                    self._marked_failed.discard(node.node_id)
+                    marked.discard(node.node_id)
                     if arr is not None:
                         arr.node_marked[i] = False
         if self.active_jobs or len(self.results) < len(self.jobs):
@@ -879,7 +902,18 @@ class Simulation:
 
     def _expiry_tick(self) -> None:
         now = self.engine.now
-        for node in self.cluster.nodes.values():
+        arr = self.arrays
+        if arr is not None:
+            # Columnar fast path: ``node_hb`` mirrors every node's
+            # last_heartbeat, so the common all-healthy tick is one
+            # vectorized comparison; stale rows fall back to the exact
+            # per-node checks in index (= dict) order.
+            stale = np.flatnonzero(now - arr.node_hb > self.params.nm_expiry)
+            nodes = [self.cluster.node_ids[i] for i in stale]
+        else:
+            nodes = self.cluster.nodes
+        for nid in nodes:
+            node = self.cluster.nodes[nid]
             if node.node_id in self._marked_failed:
                 continue
             if now - node.last_heartbeat > self.params.nm_expiry:
@@ -925,6 +959,8 @@ class Simulation:
             # both outputs are kept until job completion (§III.B).
             if task.running_attempts():
                 return
+            if task.kind == TaskKind.MAP:
+                task.job.n_maps_done -= 1
             task.state = TaskState.RUNNING
             self._arr_task_state(task)
             self._enqueue(LaunchRequest(
@@ -981,6 +1017,11 @@ class Simulation:
             assert arr.node_speed[i] == node.speed, nid
             assert arr.node_free[i] == node.free_containers, nid
             assert bool(arr.node_marked[i]) == (nid in self._marked_failed), nid
+        for job in self.active_jobs.values():
+            recount = sum(1 for t in job.maps
+                          if t.state == TaskState.COMPLETED)
+            assert job.n_maps_done == recount, \
+                (job.spec.job_id, job.n_maps_done, recount)
         expected = [(a, t, job) for job in self.active_jobs.values()
                     for t in job.tasks for a in t.attempts]
         live = arr.rows_where(arr.active[:arr.n])

@@ -17,8 +17,18 @@ keeping the rescan path in-tree as the byte-exact reference:
   pick), fed by a per-producer subscriber registry (map completion
   notifies only attempts still wanting that partition), with MOF sources
   answered by :class:`MofRegistry` instead of attribute scans.
+- :class:`BatchShuffle` — EventShuffle's selection logic over the
+  engine's macro-event calendar lane (DESIGN.md §14): fetch completions
+  and failure cycles are typed records in a
+  :class:`~repro.sim.engine.BatchQueue` instead of per-event heap
+  entries, drained in bulk between heap events; timer cancellation is a
+  token drop (stale records are discarded at apply time); the columnar
+  ``sh_*``/``fetched`` write-through is deferred per drain and flushed
+  as one bulk write before any heap event can read it; producer
+  completions fan out with a budget gate that skips the (provably
+  no-op) ``try_start`` of saturated attempts.
 
-Equivalence contract: both engines drive the simulation through identical
+Equivalence contract: all engines drive the simulation through identical
 event sequences — same fetches, same sources, same flow accounting, same
 failure cycles, in the same order — so seeded runs emit byte-identical
 action traces (``tests/test_shuffle.py`` enforces this, mirroring the
@@ -34,12 +44,13 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import TYPE_CHECKING, Dict, List, Optional, Set
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
 from repro.core.speculator import BinocularSpeculator
 from repro.core.types import AttemptState, TaskState
+from repro.sim.cluster import DISK_BW, NIC_BW
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
     from repro.sim.engine import EventHandle
@@ -65,6 +76,7 @@ class ShuffleProfile:
     slots_filled: int = 0    # fetch starts + failure cycles begun
     deps_scanned: int = 0    # rescan mode: dependency list entries walked
     heap_pops: int = 0       # event mode: ready-heap pops (incl. stale)
+    lane_records: int = 0    # batch mode: calendar-lane records applied
 
     @property
     def selection_work(self) -> int:
@@ -87,7 +99,7 @@ class ShuffleState:
 
     __slots__ = ("attempt", "status", "ready", "n_ready", "fetched",
                  "inflight", "fail_cycles", "fetch_srcs", "failed_cycles",
-                 "key")
+                 "key", "log", "log_pos", "parked")
 
     def __init__(self, attempt: "SimAttempt"):
         task = attempt.task
@@ -101,6 +113,16 @@ class ShuffleState:
         self.fetch_srcs: Dict[str, str] = {}
         self.failed_cycles = 0              # abort counter (EXCEEDED_MAX)
         self.key = (task.order, len(task.attempts))
+        # Batch mode: the job's producer-completion log (shared,
+        # append-only; BatchShuffle._init_ready swaps in the job's real
+        # list — under rescan/event this stays the immutable empty
+        # sentinel and is never read) and the position up to which this
+        # attempt has reconciled its WAITING→READY flips; ``parked``
+        # mirrors membership in the engine's idle set so the steady
+        # state skips the dict entirely.
+        self.log: Sequence[int] = ()
+        self.log_pos = 0
+        self.parked = False
 
     def set_status(self, i: int, code: int) -> None:
         old = self.status[i]
@@ -207,10 +229,10 @@ class ShuffleEngine:
         if ss is None:
             return
         for m, h in list(ss.inflight.items()):
-            h.cancel()
+            self._cancel(h)
             self._end_flow(a, ss, m, ss.fetch_srcs.get(m))
         for h in ss.fail_cycles.values():
-            h.cancel()
+            self._cancel(h)
         ss.inflight.clear()
         ss.fail_cycles.clear()
         self._drop_subscriptions(ss)
@@ -236,7 +258,7 @@ class ShuffleEngine:
         ss = a.shuffle
         h = ss.inflight.get(m)
         if h is not None:
-            h.cancel()
+            self._cancel(h)
         self._end_flow(a, ss, m, ss.fetch_srcs.get(m))
         self._requeue(ss, a.task.dep_pos[m], m)
         self._arr_sh(a, ss)
@@ -361,6 +383,14 @@ class ShuffleEngine:
         assert set(ss.inflight) == set(ss.fetch_srcs)
 
     # -- mode hooks -------------------------------------------------------
+    @staticmethod
+    def _cancel(h) -> None:
+        """Disarm a pending transfer/failure-cycle timer. Heap-backed
+        engines hold EventHandles; the batch engine holds integer lane
+        tokens, for which forgetting the token (the dict removal the
+        caller already performs) *is* the cancellation."""
+        h.cancel()
+
     def try_start(self, a: "SimAttempt") -> None:
         raise NotImplementedError
 
@@ -454,7 +484,7 @@ class RescanShuffle(ShuffleEngine):
                         # immediate rather than waiting out the timeout
                         h = ss.fail_cycles.pop(m, None)
                         if h is not None:
-                            h.cancel()
+                            self._cancel(h)
                     if st in (S_WAITING, S_FAIL_CYCLE):
                         ss.set_status(i, S_READY)
                         self._arr_sh(ra, ss)
@@ -580,7 +610,7 @@ class EventShuffle(ShuffleEngine):
                 # is immediate rather than waiting out the timeout
                 h = ss.fail_cycles.pop(m, None)
                 if h is not None:
-                    h.cancel()
+                    self._cancel(h)
             if st in (S_WAITING, S_FAIL_CYCLE):
                 ss.set_status(i, S_READY)
                 heapq.heappush(ss.ready, i)
@@ -625,7 +655,683 @@ class EventShuffle(ShuffleEngine):
                     (a.attempt_id, deps[i])
 
 
+# BatchQueue record kinds (the shuffle owns kinds 1/2; 0 stays invalid so
+# a zeroed record slot can never masquerade as a live event).
+K_FETCH_DONE = 1
+K_FAIL_CYCLE = 2
+
+
+class BatchShuffle(EventShuffle):
+    """The macro-event fetch plane (DESIGN.md §14): EventShuffle's
+    candidate selection with its three per-fetch overheads amortized
+    away, trace-equivalently.
+
+    1. **Timers → calendar-lane records.** Fetch completions and failure
+       cycles are typed records in the engine's
+       :class:`~repro.sim.engine.BatchQueue` instead of per-event heap
+       entries: no EventHandle, no args tuple, no generic dispatch.
+       Cancellation is forgetting the record's integer token (the dict
+       removal the canceller already performs); stale records are
+       dropped at apply time by matching the token against the
+       inflight/fail-cycle maps. A whole burst of records drains off one
+       lane run between heap events, with the columnar
+       ``fetched``/``sh_*`` write-through deferred per drain and flushed
+       as one bulk store before the next heap event can read it.
+
+    2. **Per-subscriber broadcast → completion log.** The event engine
+       pays O(running reduce attempts) scalar status flips per map
+       completion. Here a completion appends one entry to its job's
+       *completion log*; each attempt holds a cursor (``ss.log_pos``)
+       and reconciles the log delta **vectorized** (one mask over the
+       int8 status column) the next time it selects candidates. This is
+       trace-invariant because a WAITING→READY flip is unobservable
+       until the attempt actually pops candidates: the live policies
+       never read readiness (the ``sh_ready`` column is write-through
+       telemetry), and ``try_start`` re-validates every popped index
+       against the producer's current state exactly as the event engine
+       does. The flip *is* observable for two groups, which keep an
+       eager kick:
+
+       - attempts burning a failure cycle for the completed producer
+         (the pending timer must be cancelled now, not lazily) — the
+         ``_fail_subs`` registry, populated only under faults;
+       - attempts parked with free fetch budget (the event engine would
+         launch at notify time) — the ``_idle`` set, which also absorbs
+         EventShuffle's ``stalled`` bookkeeping (a silent abort parks
+         the attempt exactly like budget starvation does).
+
+       Attach vectorizes the same way: a fresh attempt starts its
+       cursor at zero and reconciles the whole log in one mask instead
+       of walking ``n_deps`` producer objects.
+
+    3. **No-op fan-out → budget gate.** The eager kick only calls
+       ``try_start`` when the attempt has (or just regained) free
+       budget; for a saturated attempt the event engine's call provably
+       returns without touching state, so skipping it is trace-inert.
+
+    The fetch *transitions* stay sequential per record — flow counts
+    feed the per-fetch throughput model, so end-flow/next-launch
+    interleaving per completion is observable — the batching win is the
+    machinery around them (``benchmarks/perf_shuffle.py`` gates ≥2×
+    end-to-end over ``event`` at 1000 nodes).
+    """
+
+    mode = "batch"
+
+    def __init__(self, sim: "Simulation"):
+        super().__init__(sim)
+        from repro.sim.engine import BatchQueue
+        self.batches = BatchQueue(sim.engine, self._apply_record,
+                                  self._flush_dirty, drain=self._drain_run)
+        # job → producer-completion log: one dependency index appended
+        # per (re-)completion, in completion order. Never mutated in
+        # place, only appended — cursors stay valid.
+        self._logs: Dict[object, List[int]] = {}
+        # job → attempts parked with free fetch budget (ready queue
+        # drained, or silently aborted): the next completion in the job
+        # re-kicks them, replacing both the per-producer subscriber
+        # fan-out and EventShuffle's stalled set.
+        self._idle: Dict[object, Dict[ShuffleState, None]] = {}
+        # producer task_id → attempts burning a failure cycle against
+        # it (eager cancellation on re-completion; faulted runs only).
+        self._fail_subs: Dict[str, Dict[ShuffleState, None]] = {}
+        # Deferred write-through: attempts whose shuffle columns changed
+        # during the current lane drain.
+        self._dirty: Dict["SimAttempt", None] = {}
+        # Hot-path caches (immutable for the simulation's lifetime).
+        self._psizes: Dict[object, float] = {}
+        self._node_pos = sim.cluster._node_pos
+        self._pf = sim.params.parallel_fetches
+        self._cycle = sim.params.fetch_cycle
+        self._bino = isinstance(sim.speculator, BinocularSpeculator)
+
+    @staticmethod
+    def _cancel(h) -> None:
+        """Lane tokens need no disarming — the caller's dict removal
+        already orphaned the record (see BatchQueue)."""
+
+    def _psize(self, job) -> float:
+        s = self._psizes.get(job)
+        if s is None:
+            s = self._psizes[job] = job.spec.partition_bytes()
+        return s
+
+    # -- completion log ----------------------------------------------------
+    def _reconcile(self, ss: ShuffleState) -> None:
+        """Fold the job's completion-log delta into the status column:
+        every WAITING dependency with a completion logged since this
+        attempt last looked flips to READY, in one vectorized mask. A
+        stale entry (producer re-enqueued since) yields a transient
+        READY that ``try_start`` re-validates and parks back to WAITING
+        — the same recovery the event engine performs on its own stale
+        ready-heap entries."""
+        log = ss.log
+        pos = ss.log_pos
+        n = len(log)
+        if pos >= n:
+            return
+        ss.log_pos = n
+        status = ss.status
+        if n - pos == 1:  # steady state: one completion since last look
+            i = log[pos]
+            if status[i] == S_WAITING:
+                status[i] = S_READY
+                ss.n_ready += 1
+                heapq.heappush(ss.ready, i)
+            return
+        idx = np.array(log[pos:], dtype=np.int64)
+        # duplicates (producer completed twice within one delta) must
+        # count once: unique BEFORE the mask so n_ready stays exact
+        idx = np.unique(idx)
+        flip = idx[status[idx] == S_WAITING]
+        k = len(flip)
+        if k:
+            status[flip] = S_READY
+            ss.n_ready += k
+            ready = ss.ready
+            if ready:
+                for i in flip.tolist():
+                    heapq.heappush(ready, i)
+            else:
+                # np.unique output is ascending — already a valid heap
+                ss.ready = flip.tolist()
+
+    def _init_ready(self, a: "SimAttempt", ss: ShuffleState) -> None:
+        ss.log = self._logs.setdefault(a.task.job, [])
+        ss.log_pos = 0
+        self._reconcile(ss)
+
+    # -- record application (reference path; the fused drain below must
+    #    stay transition-identical — tests run both on one seeded sim) --
+    def _apply_record(self, kind: int, a: "SimAttempt", i: int,
+                      src_idx: int, token: int) -> None:
+        self.profile.lane_records += 1
+        ss = a.shuffle
+        if ss is None:
+            return
+        if kind == K_FETCH_DONE:
+            # ---- one fetch completion: _fetch_done minus the handles
+            m = a.task.deps[i]
+            if ss.inflight.get(m) != token:
+                return  # cancelled (detach/abort) or superseded re-fetch
+            del ss.inflight[m]
+            src = ss.fetch_srcs.pop(m, None)
+            if src is not None:
+                nodes = self.sim.cluster.nodes
+                sn = nodes[src]
+                dn = nodes[a.node_id]
+                sn.active_flows = max(0, sn.active_flows - 1)
+                dn.active_flows = max(0, dn.active_flows - 1)
+            if a.state != AttemptState.RUNNING:
+                return
+            ss.fetched.add(m)
+            ss.status[i] = S_FETCHED  # from INFLIGHT: n_ready untouched
+            self._dirty[a] = None
+            sim = self.sim
+            if self._bino:
+                sim.speculator.note_fetch_ok(m)
+            if len(ss.fetched) == len(a.task.deps):
+                sim._start_compute(a)
+            else:
+                self.try_start(a)
+            return
+        self._apply_fail(a, ss, i, token)
+
+    def _apply_fail(self, a: "SimAttempt", ss: ShuffleState, i: int,
+                    token: int) -> None:
+        """One burned failure cycle — ``_fetch_failed`` over the lane."""
+        m = a.task.deps[i]
+        if ss.fail_cycles.get(m) != token:
+            return
+        del ss.fail_cycles[m]
+        d = self._fail_subs.get(m)
+        if d is not None:
+            d.pop(ss, None)
+        if a.state != AttemptState.RUNNING:
+            return
+        ss.failed_cycles += 1
+        sim = self.sim
+        sim._report_fetch_failure(a, m)
+        prod = sim._task(m)
+        if prod is not None and prod.state == TaskState.COMPLETED:
+            self._requeue(ss, i, m)
+        else:
+            ss.set_status(i, S_WAITING)  # producer re-running; await notify
+        self._dirty[a] = None
+        if ss.failed_cycles >= sim.params.reduce_abort_cycles:
+            sim._attempt_failed(a, reason="shuffle-exceeded-failures")
+            return
+        self.try_start(a)
+
+    # -- fused drain loop ---------------------------------------------------
+    def _drain_run(self, heap: list, until) -> bool:
+        """The hot loop of the whole simulator at scale: pops due lane
+        records and applies them with every piece of shared state bound
+        once per drain run (~tens of records) instead of once per
+        record. Semantics are pinned to the reference path above —
+        ``_apply_record`` + ``try_start`` transition-for-transition; the
+        equivalence fuzzer and the generic-drain parity test enforce it.
+        Failure-cycle records (faults only) take the reference path."""
+        q = self.batches
+        lheap = q._heap
+        eng = q.engine
+        objs = q.objs
+        kind_v = q._kind
+        dep_v = q._dep
+        pop = heapq.heappop
+        push = heapq.heappush
+        sim = self.sim
+        nodes = sim.cluster.nodes
+        task_index = sim._task_index
+        live_map = self.registry.live
+        node_pos = self._node_pos
+        psizes = self._psizes
+        dirty = self._dirty
+        idle = self._idle
+        fail_subs = self._fail_subs
+        pf = self._pf
+        cycle = self._cycle
+        bino = self._bino
+        speculator = sim.speculator
+        RUNNING = AttemptState.RUNNING
+        T_COMPLETED = TaskState.COMPLETED
+        n_records = 0
+        n_pops = 0
+        n_slots = 0
+        n_try = 0
+        paused = False
+        while lheap:
+            l0 = lheap[0]
+            lt = l0[0]
+            if heap:
+                h0 = heap[0]
+                ht = h0[0]
+                if lt > ht or (lt == ht and l0[1] > h0[1]):
+                    break
+            if until is not None and lt > until:
+                paused = True
+                break
+            eng.now = lt
+            slot = pop(lheap)[2]
+            if kind_v is not q._kind:  # store grew mid-drain
+                kind_v = q._kind
+                dep_v = q._dep
+            a = objs[slot]
+            objs[slot] = None
+            n_records += 1
+            ss = a.shuffle
+            if ss is None:
+                continue
+            i = int(dep_v[slot])
+            deps = a.task.deps
+            m = deps[i]
+            if kind_v[slot] == K_FAIL_CYCLE:
+                # rare (faults only): reference path; it may re-enter
+                # try_start and grow the store — rebind defensively
+                self._apply_fail(a, ss, i, slot)
+                kind_v = q._kind
+                dep_v = q._dep
+                continue
+            # ---- fetch completion (== _apply_record's hot branch) ----
+            inflight = ss.inflight
+            if inflight.get(m) != slot:
+                continue  # cancelled or superseded re-fetch
+            del inflight[m]
+            src = ss.fetch_srcs.pop(m, None)
+            dst = a.node_id
+            if src is not None:
+                sn = nodes[src]
+                dn = nodes[dst]
+                f = sn.active_flows - 1
+                sn.active_flows = f if f > 0 else 0
+                f = dn.active_flows - 1
+                dn.active_flows = f if f > 0 else 0
+            if a.state is not RUNNING:
+                continue
+            fetched = ss.fetched
+            fetched.add(m)
+            status = ss.status
+            status[i] = S_FETCHED  # from INFLIGHT: n_ready untouched
+            dirty[a] = None
+            if bino:
+                speculator.note_fetch_ok(m)
+            if len(fetched) == len(deps):
+                sim._start_compute(a)
+                continue
+            # ---- inline try_start (state/compute checks hold: the
+            #      attempt is RUNNING and still missing partitions) ----
+            fail_cycles = ss.fail_cycles
+            budget = pf - len(inflight) - len(fail_cycles)
+            if budget <= 0:
+                continue
+            n_try += 1
+            if ss.log_pos < len(ss.log):
+                self._reconcile(ss)
+            ready = ss.ready
+            changed = False
+            while budget > 0 and ready:
+                j = pop(ready)
+                n_pops += 1
+                if status[j] != S_READY:
+                    continue  # stale entry (lazy deletion)
+                m2 = deps[j]
+                prod = task_index.get(m2)
+                if prod is None or prod.state is not T_COMPLETED:
+                    status[j] = S_WAITING  # re-enqueued; next completion
+                    ss.n_ready -= 1       # re-logs it
+                    changed = True
+                    continue
+                src2 = None
+                live = live_map.get(m2)
+                if live:
+                    for nid in prod.output_nodes:
+                        if nid in live:
+                            src2 = nid
+                            break
+                if src2 is None:
+                    status[j] = S_FAIL_CYCLE
+                    ss.n_ready -= 1
+                    tok = q._n
+                    if tok == len(q.recs):
+                        q._grow()
+                        kind_v = q._kind
+                        dep_v = q._dep
+                    q._n = tok + 1
+                    t2 = lt + cycle
+                    q._kind[tok] = K_FAIL_CYCLE
+                    q._time[tok] = t2
+                    q._row[tok] = a.row
+                    q._dep[tok] = j
+                    q._payload[tok] = 0
+                    objs.append(a)
+                    push(lheap, (t2, eng._seq, tok))
+                    eng._seq += 1
+                    fail_cycles[m2] = tok
+                    fail_subs.setdefault(m2, {})[ss] = None
+                    n_slots += 1
+                    budget -= 1
+                    changed = True
+                    continue
+                status[j] = S_INFLIGHT
+                ss.n_ready -= 1
+                # per-flow rate decided at flow start (fetch_throughput)
+                sn = nodes[src2]
+                dn = nodes[dst]
+                if src2 == dst:
+                    rate = DISK_BW / (sn.active_flows + 1)
+                else:
+                    sf = sn.active_flows + 1
+                    df = dn.active_flows + 1
+                    rate = NIC_BW / (sf if sf > df else df)
+                sn.active_flows += 1
+                dn.active_flows += 1
+                ss.fetch_srcs[m2] = src2
+                job2 = prod.job
+                size = psizes.get(job2)
+                if size is None:
+                    size = psizes[job2] = job2.spec.partition_bytes()
+                dt = size / rate
+                if dt < 1e-3:
+                    dt = 1e-3
+                tok = q._n
+                if tok == len(q.recs):
+                    q._grow()
+                    kind_v = q._kind
+                    dep_v = q._dep
+                q._n = tok + 1
+                t2 = lt + dt
+                q._kind[tok] = K_FETCH_DONE
+                q._time[tok] = t2
+                q._row[tok] = a.row
+                q._dep[tok] = j
+                q._payload[tok] = node_pos[src2]
+                objs.append(a)
+                push(lheap, (t2, eng._seq, tok))
+                eng._seq += 1
+                inflight[m2] = tok
+                n_slots += 1
+                budget -= 1
+                changed = True
+            if changed:
+                dirty[a] = None
+            if budget > 0:
+                if not ss.parked:
+                    ss.parked = True
+                    idle.setdefault(a.task.job, {})[ss] = None
+            elif ss.parked:
+                ss.parked = False
+                d = idle.get(a.task.job)
+                if d is not None:
+                    d.pop(ss, None)
+        prof = self.profile
+        prof.lane_records += n_records
+        prof.heap_pops += n_pops
+        prof.slots_filled += n_slots
+        prof.try_calls += n_try
+        q.applied += n_records
+        return paused
+
+    # -- deferred columnar write-through -----------------------------------
+    def _arr_sh(self, a: "SimAttempt", ss: ShuffleState) -> None:
+        if self.batches.in_drain:
+            self._dirty[a] = None
+        elif a.row >= 0:
+            arr = self.sim.arrays
+            arr.fetched[a.row] = len(ss.fetched)
+            arr.sh_ready[a.row] = ss.n_ready
+            arr.sh_inflight[a.row] = len(ss.inflight)
+            arr.sh_fail[a.row] = len(ss.fail_cycles)
+
+    def _flush_dirty(self) -> None:
+        d = self._dirty
+        if not d:
+            return
+        arr = self.sim.arrays
+        if arr is not None:
+            if len(d) > 3:
+                rows = []
+                fetched = []
+                ready = []
+                inflight = []
+                fail = []
+                for a in d:
+                    if a.row < 0:
+                        continue
+                    ss = a.shuffle
+                    rows.append(a.row)
+                    fetched.append(len(ss.fetched))
+                    ready.append(ss.n_ready)
+                    inflight.append(len(ss.inflight))
+                    fail.append(len(ss.fail_cycles))
+                if rows:
+                    arr.write_shuffle_rows(rows, fetched, ready, inflight,
+                                           fail)
+            else:
+                for a in d:
+                    if a.row < 0:
+                        continue
+                    ss = a.shuffle
+                    r = a.row
+                    arr.fetched[r] = len(ss.fetched)
+                    arr.sh_ready[r] = ss.n_ready
+                    arr.sh_inflight[r] = len(ss.inflight)
+                    arr.sh_fail[r] = len(ss.fail_cycles)
+        d.clear()
+
+    # -- candidate selection -----------------------------------------------
+    # (The base-class _launch_fetch/_launch_fail_cycle hooks are not
+    # overridden: batch mode's only launch sites are the two inlined
+    # schedulers in try_start and _drain_run below.)
+    def try_start(self, a: "SimAttempt") -> None:
+        """EventShuffle.try_start transition-for-transition, with the
+        sub-calls (set_status, registry.pick, fetch_throughput, timer
+        scheduling) inlined over local binds, the completion-log
+        reconcile up front, and the idle-set bookkeeping at the end."""
+        ss = a.shuffle
+        if a.state != AttemptState.RUNNING or a.compute_started:
+            return
+        sim = self.sim
+        prof = self.profile
+        prof.try_calls += 1
+        inflight = ss.inflight
+        fail_cycles = ss.fail_cycles
+        budget = self._pf - len(inflight) - len(fail_cycles)
+        if budget <= 0:
+            return
+        if ss.log_pos < len(ss.log):
+            self._reconcile(ss)
+        deps = a.task.deps
+        ready = ss.ready
+        status = ss.status
+        task_index = sim._task_index
+        live_map = self.registry.live
+        nodes = sim.cluster.nodes
+        batches = self.batches
+        now = sim.engine.now
+        dst = a.node_id
+        row = a.row
+        changed = False
+        while budget > 0 and ready:
+            i = heapq.heappop(ready)
+            prof.heap_pops += 1
+            if status[i] != S_READY:
+                continue  # stale entry (lazy deletion)
+            m = deps[i]
+            prod = task_index.get(m)
+            if prod is None or prod.state != TaskState.COMPLETED:
+                # producer re-enqueued since it went ready; its next
+                # completion re-logs it
+                status[i] = S_WAITING
+                ss.n_ready -= 1
+                changed = True
+                continue
+            src = None
+            live = live_map.get(m)
+            if live:
+                for nid in prod.output_nodes:
+                    if nid in live:
+                        src = nid
+                        break
+            if src is None:
+                status[i] = S_FAIL_CYCLE
+                ss.n_ready -= 1
+                fail_cycles[m] = batches.schedule(
+                    now + self._cycle, K_FAIL_CYCLE, a, row, i, 0)
+                self._fail_subs.setdefault(m, {})[ss] = None
+                prof.slots_filled += 1
+                budget -= 1
+                changed = True
+                continue
+            status[i] = S_INFLIGHT
+            ss.n_ready -= 1
+            # inline _launch_fetch (cluster.fetch_throughput semantics:
+            # quasi-static per-flow rate decided at flow start)
+            sn = nodes[src]
+            dn = nodes[dst]
+            if src == dst:
+                rate = DISK_BW / (sn.active_flows + 1)
+            else:
+                sf = sn.active_flows + 1
+                df = dn.active_flows + 1
+                rate = NIC_BW / (sf if sf > df else df)
+            sn.active_flows += 1
+            dn.active_flows += 1
+            ss.fetch_srcs[m] = src
+            dt = self._psize(prod.job) / rate
+            if dt < 1e-3:
+                dt = 1e-3
+            inflight[m] = batches.schedule(
+                now + dt, K_FETCH_DONE, a, row, i, self._node_pos[src])
+            prof.slots_filled += 1
+            budget -= 1
+            changed = True
+        if changed:
+            self._arr_sh(a, ss)
+        if budget > 0:
+            # candidates exhausted with budget to spare: park for the
+            # job's next completion (the event broadcast's re-kick)
+            if not ss.parked:
+                ss.parked = True
+                self._idle.setdefault(a.task.job, {})[ss] = None
+        elif ss.parked:
+            ss.parked = False
+            d = self._idle.get(a.task.job)
+            if d is not None:
+                d.pop(ss, None)
+
+    def mark_stalled(self, a: "SimAttempt") -> None:
+        ss = a.shuffle
+        if not ss.parked:
+            ss.parked = True
+            self._idle.setdefault(a.task.job, {})[ss] = None
+
+    # -- eager notification (the log handles the rest) ---------------------
+    def _notify(self, task: "SimTask") -> None:
+        """Append to the completion log, then kick only the attempts for
+        which the event broadcast's visit is observable *now*: failure
+        cycles against this producer are cancelled (their timer must
+        not fire), and parked attempts with free budget re-select (the
+        event engine would launch at notify time). Everyone else picks
+        the completion up from the log on their next selection."""
+        m = task.task_id
+        self._logs.setdefault(task.job, []).append(task.index)
+        targets = self._idle.pop(task.job, None) or {}
+        for ss in targets:
+            ss.parked = False  # consumed; try_start below re-parks
+        fs = self._fail_subs.get(m)
+        if fs:
+            targets = dict(targets)
+            targets.update(fs)
+        if not targets:
+            return
+        pf = self._pf
+        for ss in sorted(targets, key=lambda s: s.key):
+            a = ss.attempt
+            if a.state != AttemptState.RUNNING:
+                continue
+            i = a.task.dep_pos[m]
+            if ss.status[i] == S_FAIL_CYCLE:
+                # fresh MOF: drop the pending failure cycle so the retry
+                # is immediate rather than waiting out the timeout
+                ss.fail_cycles.pop(m, None)
+                if fs is not None:
+                    fs.pop(ss, None)
+                ss.set_status(i, S_READY)
+                heapq.heappush(ss.ready, i)
+                self._arr_sh(a, ss)
+            if pf - len(ss.inflight) - len(ss.fail_cycles) > 0:
+                self.try_start(a)
+
+    def _requeue(self, ss: ShuffleState, i: int, m: str) -> None:
+        ss.set_status(i, S_READY)
+        heapq.heappush(ss.ready, i)
+
+    # -- registries / lifecycle --------------------------------------------
+    def _drop_subscriptions(self, ss: ShuffleState) -> None:
+        deps = ss.attempt.task.deps
+        for i in np.flatnonzero(ss.status == S_FAIL_CYCLE):
+            d = self._fail_subs.get(deps[i])
+            if d is not None:
+                d.pop(ss, None)
+        if ss.parked:
+            ss.parked = False
+            d = self._idle.get(ss.attempt.task.job)
+            if d is not None:
+                d.pop(ss, None)
+
+    def _drop_producer_subs(self, task_id: str) -> None:
+        self._fail_subs.pop(task_id, None)
+
+    def on_job_done(self, job) -> None:
+        ShuffleEngine.on_job_done(self, job)
+        self._logs.pop(job, None)
+        self._idle.pop(job, None)
+        self._psizes.pop(job, None)
+
+    # -- consistency ---------------------------------------------------------
+    def verify_state(self, a: "SimAttempt") -> None:
+        ShuffleEngine.verify_state(self, a)
+        ss = a.shuffle
+        deps = a.task.deps
+        in_heap = set(ss.ready)
+        for i in np.flatnonzero(ss.status == S_READY):
+            assert int(i) in in_heap, (a.attempt_id, deps[i])
+        # the cursor never outruns the log
+        log = self._logs.get(a.task.job)
+        assert log is not None and log is ss.log, a.attempt_id
+        assert ss.log_pos <= len(log), (a.attempt_id, ss.log_pos)
+        # the parked flag mirrors idle-set membership exactly
+        assert ss.parked == (
+            ss in self._idle.get(a.task.job, {})), (a.attempt_id, ss.parked)
+        # a WAITING dep whose producer is COMPLETED must have its
+        # completion still pending in the log delta (else it could
+        # never become READY again)
+        sim = self.sim
+        pending = set(log[ss.log_pos:])
+        for i in np.flatnonzero(ss.status == S_WAITING):
+            prod = sim._task(deps[i])
+            if prod is not None and prod.state == TaskState.COMPLETED:
+                assert int(i) in pending, (a.attempt_id, deps[i])
+        if a.state == AttemptState.RUNNING:
+            for i in np.flatnonzero(ss.status == S_FAIL_CYCLE):
+                assert ss in self._fail_subs.get(deps[i], {}), \
+                    (a.attempt_id, deps[i])
+        # every live timer token references a pending, matching record
+        q = self.batches
+        for src_map, want in ((ss.inflight, K_FETCH_DONE),
+                              (ss.fail_cycles, K_FAIL_CYCLE)):
+            for m, tok in src_map.items():
+                assert isinstance(tok, int), (a.attempt_id, m, tok)
+                assert 0 <= tok < q._n, (a.attempt_id, m, tok, q._n)
+                assert q.objs[tok] is a, (a.attempt_id, m)
+                assert int(q._kind[tok]) == want, (a.attempt_id, m)
+                assert int(q._dep[tok]) == a.task.dep_pos[m], \
+                    (a.attempt_id, m)
+
+
 def make_engine(sim: "Simulation", mode: str) -> ShuffleEngine:
+    if mode == "batch":
+        return BatchShuffle(sim)
     if mode == "event":
         return EventShuffle(sim)
     if mode == "rescan":

@@ -1,0 +1,176 @@
+"""Shared test plumbing (ISSUE 4 satellite).
+
+One home for the optional-dependency guards and the simulator harness
+that were copy-pasted across the suite:
+
+- ``HAVE_HYPOTHESIS`` / ``require_hypothesis`` — tier-1 must *collect*
+  on a bare interpreter (no ``[test]`` extra), so modules either gate
+  individual tests (``skipif(not HAVE_HYPOTHESIS)``) or skip wholesale
+  at import (``require_hypothesis()``).
+- ``HAVE_JAX`` / ``require_jax`` — the jax-compat gate for the
+  differential suites that cross assessment backends.
+- ``run_traced`` / ``result_key`` / ``assert_runs_equivalent`` — the
+  seeded, instrumented simulation harness the shuffle/columnar/fuzz
+  equivalence gates share: records the speculator action trace, every
+  attempt launch (time, task, node, reason, speculative, rollback), and
+  the job-result key, so two configurations can be compared byte for
+  byte.
+- fixtures for the common cluster/job/simulation shapes.
+"""
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import pytest
+
+from repro.sim import Cluster, JobSpec, Simulation
+
+try:
+    import hypothesis  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 must collect on a bare interpreter
+    HAVE_HYPOTHESIS = False
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:
+    HAVE_JAX = False
+
+skip_no_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+skip_no_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+
+def require_hypothesis():
+    """Module-level skip for hypothesis-only test modules (the old
+    per-module ``pytest.importorskip('hypothesis')`` pattern)."""
+    return pytest.importorskip("hypothesis")
+
+
+def require_jax():
+    return pytest.importorskip("jax")
+
+
+# ---------------------------------------------------------------------------
+# Seeded, instrumented simulation harness
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TraceResult:
+    sim: Simulation
+    job: object
+    launches: List[Tuple]
+    results: List[object]
+
+    @property
+    def trace(self):
+        return self.sim.action_trace
+
+    def key(self):
+        """Everything the equivalence gates compare, in one tuple."""
+        return (self.sim.action_trace, self.launches,
+                result_key(self.results))
+
+
+def result_key(results) -> List[Tuple]:
+    return [(r.job_id, r.finish_time, r.n_attempts, r.n_spec_attempts,
+             r.n_fetch_failures) for r in results]
+
+
+def run_traced(mode: str, policy: str, fault: Optional[Callable] = None,
+               seed: int = 1, bench: str = "terasort", gb: float = 2.0,
+               n_reduces: Optional[int] = None,
+               extra_jobs: Sequence[JobSpec] = (),
+               assess_backend: Optional[str] = None,
+               checks: Optional[Sequence[float]] = None,
+               columnar: bool = True,
+               generic_drain: bool = False) -> TraceResult:
+    """One seeded simulation with launch instrumentation. ``checks``
+    schedules mid-run invariant sweeps (shuffle partition + registry +
+    columnar mirror); ``generic_drain`` forces the batch lane's
+    reference drain loop (parity vs the fused loop)."""
+    sim = Simulation(policy=policy, seed=seed, shuffle=mode,
+                     columnar=columnar, assess_backend=assess_backend,
+                     record_actions=True)
+    if generic_drain:
+        sim.shuffle.batches._drain_impl = sim.shuffle.batches._generic_drain
+    launches: List[Tuple] = []
+    orig = sim._start_attempt
+
+    def logged(req, node_id):
+        launches.append((sim.engine.now, req.task.task_id, node_id,
+                         req.reason, req.speculative, req.rollback))
+        return orig(req, node_id)
+
+    sim._start_attempt = logged
+    job = sim.submit(JobSpec("j0", bench, gb, n_reduces=n_reduces))
+    for spec in extra_jobs:
+        sim.submit(spec)
+    if fault is not None:
+        fault(sim, job)
+    if checks:
+        for t in checks:
+            sim.engine.at(float(t), check_invariants, sim)
+    results = sim.run()
+    return TraceResult(sim, job, launches, results)
+
+
+def check_invariants(sim: Simulation) -> None:
+    """Mid-run consistency sweep: the per-dependency status partition,
+    the MOF registry vs a from-scratch recomputation, and (when the
+    columnar mirror is on) the incrementally-maintained columns."""
+    for job in sim.active_jobs.values():
+        for t in job.reduces:
+            for a in t.running_attempts():
+                sim.shuffle.verify_state(a)
+        for t in job.maps:
+            live = sim.shuffle.registry.live.get(t.task_id, set())
+            expect = {
+                nid for nid in t.output_nodes
+                if sim.cluster.nodes[nid].alive
+                and t.task_id in sim.cluster.nodes[nid].mofs
+                and nid not in sim._marked_failed}
+            got = {nid for nid in t.output_nodes if nid in live}
+            assert got == expect, (t.task_id, got, expect)
+    if sim.arrays is not None:
+        sim.verify_arrays()
+
+
+def assert_runs_equivalent(runs: Sequence[TraceResult],
+                           labels: Sequence[str]) -> None:
+    """Byte-identical action traces, attempt-launch sequences and job
+    results across every configuration; failures name the first
+    diverging element."""
+    ref, ref_label = runs[0], labels[0]
+    for other, label in zip(runs[1:], labels[1:]):
+        for attr in ("trace", "launches"):
+            a = getattr(ref, attr) if attr != "trace" else ref.trace
+            b = getattr(other, attr) if attr != "trace" else other.trace
+            assert len(a) == len(b), \
+                (f"{attr} length {ref_label}={len(a)} {label}={len(b)}")
+            for k, (x, y) in enumerate(zip(a, b)):
+                assert x == y, \
+                    f"{attr}[{k}] diverged {ref_label}={x!r} {label}={y!r}"
+        assert result_key(ref.results) == result_key(other.results), \
+            (ref_label, label)
+
+
+# ---------------------------------------------------------------------------
+# Fixtures
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def cluster20() -> Cluster:
+    """The paper's testbed shape: 20 workers × 8 containers."""
+    return Cluster(20, 8)
+
+
+@pytest.fixture
+def terasort_spec() -> JobSpec:
+    return JobSpec("j0", "terasort", 2.0)
+
+
+@pytest.fixture
+def sim_factory():
+    """Factory fixture: seeded Simulation with keyword overrides."""
+    def make(policy: str = "yarn", seed: int = 0, **kw) -> Simulation:
+        return Simulation(policy=policy, seed=seed, **kw)
+    return make

@@ -29,11 +29,10 @@ from repro.core.types import AttemptState, TaskKind, TaskState
 from repro.sim import JobSpec, Simulation, faults
 from repro.sim.mapreduce import SimParams
 
-try:
+from conftest import HAVE_HYPOTHESIS
+
+if HAVE_HYPOTHESIS:
     from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:  # tier-1 must collect on a bare interpreter
-    HAVE_HYPOTHESIS = False
 
 
 # ---------------------------------------------------------------------------

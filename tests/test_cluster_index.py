@@ -12,11 +12,10 @@ import pytest
 
 from repro.sim.cluster import Cluster
 
-try:
+from conftest import HAVE_HYPOTHESIS
+
+if HAVE_HYPOTHESIS:
     from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:  # tier-1 must collect on a bare interpreter
-    HAVE_HYPOTHESIS = False
 
 
 def _linear_pick(cluster, preference, exclude=None):

@@ -5,8 +5,11 @@ import os
 import numpy as np
 import pytest
 # Property tests need hypothesis; a bare interpreter must still
-# collect this module (tier-1 runs without the [test] extra).
-pytest.importorskip("hypothesis")
+# collect this module (tier-1 runs without the [test] extra) — the
+# shared guard skips it wholesale when the extra is absent.
+from conftest import require_hypothesis
+
+require_hypothesis()
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree

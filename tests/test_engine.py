@@ -1,0 +1,226 @@
+"""Discrete-event engine unit gate (ISSUE 4 satellite).
+
+Covers the invariants every equivalence proof in this repo leans on:
+
+1. **Stable ordering** — simultaneous events fire in scheduling order
+   (the monotone seq tiebreak), including across ``run(until=)``
+   pause/resume. Pins the regression where the until-pause re-push
+   assigned a *fresh* seq to the deferred event, demoting it behind
+   same-timestamp events that were scheduled after it.
+2. **Cancellation** — cancelled handles never fire, including when
+   cancelled by an earlier event at the same timestamp.
+3. **BatchQueue** — the calendar lane merges with the heap in exact
+   global (time, seq) order, pauses at ``until`` with records intact,
+   flushes deferred state before any heap event can observe it, and
+   recycles its record store only when fully drained.
+"""
+import pytest
+
+from repro.sim.engine import BatchQueue, Engine
+
+
+# ---------------------------------------------------------------------------
+# 1. Ordering
+# ---------------------------------------------------------------------------
+def test_simultaneous_events_fire_in_schedule_order():
+    eng = Engine()
+    order = []
+    for name in "abcd":
+        eng.at(5.0, order.append, name)
+    eng.at(1.0, order.append, "first")
+    eng.run()
+    assert order == ["first", "a", "b", "c", "d"]
+    assert eng.now == 5.0
+
+
+def test_after_orders_by_delay_then_schedule():
+    eng = Engine()
+    order = []
+    eng.after(2.0, order.append, "late")
+    eng.after(1.0, order.append, "early")
+    eng.after(1.0, order.append, "early2")
+    eng.run()
+    assert order == ["early", "early2", "late"]
+
+
+def test_until_pause_preserves_deferred_event_order():
+    """The regression: pausing before time t pops the t-event and must
+    re-push it *unchanged*. Re-pushing with a fresh seq reorders it
+    behind same-timestamp events already in the heap."""
+    eng = Engine()
+    order = []
+    eng.at(10.0, order.append, "A")  # scheduled first → must fire first
+    eng.at(10.0, order.append, "B")
+    eng.run(until=5.0)               # pops A (t > until), re-pushes it
+    assert eng.now == 5.0 and order == []
+    eng.run()
+    assert order == ["A", "B"]
+
+
+def test_until_pause_resume_across_many_pauses():
+    eng = Engine()
+    order = []
+    for name in ("x", "y", "z"):
+        eng.at(30.0, order.append, name)
+    for pause in (5.0, 12.0, 29.999):
+        eng.run(until=pause)
+        assert order == [] and eng.now == pause
+    eng.run(until=100.0)
+    assert order == ["x", "y", "z"]
+    assert eng.now == 100.0  # exhausted heap fast-forwards to until
+
+
+def test_until_exact_boundary_fires():
+    eng = Engine()
+    fired = []
+    eng.at(7.0, fired.append, 1)
+    eng.run(until=7.0)
+    assert fired == [1] and eng.now == 7.0
+
+
+def test_stop_predicate_halts_before_next_event():
+    eng = Engine()
+    fired = []
+    eng.at(1.0, fired.append, 1)
+    eng.at(2.0, fired.append, 2)
+    eng.run(stop=lambda: len(fired) >= 1)
+    assert fired == [1]
+
+
+# ---------------------------------------------------------------------------
+# 2. Cancellation
+# ---------------------------------------------------------------------------
+def test_cancelled_events_do_not_fire():
+    eng = Engine()
+    fired = []
+    h = eng.at(1.0, fired.append, "no")
+    eng.at(1.0, fired.append, "yes")
+    h.cancel()
+    eng.run()
+    assert fired == ["yes"]
+
+
+def test_cancel_from_earlier_same_time_event():
+    eng = Engine()
+    fired = []
+    h = [None]
+    eng.at(3.0, lambda: h[0].cancel())
+    h[0] = eng.at(3.0, fired.append, "victim")
+    eng.run()
+    assert fired == []
+
+
+# ---------------------------------------------------------------------------
+# 3. BatchQueue calendar lane
+# ---------------------------------------------------------------------------
+def _lane(eng, log):
+    def apply(kind, obj, dep, payload, token):
+        log.append(("rec", eng.now, kind, obj, dep, payload, token))
+
+    def flush():
+        log.append(("flush", eng.now))
+    return BatchQueue(eng, apply, flush)
+
+
+def test_lane_merges_with_heap_in_global_order():
+    eng = Engine()
+    log = []
+    lane = _lane(eng, log)
+    eng.at(2.0, log.append, ("heap", 2.0))
+    lane.schedule(1.0, 1, "r1", 0, 0, 0)
+    lane.schedule(3.0, 1, "r3", 0, 1, 0)
+    eng.at(2.5, log.append, ("heap", 2.5))
+    eng.run()
+    events = [(e[0], e[1]) for e in log if e[0] != "flush"]
+    assert events == [("rec", 1.0), ("heap", 2.0), ("heap", 2.5),
+                      ("rec", 3.0)]
+    # flush runs after each drain, before the next heap event
+    assert log[1] == ("flush", 1.0)
+
+
+def test_lane_same_time_tiebreak_follows_schedule_order():
+    eng = Engine()
+    log = []
+    lane = _lane(eng, log)
+    eng.at(5.0, log.append, ("heap", "h1"))       # seq 0
+    lane.schedule(5.0, 1, "r-after-h1", 0, 0, 0)  # seq 1
+    eng.at(5.0, log.append, ("heap", "h2"))       # seq 2
+    lane.schedule(5.0, 1, "r-after-h2", 0, 0, 0)  # seq 3
+    eng.run()
+    names = [e[3] if e[0] == "rec" else e[1]
+             for e in log if e[0] != "flush"]
+    assert names == ["h1", "r-after-h1", "h2", "r-after-h2"]
+
+
+def test_lane_until_pause_keeps_records():
+    eng = Engine()
+    log = []
+    lane = _lane(eng, log)
+    lane.schedule(10.0, 1, "late", 0, 0, 0)
+    lane.schedule(1.0, 1, "early", 0, 0, 0)
+    eng.run(until=5.0)
+    assert eng.now == 5.0
+    assert [e for e in log if e[0] == "rec"] == \
+        [("rec", 1.0, 1, "early", 0, 0, 1)]
+    assert len(lane) == 1  # the late record survived the pause
+    eng.run()
+    assert [e[3] for e in log if e[0] == "rec"] == ["early", "late"]
+
+
+def test_lane_records_scheduled_during_apply_are_drained_in_order():
+    eng = Engine()
+    log = []
+
+    def apply(kind, obj, dep, payload, token):
+        log.append((eng.now, obj))
+        if obj == "seed":
+            # cascade: lands before the 4.0 heap event, after 2.0
+            lane.schedule(3.0, 1, "child", 0, 0, 0)
+
+    lane = BatchQueue(eng, apply, lambda: None)
+    eng.at(4.0, log.append, "heap4")
+    lane.schedule(2.0, 1, "seed", 0, 0, 0)
+    eng.run()
+    assert log == [(2.0, "seed"), (3.0, "child"), "heap4"]
+
+
+def test_lane_store_recycles_when_fully_drained():
+    eng = Engine()
+    lane = BatchQueue(eng, lambda *a: None, lambda: None)
+    for k in range(5):
+        lane.schedule(float(k + 1), 1, f"r{k}", 0, k, 0)
+    assert lane._n == 5
+    eng.run()
+    assert len(lane) == 0
+    assert lane._n == 0 and lane.objs == []  # tokens all retired → reset
+    tok = lane.schedule(99.0, 1, "fresh", 0, 0, 0)
+    assert tok == 0  # slots restart after recycle
+
+
+def test_lane_store_grows_past_initial_capacity():
+    eng = Engine()
+    hits = []
+    lane = BatchQueue(eng, lambda k, o, d, p, t: hits.append((o, d)),
+                      lambda: None, cap=4)
+    for k in range(64):
+        lane.schedule(1.0 + 0.001 * k, 1, k, 0, k, 0)
+    eng.run()
+    assert hits == [(k, k) for k in range(64)]
+
+
+def test_lane_record_fields_round_trip():
+    eng = Engine()
+    seen = []
+    lane = BatchQueue(eng, lambda k, o, d, p, t: seen.append((k, o, d, p)),
+                      lambda: None)
+    lane.schedule(2.0, 2, "obj", 7, 11, 13)
+    assert int(lane._row[0]) == 7  # the introspective attempt-row field
+    eng.run()
+    assert seen == [(2, "obj", 11, 13)]
+
+
+def test_single_lane_per_engine():
+    eng = Engine()
+    BatchQueue(eng, lambda *a: None, lambda: None)
+    with pytest.raises(AssertionError):
+        BatchQueue(eng, lambda *a: None, lambda: None)

@@ -1,0 +1,222 @@
+"""Differential fault-script fuzzer (ISSUE 4 satellite; DESIGN.md §14.4).
+
+Three shuffle engines (rescan / event / batch) and two assessment
+backends (numpy / jax) now coexist, each promising byte-identical
+behaviour. This suite composes random fault scripts from the
+``sim/faults.py`` primitives — crash (± restore), slowdown, heartbeat
+outage, silent MOF loss, disk exception — at random times / progress
+fractions, runs the same seeded script under every configuration, and
+asserts byte-identical speculator action traces, attempt-launch
+sequences (time, task, node, reason, speculative, rollback) and job
+results.
+
+Two layers:
+
+1. **Pinned corpus** — fixed-seed scripts spanning every primitive and
+   the nasty compositions (crash during shuffle, MOF loss + slowdown,
+   disk exception + crash). Runs on a bare interpreter — this is the
+   deterministic CI gate (`make test-fuzz` widens the hypothesis budget
+   on top).
+2. **Hypothesis strategies** — random scripts over the same primitives
+   (REPRO_FUZZ_EXAMPLES scales the budget), plus a fused-vs-generic
+   drain parity fuzz for the batch lane and mid-run invariant sweeps.
+
+The jax column of the matrix is itself equivalence-gated per scenario
+in tests/test_accel.py; here it rides the same scripts so a fetch-plane
+change can never diverge only under a device backend.
+"""
+import os
+
+import pytest
+
+from conftest import (
+    HAVE_HYPOTHESIS,
+    HAVE_JAX,
+    assert_runs_equivalent,
+    check_invariants,
+    run_traced,
+)
+from repro.sim import JobSpec, faults
+
+SHUFFLES = ("rescan", "event", "batch")
+BACKENDS = ("numpy",) + (("jax",) if HAVE_JAX else ())
+
+_FUZZ_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "8"))
+
+
+# ---------------------------------------------------------------------------
+# Fault-script interpretation: every step is a plain tuple, so scripts
+# are printable, picklable, and identical across the matrix runs.
+# ---------------------------------------------------------------------------
+def apply_script(sim, job, script):
+    for step in script:
+        kind, idx, x, y = step
+        nid = sim.cluster.node_ids[idx % len(sim.cluster.node_ids)]
+        at = 10.0 + x * 200.0
+        if kind == "crash":
+            faults.crash_node_at(sim, nid, at)
+        elif kind == "crash_restore":
+            faults.crash_node_at(sim, nid, at,
+                                 restore_after=20.0 + y * 100.0)
+        elif kind == "slow":
+            faults.slow_node_at(sim, nid, at, factor=0.02 + 0.06 * y,
+                                duration=30.0 + y * 150.0)
+        elif kind == "hb":
+            faults.heartbeat_outage_at(sim, nid, at,
+                                       duration=15.0 + y * 60.0)
+        elif kind == "mof":
+            faults.lose_mof_at_map_progress(sim, job, max(x, 0.05),
+                                            max_stragglers=2 + int(y * 14))
+        elif kind == "disk":
+            faults.disk_exception_on_map(sim, job, idx % 8,
+                                         at_spill=1 + int(y * 3))
+        else:  # pragma: no cover - strategy bug guard
+            raise ValueError(kind)
+
+
+def script_fault(script):
+    def fault(sim, job):
+        apply_script(sim, job, script)
+    return fault
+
+
+def run_matrix(script, *, policy, seed, gb=1.0, shuffles=SHUFFLES,
+               backends=BACKENDS, checks=None):
+    runs, labels = [], []
+    for backend in backends:
+        for mode in shuffles:
+            runs.append(run_traced(
+                mode, policy, script_fault(script), seed=seed, gb=gb,
+                assess_backend=backend,
+                checks=checks if mode == "batch" else None))
+            labels.append(f"{mode}/{backend}")
+    assert_runs_equivalent(runs, labels)
+    assert runs[0].launches, "scenario launched nothing — not probing"
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# 1. Pinned corpus (bare-interpreter deterministic gate)
+# ---------------------------------------------------------------------------
+# (name, policy, seed, script) — every step (kind, node_idx, x, y).
+PINNED = [
+    ("crash_mid_map", "yarn", 1,
+     [("crash", 3, 0.15, 0.0)]),
+    ("crash_during_shuffle", "bino", 3,
+     [("crash", 7, 0.45, 0.0)]),
+    ("crash_restore_rejoin", "bino", 2,
+     [("crash_restore", 5, 0.2, 0.6)]),
+    ("slow_straggler", "yarn", 1,
+     [("slow", 11, 0.1, 0.3)]),
+    ("hb_outage_confusion", "bino", 4,
+     [("hb", 9, 0.25, 0.8)]),
+    ("mof_loss_stall", "yarn", 2,
+     [("mof", 0, 0.9, 0.9)]),
+    ("disk_exception_rollback", "bino", 5,
+     [("disk", 2, 0.0, 0.5)]),
+    ("mof_plus_slowdown", "bino", 2,
+     [("mof", 0, 0.85, 1.0), ("slow", 4, 0.3, 0.2)]),
+    ("crash_after_disk_exception", "yarn", 3,
+     [("disk", 1, 0.0, 0.9), ("crash", 6, 0.5, 0.0)]),
+    ("triple_fault", "bino", 1,
+     [("crash_restore", 2, 0.12, 0.4), ("mof", 0, 0.8, 0.6),
+      ("hb", 14, 0.5, 0.5)]),
+]
+
+
+@pytest.mark.parametrize("name,policy,seed,script",
+                         PINNED, ids=[p[0] for p in PINNED])
+def test_pinned_scripts_equivalent_across_matrix(name, policy, seed,
+                                                 script):
+    run_matrix(script, policy=policy, seed=seed,
+               checks=range(20, 700, 45))
+
+
+def test_pinned_scripts_probe_faults():
+    """The corpus must actually exercise recovery machinery somewhere:
+    re-runs, speculative copies, or fetch failures."""
+    probed = 0
+    for name, policy, seed, script in PINNED:
+        r = run_traced("batch", policy, script_fault(script), seed=seed,
+                       gb=1.0)
+        extra = sum(1 for launch in r.launches if launch[3])  # reasoned
+        fetch_fail = sum(res.n_fetch_failures for res in r.results)
+        spec = sum(res.n_spec_attempts for res in r.results)
+        if extra or fetch_fail or spec:
+            probed += 1
+    assert probed >= len(PINNED) // 2, probed
+
+
+def test_batch_generic_drain_parity_on_pinned():
+    """The fused drain loop vs the reference record-at-a-time loop:
+    transition-identical on every pinned script (guards the deliberate
+    inlining in BatchShuffle._drain_run)."""
+    for name, policy, seed, script in PINNED:
+        fused = run_traced("batch", policy, script_fault(script),
+                           seed=seed, gb=1.0)
+        generic = run_traced("batch", policy, script_fault(script),
+                            seed=seed, gb=1.0, generic_drain=True)
+        assert_runs_equivalent([fused, generic],
+                               [f"{name}/fused", f"{name}/generic"])
+
+
+def test_multi_job_matrix_equivalence():
+    extra = (JobSpec("j1", "wordcount", 0.5, submit_time=25.0),
+             JobSpec("j2", "grep", 0.5, submit_time=40.0))
+    runs, labels = [], []
+    for mode in SHUFFLES:
+        runs.append(run_traced(
+            mode, "bino", script_fault([("crash", 6, 0.3, 0.0)]),
+            seed=4, gb=1.0, extra_jobs=extra))
+        labels.append(mode)
+    assert_runs_equivalent(runs, labels)
+    assert len(runs[0].results) == 3
+
+
+# ---------------------------------------------------------------------------
+# 2. Hypothesis: random fault scripts
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    from hypothesis import example, given, settings, strategies as st
+
+    _step = st.tuples(
+        st.sampled_from(["crash", "crash_restore", "slow", "hb", "mof",
+                         "disk"]),
+        st.integers(0, 19),           # victim node / map index
+        st.floats(0.0, 1.0),          # time / progress fraction
+        st.floats(0.0, 1.0))          # magnitude / duration scale
+
+    _script = st.lists(_step, min_size=1, max_size=3)
+
+    @given(script=_script, seed=st.integers(0, 7),
+           policy=st.sampled_from(["yarn", "bino"]))
+    @settings(max_examples=_FUZZ_EXAMPLES, deadline=None)
+    @example(script=[("mof", 0, 0.9, 1.0), ("crash", 3, 0.4, 0.0)],
+             seed=2, policy="bino")
+    @example(script=[("disk", 0, 0.0, 1.0), ("crash_restore", 1, 0.3, 0.5)],
+             seed=1, policy="yarn")
+    def test_random_scripts_equivalent_across_shuffles(script, seed,
+                                                       policy):
+        """The cheap, wide net: every shuffle engine on the numpy
+        backend (the jax column rides the pinned corpus — per-example
+        device sweeps would blow the fuzz budget)."""
+        run_matrix(script, policy=policy, seed=seed, backends=("numpy",))
+
+    @given(script=_script, seed=st.integers(0, 7))
+    @settings(max_examples=max(_FUZZ_EXAMPLES // 2, 4), deadline=None)
+    def test_random_scripts_fused_vs_generic_drain(script, seed):
+        fused = run_traced("batch", "bino", script_fault(script),
+                           seed=seed, gb=1.0)
+        generic = run_traced("batch", "bino", script_fault(script),
+                            seed=seed, gb=1.0, generic_drain=True)
+        assert_runs_equivalent([fused, generic], ["fused", "generic"])
+
+    @given(script=_script, seed=st.integers(0, 5))
+    @settings(max_examples=max(_FUZZ_EXAMPLES // 2, 4), deadline=None)
+    def test_random_scripts_hold_batch_invariants(script, seed):
+        """Status partition, MOF registry, completion-log cursors,
+        idle-set mirror and lane-token consistency under random fault
+        schedules, swept mid-run and at the end state."""
+        r = run_traced("batch", "bino", script_fault(script), seed=seed,
+                       gb=1.0, checks=range(5, 900, 13))
+        check_invariants(r.sim)

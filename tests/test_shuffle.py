@@ -1,14 +1,17 @@
 """Equivalence + invariant gate for the event-driven shuffle substrate
-(DESIGN.md §12.3).
+(DESIGN.md §12.3) and the batched macro-event fetch plane (§14).
 
 Three layers, mirroring the columnar gate of ``tests/test_columnar.py``:
 
 1. **Trace equivalence** — seeded simulations under crash / delay /
    MOF-loss faults must behave byte-identically whether fetch candidates
-   come from the indexed ready-queues (``shuffle="event"``) or the seed's
-   poll-and-rescan path (``shuffle="rescan"``): same speculator action
-   traces, same attempt launches (task, node, reason, time), same job
-   results — including the Hadoop too-many-fetch-failures quorum re-run.
+   come from the indexed ready-queues (``shuffle="event"``), the seed's
+   poll-and-rescan path (``shuffle="rescan"``), or the calendar-lane
+   batch plane (``shuffle="batch"``): same speculator action traces,
+   same attempt launches (task, node, reason, time), same job results —
+   including the Hadoop too-many-fetch-failures quorum re-run. (The
+   random-script differential matrix lives in
+   tests/test_fuzz_equivalence.py.)
 2. **Dependency-status partition** (hypothesis) — under random
    crash/delay/MOF fault schedules, every dependency of every running
    reduce attempt is in exactly one of {waiting, ready, inflight,
@@ -18,14 +21,17 @@ Three layers, mirroring the columnar gate of ``tests/test_columnar.py``:
 """
 import pytest
 
+from conftest import (
+    HAVE_HYPOTHESIS,
+    check_invariants as _check_invariants_impl,
+    result_key as _result_key,
+    run_traced,
+)
 from repro.core.types import AttemptState, TaskKind, TaskState
 from repro.sim import JobSpec, Simulation, faults
 
-try:
+if HAVE_HYPOTHESIS:
     from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:  # tier-1 must collect on a bare interpreter
-    HAVE_HYPOTHESIS = False
 
 
 # ---------------------------------------------------------------------------
@@ -79,65 +85,30 @@ def _mof_wide(sim, job):
 
 def _run(mode, policy, fault, seed=1, bench="terasort", gb=2.0,
          n_reduces=None, extra_jobs=(), checks=None):
-    sim = Simulation(policy=policy, seed=seed, shuffle=mode,
-                     record_actions=True)
-    launches = []
-    orig = sim._start_attempt
-
-    def logged(req, node_id):
-        launches.append((sim.engine.now, req.task.task_id, node_id,
-                         req.reason, req.speculative, req.rollback))
-        return orig(req, node_id)
-
-    sim._start_attempt = logged
-    job = sim.submit(JobSpec("j0", bench, gb, n_reduces=n_reduces))
-    for spec in extra_jobs:
-        sim.submit(spec)
-    if fault is not None:
-        fault(sim, job)
-    if checks:
-        for t in checks:
-            sim.engine.at(float(t), _check_invariants, sim)
-    results = sim.run()
-    return sim, job, launches, results
-
-
-def _result_key(results):
-    return [(r.job_id, r.finish_time, r.n_attempts, r.n_spec_attempts,
-             r.n_fetch_failures) for r in results]
+    r = run_traced(mode, policy, fault, seed=seed, bench=bench, gb=gb,
+                   n_reduces=n_reduces, extra_jobs=extra_jobs,
+                   checks=checks)
+    return r.sim, r.job, r.launches, r.results
 
 
 def _assert_equivalent(policy, fault, seed=1, bench="terasort", gb=2.0,
                        n_reduces=None, extra_jobs=()):
+    """rescan / event / batch must agree byte for byte; returns the
+    event run for scenario-shape assertions."""
     ev, _, ev_launch, ev_res = _run("event", policy, fault, seed, bench,
                                     gb, n_reduces, extra_jobs)
-    rs, _, rs_launch, rs_res = _run("rescan", policy, fault, seed, bench,
-                                    gb, n_reduces, extra_jobs)
-    assert ev.action_trace == rs.action_trace
-    assert ev_launch == rs_launch
-    assert _result_key(ev_res) == _result_key(rs_res)
+    for mode in ("rescan", "batch"):
+        om, _, om_launch, om_res = _run(mode, policy, fault, seed, bench,
+                                        gb, n_reduces, extra_jobs)
+        assert ev.action_trace == om.action_trace, mode
+        assert ev_launch == om_launch, mode
+        assert _result_key(ev_res) == _result_key(om_res), mode
     assert ev_launch, "scenario launched nothing — not probing"
     return ev, ev_launch
 
 
 def _check_invariants(sim):
-    """The per-dependency partition + MOF registry consistency, verified
-    mid-run from independent object state."""
-    for job in sim.active_jobs.values():
-        for t in job.reduces:
-            for a in t.running_attempts():
-                sim.shuffle.verify_state(a)
-        for t in job.maps:
-            live = sim.shuffle.registry.live.get(t.task_id, set())
-            expect = {
-                nid for nid in t.output_nodes
-                if sim.cluster.nodes[nid].alive
-                and t.task_id in sim.cluster.nodes[nid].mofs
-                and nid not in sim._marked_failed}
-            got = {nid for nid in t.output_nodes if nid in live}
-            assert got == expect, (t.task_id, got, expect)
-    if sim.arrays is not None:
-        sim.verify_arrays()
+    _check_invariants_impl(sim)
 
 
 # ---------------------------------------------------------------------------
@@ -269,10 +240,14 @@ def test_event_engine_does_less_selection_work():
         sim.submit(JobSpec("j0", "terasort", 4.0))
         sim.run()
         return sim.shuffle.profile
-    ev, rs = run("event"), run("rescan")
-    assert ev.slots_filled == rs.slots_filled  # same behaviour...
+    ev, rs, ba = run("event"), run("rescan"), run("batch")
+    assert ev.slots_filled == rs.slots_filled == ba.slots_filled
     assert ev.selection_work < rs.selection_work / 10  # ...far less work
     assert ev.heap_pops and rs.deps_scanned
+    # the batch plane applies one lane record per slot outcome and
+    # notifies without per-subscriber scalar work
+    assert ba.lane_records and ba.selection_work <= ev.selection_work
+    assert ba.try_calls < ev.try_calls  # the budget gate skips no-ops
 
 
 def test_shuffle_columns_written_through():
@@ -307,8 +282,10 @@ def test_reduce_attempt_progress_uses_shuffle_state():
     assert probed and all(0.0 <= p <= 1.0 for p in probed)
 
 
-def test_rescan_and_event_default_modes():
-    assert Simulation(policy="yarn").shuffle.mode == "event"
+def test_shuffle_mode_selection_and_default():
+    assert Simulation(policy="yarn").shuffle.mode == "batch"
+    assert Simulation(policy="yarn",
+                      shuffle="event").shuffle.mode == "event"
     assert Simulation(policy="yarn",
                       shuffle="rescan").shuffle.mode == "rescan"
     with pytest.raises(ValueError):
