@@ -4,8 +4,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fuzz lint bench bench-perf bench-perf-full bench-accel \
-	bench-accel-full
+.PHONY: test test-fuzz test-net lint bench bench-perf bench-perf-full \
+	bench-accel bench-accel-full bench-net bench-net-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -17,14 +17,24 @@ test-fuzz:
 	REPRO_FUZZ_EXAMPLES=25 $(PY) -m pytest -q \
 		tests/test_fuzz_equivalence.py tests/test_engine.py
 
+# Network-substrate lane (DESIGN.md §15): seed byte-identity anchors,
+# topo/fair equivalence gates, ε-fair allocator properties, and the
+# rack/link fault corpus of the differential fuzzer.
+test-net:
+	$(PY) -m pytest -q tests/test_net.py
+	REPRO_FUZZ_EXAMPLES=15 $(PY) -m pytest -q \
+		tests/test_fuzz_equivalence.py -k net
+
 # Ruff config lives in pyproject.toml ([tool.ruff]). Scope = the layers
 # the shuffle refactor owns; widen as seed modules are modernized.
 # Degrades to a no-op warning where ruff isn't installed (the baked
 # container has no network; CI installs it).
-LINT_PATHS = src/repro/sim src/repro/core/arrays.py src/repro/accel \
+LINT_PATHS = src/repro/sim src/repro/net src/repro/core/arrays.py \
+	src/repro/accel \
 	benchmarks examples/cluster_sim.py tests/test_shuffle.py \
 	tests/test_columnar.py tests/test_accel.py tests/test_cluster_index.py \
-	tests/test_engine.py tests/test_fuzz_equivalence.py tests/conftest.py
+	tests/test_engine.py tests/test_fuzz_equivalence.py tests/test_net.py \
+	tests/conftest.py
 
 lint:
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
@@ -54,3 +64,11 @@ bench-accel:
 
 bench-accel-full:
 	$(PY) -m benchmarks.run --only perf_accel
+
+# Network-substrate trajectory (flat/topo/fair walls + the fair-drain
+# vs per-flow-accounting gate, >= 1.5x at 1000 nodes in the full sweep).
+bench-net:
+	$(PY) -m benchmarks.run --only perf_net --quick
+
+bench-net-full:
+	$(PY) -m benchmarks.run --only perf_net

@@ -1,0 +1,148 @@
+"""Network-substrate scale benchmark (ISSUE 5; DESIGN.md §15.6).
+
+The ROADMAP's measured 1000-node bottleneck after PR 4 was the
+quasi-static rate rule: every fetch launch observes the previous
+completion's flow counts, so the batch lane's fused drain cannot
+amortize the rate decisions. The ε-fair model prices launches against
+per-link share tables solved **once per drain**; its honest baseline is
+the *same model* under per-flow accounting (``recompute="flow"``: one
+vectorized water-fill per launch — what the quasi-static discipline
+costs once rates come from a real allocator).
+
+This harness runs the proportionally-sized job (4 map splits/worker,
+the perf_scale/perf_shuffle shape) to the sim cap on the batch engine
+under four network configs — flat (seed-exact reference), topo
+(rack-aware quasi-static), fair-drain, fair-flow — and gates
+``fair-flow wall / fair-drain wall`` ≥ 1.5× at 1000 nodes (full sweep;
+softer 500-node smoke gate on the quick budget). Results land in
+``BENCH_scale.json`` under ``perf_net``.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.perf_net [--quick] [--full]
+    PYTHONPATH=src python -m benchmarks.run --only perf_net --quick
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import (
+    SCALE_N_CONTAINERS,
+    SCALE_SIM_SECONDS_FULL,
+    SCALE_SIM_SECONDS_QUICK,
+    SCALE_SIZES_FULL,
+    SCALE_SIZES_QUICK,
+    SCALE_SPLITS_PER_WORKER,
+    Row,
+    bench_json_update,
+    bench_quick,
+)
+from repro.sim.job import JobSpec
+from repro.sim.mapreduce import SimParams, Simulation
+
+# Acceptance gate (ISSUE 5): the drain-batched ε-fair allocator vs the
+# same allocator under per-flow accounting, end-to-end wall on the
+# batch engine at 1000 nodes. Asserted, not just printed.
+GATE_FAIR_DRAIN_1000 = 1.5
+GATE_FAIR_SMOKE_500 = 1.3
+
+CONFIGS = (
+    ("flat", "flat", None),
+    ("topo", "topo", None),
+    ("fair_drain", "fair", {"recompute": "drain"}),
+    ("fair_flow", "fair", {"recompute": "flow"}),
+)
+
+
+def measure(n_workers: int, *, net: str, net_opts: Optional[Dict],
+            sim_seconds: float, seed: int = 0) -> Dict:
+    n_maps = SCALE_SPLITS_PER_WORKER * n_workers
+    spec = JobSpec("scale", "terasort", n_maps / 8.0)  # 8 splits per GB
+    params = dataclasses.replace(SimParams(), sim_time_cap=sim_seconds)
+    racks = max(2, n_workers // 25)
+    sim = Simulation(policy="yarn", seed=seed, n_workers=n_workers,
+                     n_containers=SCALE_N_CONTAINERS, params=params,
+                     shuffle="batch", net=net, racks=racks,
+                     net_opts=net_opts)
+    sim.submit(spec)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    prof = sim.shuffle.profile
+    return {
+        "n_workers": n_workers,
+        "racks": racks,
+        "net": net,
+        "net_opts": net_opts or {},
+        "sim_seconds": sim_seconds,
+        "wall_s": round(wall, 3),
+        "slots_filled": prof.slots_filled,
+        "recomputes": getattr(sim.cluster.net, "n_recomputes", 0),
+    }
+
+
+def run() -> List[Row]:
+    quick = bench_quick()
+    sizes = SCALE_SIZES_QUICK if quick else SCALE_SIZES_FULL
+    sim_seconds = SCALE_SIM_SECONDS_QUICK if quick \
+        else SCALE_SIM_SECONDS_FULL
+    results: List[Dict] = []
+    rows: List[Row] = []
+    fair_speedup_at: Dict[int, float] = {}
+    for n in sizes:
+        walls: Dict[str, float] = {}
+        for label, net, opts in CONFIGS:
+            r = measure(n, net=net, net_opts=opts, sim_seconds=sim_seconds)
+            r["config"] = label
+            results.append(r)
+            walls[label] = r["wall_s"]
+            rows.append((f"perf_net/{label}_{n}n_wall_s", r["wall_s"],
+                         f"slots={r['slots_filled']} "
+                         f"recomputes={r['recomputes']}"))
+        speedup = walls["fair_flow"] / max(walls["fair_drain"], 1e-9)
+        fair_speedup_at[n] = round(speedup, 2)
+        rows.append((
+            f"perf_net/fair_drain_speedup_{n}n", speedup,
+            f"fair-flow={walls['fair_flow']:.2f}s "
+            f"fair-drain={walls['fair_drain']:.2f}s "
+            f"(gate at 1000n: >={GATE_FAIR_DRAIN_1000:g}x)"))
+    at_1000 = fair_speedup_at.get(1000)
+    if at_1000 is not None and at_1000 < GATE_FAIR_DRAIN_1000:
+        raise AssertionError(
+            f"fair drain 1000-node speedup gate failed: {at_1000} < "
+            f"{GATE_FAIR_DRAIN_1000}x over per-flow accounting")
+    at_500 = fair_speedup_at.get(500)
+    if quick and at_500 is not None and at_500 < GATE_FAIR_SMOKE_500:
+        raise AssertionError(
+            f"fair drain 500-node smoke gate failed: {at_500} < "
+            f"{GATE_FAIR_SMOKE_500}x over per-flow accounting")
+    payload = {
+        "sim_seconds": sim_seconds,
+        "splits_per_worker": SCALE_SPLITS_PER_WORKER,
+        "results": results,
+        "fair_drain_speedup_at": {str(k): v
+                                  for k, v in fair_speedup_at.items()},
+    }
+    path = bench_json_update("perf_net", payload,
+                             mode="quick" if quick else "full")
+    rows.append(("perf_net/json", 1.0, str(path)))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (20/100/500 nodes, shorter sim cap)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.quick and not args.full:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+    for name, value, derived in run():
+        print(f"{name},{value:.4g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

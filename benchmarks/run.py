@@ -38,6 +38,7 @@ FIGS = [
     "perf_scale",
     "perf_shuffle",
     "perf_accel",
+    "perf_net",
 ]
 
 # (rows, wall seconds, error string or "")
@@ -85,7 +86,7 @@ def main() -> None:
     jobs = max(1, args.jobs)
     # Modules that merge into BENCH_scale.json must not race each other's
     # read-modify-write; they run serially after the parallel batch.
-    writers = {"perf_scale", "perf_shuffle", "perf_accel"}
+    writers = {"perf_scale", "perf_shuffle", "perf_accel", "perf_net"}
     parallel = [m for m in selected if m not in writers]
     by_mod = {}
     if jobs > 1 and len(parallel) > 1:

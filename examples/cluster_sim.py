@@ -23,9 +23,10 @@ from repro.sim import JobSpec, Simulation, faults
 
 
 def run(policy: str, gb: float, frac: float, seed: int,
-        shuffle: str = "batch", assess_backend: str = "numpy"):
+        shuffle: str = "batch", assess_backend: str = "numpy",
+        net: str = "flat", racks: int = 0):
     sim = Simulation(policy=policy, seed=seed, shuffle=shuffle,
-                     assess_backend=assess_backend)
+                     assess_backend=assess_backend, net=net, racks=racks)
     job = sim.submit(JobSpec("demo", "terasort", gb))
     faults.crash_busiest_node_at_map_progress(sim, job, frac)
 
@@ -54,17 +55,21 @@ def run(policy: str, gb: float, frac: float, seed: int,
 
 
 def _print_shuffle_profile(batch_prof, gb: float, frac: float,
-                           seed: int) -> None:
+                           seed: int, net: str = "flat",
+                           racks: int = 0) -> None:
     """The substrate win, demoed: same crashed run under all three
     engines — identical slots filled, orders of magnitude less selection
     work, and the batch plane's try_start fan-out collapsed by the
     completion log. ``batch_prof`` is reused from the main loop's yarn
     run; the rescan and event references are re-simulated."""
-    _, _, rescan_sim = run("yarn", gb, frac, seed, shuffle="rescan")
-    _, _, event_sim = run("yarn", gb, frac, seed, shuffle="event")
+    _, _, rescan_sim = run("yarn", gb, frac, seed, shuffle="rescan",
+                           net=net, racks=racks)
+    _, _, event_sim = run("yarn", gb, frac, seed, shuffle="event",
+                          net=net, racks=racks)
     rescan_prof = rescan_sim.shuffle.profile
     event_prof = event_sim.shuffle.profile
-    print("\n=== shuffle substrate profile (same run, three engines) ===")
+    print(f"\n=== shuffle substrate profile (same run, three engines, "
+          f"net={net}) ===")
     print(f"{'engine':>8} {'slots':>7} {'notifies':>9} {'try_start':>10} "
           f"{'selection work':>16} {'slots/1k work':>14}")
     for mode, prof in (("rescan", rescan_prof), ("event", event_prof),
@@ -81,7 +86,10 @@ def _print_shuffle_profile(batch_prof, gb: float, frac: float,
             and rescan_prof.notifies == event_prof.notifies
             == batch_prof.notifies)
     behaviour = ("identical fetch behaviour" if same
-                 else "ENGINES DIVERGED (file a bug!)")
+                 else ("fair model: per-engine recompute cadence shifts "
+                       "fetch behaviour (expected, DESIGN.md §15.3)"
+                       if net == "fair"
+                       else "ENGINES DIVERGED (file a bug!)"))
     print(f"  → {behaviour} with {ratio:.0f}× less "
           f"candidate-selection work (O(1) pops vs O(n_maps) rescans); "
           f"batch applied {batch_prof.lane_records} lane records and "
@@ -102,7 +110,32 @@ def _print_assess_profile(profiles) -> None:
               f"{sim.actions_emitted:>8}")
 
 
-def _demo_sweep(n_scenarios: int, seed: int) -> None:
+def _demo_degraded_rack(gb: float, seed: int, net: str,
+                        racks: int) -> None:
+    """The paper's degraded-network scenario end-to-end: rack 0's
+    uplink switch sickens to 2 % capacity mid-shuffle — no node ever
+    dies, but every cross-rack fetch touching the rack crawls. Binocular
+    speculation's glance sees the whole rack's fetch plane sag (ζ), not
+    a single sick node (DESIGN.md §15.5)."""
+    print(f"\n=== degraded-rack demo: {gb:g} GB terasort on {racks} "
+          f"racks (net={net}), rack 0 uplink -> 2% at t=45s ===")
+    for policy in ("yarn", "bino"):
+        sim = Simulation(policy=policy, seed=seed, net=net, racks=racks)
+        job = sim.submit(JobSpec("deg", "terasort", gb))
+        base = Simulation(policy=policy, seed=seed, net=net, racks=racks)
+        base.submit(JobSpec("deg", "terasort", gb))
+        base_jct = base.run()[0].jct
+        faults.rack_switch_degrade_at(sim, 0, 45.0, 0.02, duration=300.0)
+        res = sim.run()[0]
+        print(f"  {policy.upper():>5}: JCT {res.jct:7.0f}s "
+              f"({res.jct / base_jct:4.1f}x vs healthy rack), "
+              f"{res.n_fetch_failures} fetch failures, "
+              f"{res.n_spec_attempts} speculative attempts, "
+              f"0 nodes lost")
+
+
+def _demo_sweep(n_scenarios: int, seed: int, net: str = "flat",
+                racks: int = 0) -> None:
     """Batched multi-scenario sweep on a mid-run multi-job snapshot."""
     import dataclasses
 
@@ -110,13 +143,15 @@ def _demo_sweep(n_scenarios: int, seed: int) -> None:
     from repro.sim.mapreduce import SimParams
 
     params = dataclasses.replace(SimParams(), sim_time_cap=80.0)
-    sim = Simulation(policy="yarn", seed=seed, params=params)
+    sim = Simulation(policy="yarn", seed=seed, params=params, net=net,
+                     racks=racks)
     for j in range(3):
         sim.submit(JobSpec(f"j{j}", "terasort", 2.0,
                            submit_time=float(3 * j)))
     sim.run()
     scenarios = scenario_grid(n_scenarios, len(sim.cluster.node_ids),
-                              seed=seed)
+                              seed=seed,
+                              n_racks=sim.cluster.net.n_racks)
     sweep = BatchedSweep(sim.arrays, sim.engine.now).prepare(scenarios)
     sweep.run_batched()  # warm the jit cache
     t0 = time.perf_counter()
@@ -146,21 +181,32 @@ def main() -> None:
     ap.add_argument("--assess-backend", default="numpy",
                     choices=("numpy", "jax", "pallas"),
                     help="assessment-compute backend (DESIGN.md §13)")
+    ap.add_argument("--net", default="flat",
+                    choices=("flat", "topo", "fair"),
+                    help="network model (DESIGN.md §15): flat per-NIC "
+                         "shares (seed-exact), rack-aware topo, or "
+                         "batched ε-fair flows")
+    ap.add_argument("--racks", type=int, default=0,
+                    help="rack count for the topology-aware models "
+                         "(default: 4 for topo, 1 for fair)")
     ap.add_argument("--sweep", type=int, default=0, metavar="N",
                     help="demo the batched sweep across N fault scenarios")
     args = ap.parse_args()
 
     # fault-free baseline
-    sim0 = Simulation(policy="yarn", seed=args.seed)
+    sim0 = Simulation(policy="yarn", seed=args.seed, net=args.net,
+                      racks=args.racks)
     sim0.submit(JobSpec("demo", "terasort", args.gb))
     base = sim0.run()[0].jct
 
     print(f"=== {args.gb:g} GB terasort, node crash at "
-          f"{args.frac:.0%} map progress (fault-free JCT {base:.0f}s) ===")
+          f"{args.frac:.0%} map progress (net={args.net}, "
+          f"fault-free JCT {base:.0f}s) ===")
     yarn_sim = None
     for policy in ("yarn", "bino"):
         res, timeline, sim = run(policy, args.gb, args.frac, args.seed,
-                                 assess_backend=args.assess_backend)
+                                 assess_backend=args.assess_backend,
+                                 net=args.net, racks=args.racks)
         if policy == "yarn":
             yarn_sim = sim
         print(f"\n--- {policy.upper()} ---  JCT {res.jct:.0f}s "
@@ -172,14 +218,23 @@ def main() -> None:
             print(f"  ... {len(timeline) - 12} more events")
 
     _print_shuffle_profile(yarn_sim.shuffle.profile, args.gb, args.frac,
-                           args.seed)
+                           args.seed, net=args.net, racks=args.racks)
     profiles = [(args.assess_backend, yarn_sim)]
     if args.assess_backend != "numpy":
-        _, _, ref = run("yarn", args.gb, args.frac, args.seed)
+        _, _, ref = run("yarn", args.gb, args.frac, args.seed,
+                        net=args.net, racks=args.racks)
         profiles.insert(0, ("numpy", ref))
     _print_assess_profile(profiles)
+    n_racks = yarn_sim.cluster.net.n_racks
+    if n_racks > 1:
+        # cross-rack traffic needs a job bigger than one rack: pack-
+        # first placement fills ~8 maps/node, so a job of `gb` GB spans
+        # ~gb nodes — size it one node past the rack boundary
+        per_rack = -(-len(yarn_sim.cluster.node_ids) // n_racks)
+        _demo_degraded_rack(max(args.gb, per_rack + 1.0), args.seed,
+                            args.net, n_racks)
     if args.sweep:
-        _demo_sweep(args.sweep, args.seed)
+        _demo_sweep(args.sweep, args.seed, net=args.net, racks=args.racks)
 
 
 if __name__ == "__main__":

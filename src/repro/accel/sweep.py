@@ -41,32 +41,42 @@ __all__ = ["Scenario", "scenario_grid", "BatchedSweep"]
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    kind: str            # baseline | crash | delay | mof_loss | fetch_quorum
+    kind: str            # baseline | crash | delay | mof_loss |
+    #                      fetch_quorum | rack_degrade
     node: int = -1       # victim node index (crash / delay)
-    factor: float = 1.0  # speed multiplier (delay)
+    factor: float = 1.0  # speed multiplier (delay) / uplink factor
     width: int = 2       # reducers hit (mof_loss)
     silent_s: float = 12.0   # heartbeat silence injected (crash)
+    rack: int = -1       # victim rack (rack_degrade; §15 net columns)
 
 
 def scenario_grid(n_scenarios: int, n_nodes: int,
-                  seed: int = 0) -> List[Scenario]:
-    """A deterministic grid cycling the four fault kinds over distinct
+                  seed: int = 0, n_racks: int = 1) -> List[Scenario]:
+    """A deterministic grid cycling the fault kinds over distinct
     victims/intensities — the sweep analogue of the benchmark fault
-    grids (benches × fracs × seeds)."""
+    grids (benches × fracs × seeds). With a rack topology
+    (``n_racks > 1``) the cycle includes ``rack_degrade`` — the
+    degraded-uplink shape driven from the §15 ``node_rack`` column."""
     rng = np.random.default_rng(seed)
     kinds = ("crash", "delay", "mof_loss", "fetch_quorum")
+    if n_racks > 1:
+        kinds = kinds + ("rack_degrade",)
     out: List[Scenario] = []
     for i in range(n_scenarios):
         kind = kinds[i % len(kinds)]
         node = int(rng.integers(0, n_nodes))
+        k = len(kinds)
         if kind == "crash":
             out.append(Scenario(kind, node=node,
-                                silent_s=float(11 + 7 * (i // 4 % 3))))
+                                silent_s=float(11 + 7 * (i // k % 3))))
         elif kind == "delay":
             out.append(Scenario(kind, node=node,
-                                factor=float(0.02 + 0.03 * (i // 4 % 3))))
+                                factor=float(0.02 + 0.03 * (i // k % 3))))
         elif kind == "mof_loss":
-            out.append(Scenario(kind, width=1 + i // 4 % 3))
+            out.append(Scenario(kind, width=1 + i // k % 3))
+        elif kind == "rack_degrade":
+            out.append(Scenario(kind, rack=int(rng.integers(0, n_racks)),
+                                factor=float(0.02 + 0.04 * (i // k % 3))))
         else:
             out.append(Scenario(kind))
     return out
@@ -93,6 +103,27 @@ def apply_scenario(arr: ArraySnapshot, sc: Scenario, now: float) -> None:
         hit = reducing[:sc.width]
         arr.fetched[hit] -= 1
         arr.sh_fail[hit] += 1
+    elif sc.kind == "rack_degrade":
+        # Sick rack switch (§15 net columns): every running reducer
+        # hosted in the rack sees its shuffle health sag — transfers
+        # stall (inflight drains into failure pressure) and fetched
+        # partitions regress, more of them the sicker the uplink — while
+        # node clocks and heartbeats stay perfectly healthy. The
+        # glance's ζ must attribute this to the rack's fetch plane, not
+        # to any single node. (``rack_factor`` documents the scenario on
+        # the clone; the assessment-visible perturbation is the
+        # severity-scaled shuffle columns.)
+        # len(rack_factor) IS the topology's rack count (aliased from
+        # the net model) — node_rack.max()+1 would diverge from the
+        # live fault path whenever ceil-division leaves trailing racks
+        # empty (an empty victim rack perturbs nothing, same as live).
+        rack = sc.rack % max(1, len(arr.rack_factor))
+        arr.rack_factor[rack] = max(sc.factor, 1e-3)
+        severity = 1 + int(sc.factor < 0.05)
+        hit = reducing[arr.node_rack[arr.node[reducing]] == rack]
+        arr.fetched[hit] = np.maximum(arr.fetched[hit] - severity, 0)
+        arr.sh_fail[hit] += severity
+        arr.sh_inflight[hit] = 0
     else:  # fetch_quorum: every running reducer regresses one partition
         arr.fetched[reducing] -= 1
         arr.sh_fail[reducing] += 2

@@ -83,6 +83,18 @@ class ArraySnapshot:
         self.node_free = np.full(n, n_containers, dtype=np.int32)
         self.node_total = np.full(n, n_containers, dtype=np.int32)
         self.node_marked = np.zeros(n, dtype=bool)
+        # --- network columns (DESIGN.md §15) -----------------------------
+        # Active shuffle flows per node, link liveness, rack membership
+        # and per-rack uplink flow/degradation state. ``init_net`` aliases
+        # these to the network model's own arrays, so the model's single
+        # write-through store serves both (verified against a recount by
+        # ``Simulation.verify_network``). The placeholders below keep
+        # standalone snapshots (tests, sweeps) self-contained.
+        self.node_flows = np.zeros(n, dtype=np.int32)
+        self.node_link_up = np.ones(n, dtype=bool)
+        self.node_rack = np.zeros(n, dtype=np.int32)
+        self.rack_flows = np.zeros(1, dtype=np.int32)
+        self.rack_factor = np.ones(1)
         # --- job registry -------------------------------------------------
         self.job_index: Dict[str, int] = {}
         self.job_ids: List[str] = []
@@ -132,6 +144,19 @@ class ArraySnapshot:
         # Per-tick memo for the shared running-rows extraction (glance and
         # the straggler scan both need it within one assess call).
         self._rr_memo: Tuple[float, Optional[np.ndarray]] = (np.nan, None)
+
+    # ------------------------------------------------------------------
+    # Network wiring (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def init_net(self, net) -> None:
+        """Share storage with the network model's columnar state: the
+        model's open/close/cut/degrade write-through lands directly in
+        the snapshot (one store, no second mirror to drift)."""
+        self.node_flows = net.node_flows
+        self.node_link_up = net.node_link_up
+        self.node_rack = net.node_rack
+        self.rack_flows = net.rack_flows
+        self.rack_factor = net.rack_factor
 
     # ------------------------------------------------------------------
     # Job registry
@@ -397,7 +422,10 @@ class ArraySnapshot:
         c.node_ids = list(self.node_ids)
         c.node_index = dict(self.node_index)
         for name in ("node_hb", "node_speed", "node_free", "node_total",
-                     "node_marked"):
+                     "node_marked", "node_flows", "node_link_up",
+                     "node_rack", "rack_flows", "rack_factor"):
+            # .copy() detaches the net-aliased columns: scenario sweeps
+            # may perturb rack/flow state without touching the live model
             setattr(c, name, getattr(self, name).copy())
         c.job_index = dict(self.job_index)
         c.job_ids = list(self.job_ids)

@@ -13,9 +13,12 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Set
 
-# 1 GbE effective goodput and a single SATA disk.
-NIC_BW = 117e6          # bytes/s
-DISK_BW = 100e6         # bytes/s (local MOF read)
+# 1 GbE effective goodput and a single SATA disk — the single source now
+# lives in the network layer (repro.net.base); re-exported here for the
+# seed API (shuffle imports these names from this module).
+from repro.net.base import DISK_BW, NIC_BW, NetworkModel  # noqa: F401
+from repro.net.flat import FlatNetwork
+
 HEARTBEAT_PERIOD = 1.0  # NodeManager → ResourceManager (s)
 
 
@@ -66,7 +69,8 @@ class SimNode:
 
 
 class Cluster:
-    def __init__(self, n_workers: int = 20, n_containers: int = 8):
+    def __init__(self, n_workers: int = 20, n_containers: int = 8,
+                 network: Optional[NetworkModel] = None):
         self.nodes: Dict[str, SimNode] = {
             f"n{i:02d}": SimNode(f"n{i:02d}", n_containers)
             for i in range(n_workers)
@@ -74,6 +78,12 @@ class Cluster:
         self.node_ids: List[str] = list(self.nodes)
         self._node_pos: Dict[str, int] = {
             n: i for i, n in enumerate(self.node_ids)}
+        # Pluggable network substrate (DESIGN.md §15): owns the flow
+        # accounting and every rate decision. The flat model is the
+        # seed's quasi-static per-NIC share, extracted verbatim.
+        self.net: NetworkModel = network if network is not None \
+            else FlatNetwork()
+        self.net.bind(self)
         # Free-container index: a lazy min-heap of node positions that MAY
         # have a free container. Invariant: every alive node with a free
         # container is flagged in the heap; stale entries (consumed slots,
@@ -85,14 +95,10 @@ class Cluster:
         self._in_heap: List[bool] = [True] * n_workers
 
     def fetch_throughput(self, src: str, dst: str) -> float:
-        """Quasi-static per-flow rate for a shuffle fetch, decided at flow
-        start: local reads hit the disk, remote fetches share each NIC
-        across that node's active flows."""
-        if src == dst:
-            return DISK_BW / max(1, self.nodes[src].active_flows + 1)
-        s = NIC_BW / max(1, self.nodes[src].active_flows + 1)
-        d = NIC_BW / max(1, self.nodes[dst].active_flows + 1)
-        return min(s, d)
+        """Quasi-static rate a new shuffle fetch would get right now —
+        answered by the pluggable network model (the seed formula lives
+        on as ``repro.net.flat.FlatNetwork.rate_probe``)."""
+        return self.net.rate_probe(src, dst)
 
     def note_free(self, node_id: str) -> None:
         """Re-arm ``node_id`` in the free-container index. Called by the

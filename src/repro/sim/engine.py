@@ -66,7 +66,7 @@ class BatchQueue:
 
     __slots__ = ("engine", "recs", "objs", "_heap", "_n", "_apply",
                  "_flush", "_drain_impl", "_kind", "_time", "_row", "_dep",
-                 "_payload", "in_drain", "applied")
+                 "_payload", "in_drain", "applied", "on_begin", "on_end")
 
     def __init__(self, engine: "Engine", apply: Callable, flush: Callable,
                  drain: Optional[Callable] = None, cap: int = 1024):
@@ -87,6 +87,12 @@ class BatchQueue:
         self._cache_views()
         self.in_drain = False
         self.applied = 0  # records applied (profiling; incl. stale drops)
+        # Optional drain brackets (consumer-set): the ε-fair network
+        # model re-solves its share tables once per drain run here
+        # (DESIGN.md §15.3) — shared by the fused and generic loops, so
+        # the drain-parity tests exercise identical rate schedules.
+        self.on_begin: Optional[Callable] = None
+        self.on_end: Optional[Callable] = None
         engine.attach_lane(self)
 
     def _cache_views(self) -> None:
@@ -138,10 +144,14 @@ class BatchQueue:
         lane fully drains (every live token is a pending record, so an
         empty heap means no token dangles)."""
         self.in_drain = True
+        if self.on_begin is not None:
+            self.on_begin()
         try:
             paused = self._drain_impl(heap, until)
         finally:
             self.in_drain = False
+            if self.on_end is not None:
+                self.on_end()
             self._flush()
         if not self._heap:
             self._n = 0

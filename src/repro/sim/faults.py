@@ -32,11 +32,80 @@ def heartbeat_outage_at(sim: Simulation, node_id: str, at: float,
                         duration: float) -> None:
     """Transient network delay: the node keeps computing but its heartbeats
     vanish for ``duration`` — indistinguishable from a crash until it
-    resumes (the Fig. 7(b) confusion matrix)."""
+    resumes (the Fig. 7(b) confusion matrix). Suppression windows only
+    ever extend (overlapping outages — or an outage during a link cut —
+    union; a short outage must not resume a severed link's heartbeats)."""
     def start():
-        sim.cluster.nodes[node_id].hb_suppressed_until = \
-            sim.engine.now + duration
+        node = sim.cluster.nodes[node_id]
+        node.hb_suppressed_until = max(node.hb_suppressed_until,
+                                       sim.engine.now + duration)
     sim.engine.at(at, start)
+
+
+def rack_switch_degrade_at(sim: Simulation, rack: int, at: float,
+                           factor: float,
+                           duration: Optional[float] = None) -> None:
+    """Network-level fault (DESIGN.md §15.5): the rack's uplink switch
+    degrades to ``factor`` of its capacity — every future inter-rack
+    fetch touching the rack prices against the shrunken uplink, so the
+    whole rack's shuffle health sags while its nodes stay perfectly
+    alive (the degraded-network scenario the paper's glance ζ-scores
+    must separate from a sick node). Overlapping windows on one rack
+    union — the strongest active degrade wins, and the uplink heals
+    only when every window has elapsed (same discipline as link cuts
+    and heartbeat outages). No-op on topology-free networks
+    (``net="flat"`` has no uplinks)."""
+    net = sim.cluster.net
+    key = rack % max(1, net.n_racks)
+
+    def eff() -> float:
+        reg = sim._degrade_windows.get(key, [])
+        return min((f for _e, f in reg), default=1.0)
+
+    def start():
+        end = (sim.engine.now + duration if duration is not None
+               else float("inf"))
+        sim._degrade_windows.setdefault(key, []).append((end, factor))
+        net.set_uplink_factor(rack, eff())
+
+    def stop():
+        reg = sim._degrade_windows.get(key, [])
+        now = sim.engine.now
+        reg[:] = [(e, f) for e, f in reg if e > now + 1e-9]
+        net.set_uplink_factor(rack, eff())
+
+    sim.engine.at(at, start)
+    if duration is not None:
+        sim.engine.at(at + duration, stop)
+
+
+def link_cut_at(sim: Simulation, node_id: str, at: float,
+                duration: Optional[float] = None) -> None:
+    """The node's network link goes down: fetch paths to/from it are
+    lost (in-flight transfers abort into failure cycles, its MOF copies
+    leave the candidate set) and its heartbeats vanish — while the node
+    keeps computing. Restores after ``duration`` if given."""
+    sim.engine.at(at, sim.cut_link, node_id, duration)
+    if duration is not None:
+        sim.engine.at(at + duration, sim.restore_link, node_id)
+
+
+def rack_partition_at(sim: Simulation, rack: int, at: float,
+                      duration: Optional[float] = None) -> None:
+    """Whole-rack network partition: every node in the rack gets its
+    link cut at ``at`` (coarse model: the MOF-availability index is
+    consumer-independent, so intra-rack fetches are suppressed along
+    with inter-rack ones — the §15.5 fidelity waiver), healing together
+    after ``duration``."""
+    def start():
+        for nid in sim.cluster.net.rack_nodes(rack):
+            sim.cut_link(nid, duration)
+    def end():
+        for nid in sim.cluster.net.rack_nodes(rack):
+            sim.restore_link(nid)
+    sim.engine.at(at, start)
+    if duration is not None:
+        sim.engine.at(at + duration, end)
 
 
 def crash_busiest_node_at_map_progress(sim: Simulation, job: SimJob,

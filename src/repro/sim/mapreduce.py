@@ -50,6 +50,7 @@ from repro.core.types import (
     TaskState,
     TaskView,
 )
+from repro.net.base import make_network
 from repro.sim.cluster import Cluster, HEARTBEAT_PERIOD
 from repro.sim.dispatch import Dispatcher, LaunchRequest
 from repro.sim.engine import Engine, EventHandle
@@ -349,8 +350,13 @@ class Simulation:
     tests/test_fuzz_equivalence.py).
     ``assess_backend`` selects the assessment-compute backend for the
     vectorized policies ("numpy" default, "jax", "pallas" — DESIGN.md
-    §13). ``record_actions=True`` appends ``(time, repr(action))`` to
-    ``action_trace`` for those comparisons."""
+    §13). ``net`` selects the network model ("flat" default: the
+    seed-exact quasi-static per-NIC share; "topo": rack-aware with
+    oversubscribed uplinks; "fair": batched ε-fair flows re-solved per
+    BatchQueue drain — DESIGN.md §15), with ``racks``/``net_opts``
+    parameterizing it. ``record_actions=True`` appends
+    ``(time, repr(action))`` to ``action_trace`` for those
+    comparisons."""
 
     def __init__(self, *, policy: str = "yarn",
                  policy_factory: Optional[Callable[[Sequence[str]], Speculator]] = None,
@@ -358,9 +364,30 @@ class Simulation:
                  params: Optional[SimParams] = None, seed: int = 0,
                  columnar: bool = True, shuffle: str = "batch",
                  assess_backend: Optional[str] = None,
+                 net: object = "flat", racks: int = 0,
+                 net_opts: Optional[Dict] = None,
                  record_actions: bool = False):
         self.engine = Engine()
-        self.cluster = Cluster(n_workers, n_containers)
+        # Pluggable network substrate (DESIGN.md §15): "flat" is the
+        # seed-exact default; "topo"/"fair" add rack topology and the
+        # batched ε-fair flow model. ``racks``/``net_opts`` parameterize
+        # the named models; a NetworkModel instance passes through.
+        self.cluster = Cluster(
+            n_workers, n_containers,
+            network=make_network(net, racks=racks, **(net_opts or {})))
+        # Nodes whose network link is currently cut (link_cut_at /
+        # rack_partition_at) — shared with the MOF registry so cut
+        # sources drop out of every engine's candidate scan. Overlapping
+        # cut windows union via a per-node depth counter; ``_cut_hb``
+        # records the heartbeat-suppression window the active cut owns
+        # (so healing never cancels a foreign outage's window).
+        self._link_down: Set[str] = set()
+        self._cut_depth: Dict[str, int] = {}
+        self._cut_hb: Dict[str, float] = {}
+        # Active uplink-degrade windows per rack: list of (end, factor);
+        # the effective factor is the min over live windows (the
+        # strongest degrade), maintained by faults.rack_switch_degrade_at.
+        self._degrade_windows: Dict[int, List[Tuple[float, float]]] = {}
         self.rng = np.random.default_rng(seed)
         self.policy_name = policy
         self._attempt_seq = itertools.count()
@@ -369,6 +396,8 @@ class Simulation:
         self.arrays: Optional[ArraySnapshot] = (
             ArraySnapshot(self.cluster.node_ids, n_containers)
             if columnar else None)
+        if self.arrays is not None:
+            self.arrays.init_net(self.cluster.net)
         self.record_actions = record_actions
         self.action_trace: List[Tuple[float, str]] = []
         # Assessment-path profiling (benchmarks/perf_scale.py).
@@ -812,6 +841,82 @@ class Simulation:
             self.shuffle.abort_fetch(a, prod.task_id)
             self.shuffle.try_start(a)  # rediscovers via a failure cycle
 
+    def cut_link(self, node_id: str,
+                 duration: Optional[float] = None) -> None:
+        """Network link fault (DESIGN.md §15.5): the node keeps computing
+        but its fetch paths and heartbeats are gone. In-flight transfers
+        touching the node abort — consumers fall into failure cycles
+        (the recovery machinery the paper studies) rather than stretching
+        a transfer toward infinity — and its MOF copies leave every
+        engine's candidate set until :meth:`restore_link`. Overlapping
+        cut windows union: the link heals only when every window has
+        been restored (depth counter), and heartbeat suppression only
+        ever extends — a cut never shortens a window someone else
+        (an outage, an earlier cut) already installed."""
+        node = self.cluster.nodes[node_id]
+        target = (self.engine.now + duration if duration is not None
+                  else float("inf"))
+        if target > node.hb_suppressed_until:
+            node.hb_suppressed_until = target
+            # remember the window this cut owns so restore can tell it
+            # apart from a foreign (outage-installed) window
+            self._cut_hb[node_id] = target
+        depth = self._cut_depth.get(node_id, 0)
+        self._cut_depth[node_id] = depth + 1
+        if depth:
+            return  # already down: deepen the window, effects already ran
+        self._link_down.add(node_id)
+        self.cluster.net.cut(node_id)
+        # Its MOF copies stop being fetchable while the link is down.
+        self.shuffle.registry.drop_node_sources(node)
+        # The cut host's own in-flight fetches stall out silently (same
+        # shape as crash_node: no immediate retry — the next producer
+        # completion in the job re-kicks the attempt).
+        for a in self.attempts.values():
+            if a.node_id == node_id and a.state == AttemptState.RUNNING \
+                    and a.shuffle is not None and a.shuffle.inflight:
+                for m in list(a.shuffle.inflight):
+                    self.shuffle.abort_fetch(a, m)
+                self.shuffle.mark_stalled(a)
+        # Fetches streaming FROM the cut node stall into failure cycles.
+        for a in self.attempts.values():
+            if a.state != AttemptState.RUNNING or a.node_id == node_id \
+                    or a.shuffle is None:
+                continue
+            for m, src in list(a.shuffle.fetch_srcs.items()):
+                if src == node_id:
+                    self.shuffle.abort_fetch(a, m)
+                    self.shuffle.try_start(a)
+
+    def restore_link(self, node_id: str) -> None:
+        """One cut window ends: the link heals only once every
+        overlapping window is restored. Heartbeats resume on the next
+        RM tick — unless a foreign suppression (a heartbeat outage, or
+        a longer window installed mid-cut) still owns the clock — and
+        the node's surviving MOF copies rejoin the registry (waiting
+        reducers rediscover them on their next failure-cycle retry —
+        no eager notify, matching the reference scan's behavior)."""
+        depth = self._cut_depth.get(node_id, 0)
+        if depth == 0:
+            return
+        if depth > 1:
+            self._cut_depth[node_id] = depth - 1
+            return
+        del self._cut_depth[node_id]
+        self._link_down.discard(node_id)
+        self.cluster.net.restore_link(node_id)
+        node = self.cluster.nodes[node_id]
+        owned = self._cut_hb.pop(node_id, None)
+        if owned is not None and node.hb_suppressed_until == owned \
+                and owned > self.engine.now:
+            node.hb_suppressed_until = self.engine.now
+        if node.alive:
+            for task_id in node.mofs:
+                t = self._task(task_id)
+                if t is not None and t.state == TaskState.COMPLETED \
+                        and node_id in t.output_nodes:
+                    self.shuffle.registry.add(t, node_id)
+
     def set_node_speed(self, node_id: str, speed: float) -> None:
         """Sync every hosted attempt at the OLD speed, flip, reschedule."""
         node = self.cluster.nodes[node_id]
@@ -866,6 +971,7 @@ class Simulation:
                 self._attempt_failed(a, reason="node-restarted")
         node.restore()
         node.last_heartbeat = self.engine.now
+        self.cluster.net.node_reset(node_id)
         self.cluster.note_free(node_id)
         self._marked_failed.discard(node_id)
         self.truth_crashed.discard(node_id)
@@ -1017,6 +1123,10 @@ class Simulation:
             assert arr.node_speed[i] == node.speed, nid
             assert arr.node_free[i] == node.free_containers, nid
             assert bool(arr.node_marked[i]) == (nid in self._marked_failed), nid
+            assert arr.node_flows[i] == node.active_flows, nid
+            assert bool(arr.node_link_up[i]) == (nid not in self._link_down), \
+                nid
+        self.verify_network()
         for job in self.active_jobs.values():
             recount = sum(1 for t in job.maps
                           if t.state == TaskState.COMPLETED)
@@ -1059,6 +1169,18 @@ class Simulation:
                 assert arr.sh_fail[r] == 0
             assert prog[k] == a.progress(), (a.attempt_id, prog[k],
                                              a.progress())
+
+    def verify_network(self) -> None:
+        """Assert the network model's incrementally-maintained flow and
+        link counters equal a from-scratch recount of the live transfers
+        (the §15 half of the write-through gate; works with or without
+        the columnar mirror)."""
+        flows = []
+        for a in self.attempts.values():
+            if a.state == AttemptState.RUNNING and a.shuffle is not None:
+                for src in a.shuffle.fetch_srcs.values():
+                    flows.append((src, a.node_id))
+        self.cluster.net.verify(flows, self._link_down)
 
     def _check_map_progress_triggers(self, job: SimJob) -> None:
         if not job.map_progress_triggers:

@@ -153,9 +153,15 @@ class MofRegistry:
     def __init__(self):
         self.live: Dict[str, Set[str]] = {}
         self.placements: Dict[str, Dict["SimTask", None]] = {}
+        # Nodes whose network link is cut (shared with the simulation's
+        # ``_link_down`` set): their MOF copies are unreachable, so they
+        # never enter ``live`` — mirroring the reference scan's
+        # link-liveness check (DESIGN.md §15.5).
+        self.down: Set[str] = set()
 
     def add(self, task: "SimTask", node_id: str) -> None:
-        self.live.setdefault(task.task_id, set()).add(node_id)
+        if node_id not in self.down:
+            self.live.setdefault(task.task_id, set()).add(node_id)
         self.placements.setdefault(node_id, {})[task] = None
 
     def drop_node_sources(self, node) -> None:
@@ -212,7 +218,11 @@ class ShuffleEngine:
     def __init__(self, sim: "Simulation"):
         self.sim = sim
         self.registry = MofRegistry()
+        self.registry.down = sim._link_down
         self.profile = ShuffleProfile()
+        # Pluggable network model (DESIGN.md §15): every rate decision
+        # and all flow accounting go through it.
+        self._net = sim.cluster.net
 
     # -- attempt lifecycle ------------------------------------------------
     def attach(self, a: "SimAttempt") -> ShuffleState:
@@ -288,9 +298,7 @@ class ShuffleEngine:
                       prod: "SimTask", src: str) -> None:
         sim = self.sim
         size = prod.job.spec.partition_bytes()
-        rate = sim.cluster.fetch_throughput(src, a.node_id)
-        sim.cluster.nodes[src].active_flows += 1
-        sim.cluster.nodes[a.node_id].active_flows += 1
+        rate = self._net.open_flow(src, a.node_id)
         ss.fetch_srcs[m] = src
         ss.inflight[m] = sim.engine.after(
             max(size / rate, 1e-3), self._fetch_done, a, m, src)
@@ -306,10 +314,7 @@ class ShuffleEngine:
     def _end_flow(self, a: "SimAttempt", ss: ShuffleState, m: str,
                   src: Optional[str]) -> None:
         if ss.inflight.pop(m, None) is not None and src is not None:
-            nodes = self.sim.cluster.nodes
-            nodes[src].active_flows = max(0, nodes[src].active_flows - 1)
-            nodes[a.node_id].active_flows = max(
-                0, nodes[a.node_id].active_flows - 1)
+            self._net.close_flow(src, a.node_id)
         ss.fetch_srcs.pop(m, None)
 
     def _fetch_done(self, a: "SimAttempt", m: str, src: str) -> None:
@@ -495,10 +500,12 @@ class RescanShuffle(ShuffleEngine):
 
     def _mof_source(self, prod: "SimTask") -> Optional[str]:
         sim = self.sim
+        down = sim._link_down
         for nid in prod.output_nodes:
             node = sim.cluster.nodes[nid]
             if node.alive and prod.task_id in node.mofs \
-                    and nid not in sim._marked_failed:
+                    and nid not in sim._marked_failed \
+                    and nid not in down:
                 return nid
         return None
 
@@ -744,6 +751,15 @@ class BatchShuffle(EventShuffle):
         self._pf = sim.params.parallel_fetches
         self._cycle = sim.params.fetch_cycle
         self._bino = isinstance(sim.speculator, BinocularSpeculator)
+        # Network fast path: only the seed-compat flat model may take the
+        # hand-inlined rate/flow arithmetic below (it IS that model);
+        # every other model goes through its open/close methods. The
+        # ε-fair model re-solves its share tables once per drain run via
+        # the lane's bracketing hooks (DESIGN.md §15.3).
+        self._inline_flat = self._net.inline_flat
+        if self._net.wants_drain_hook:
+            self.batches.on_begin = self._net.begin_drain
+            self.batches.on_end = self._net.end_drain
 
     @staticmethod
     def _cancel(h) -> None:
@@ -817,11 +833,7 @@ class BatchShuffle(EventShuffle):
             del ss.inflight[m]
             src = ss.fetch_srcs.pop(m, None)
             if src is not None:
-                nodes = self.sim.cluster.nodes
-                sn = nodes[src]
-                dn = nodes[a.node_id]
-                sn.active_flows = max(0, sn.active_flows - 1)
-                dn.active_flows = max(0, dn.active_flows - 1)
+                self._net.close_flow(src, a.node_id)
             if a.state != AttemptState.RUNNING:
                 return
             ss.fetched.add(m)
@@ -885,6 +897,9 @@ class BatchShuffle(EventShuffle):
         task_index = sim._task_index
         live_map = self.registry.live
         node_pos = self._node_pos
+        net = self._net
+        inline_net = self._inline_flat
+        nf = net.node_flows
         psizes = self._psizes
         dirty = self._dirty
         idle = self._idle
@@ -940,12 +955,17 @@ class BatchShuffle(EventShuffle):
             src = ss.fetch_srcs.pop(m, None)
             dst = a.node_id
             if src is not None:
-                sn = nodes[src]
-                dn = nodes[dst]
-                f = sn.active_flows - 1
-                sn.active_flows = f if f > 0 else 0
-                f = dn.active_flows - 1
-                dn.active_flows = f if f > 0 else 0
+                if inline_net:
+                    sn = nodes[src]
+                    dn = nodes[dst]
+                    f = sn.active_flows - 1
+                    sn.active_flows = f if f > 0 else 0
+                    f = dn.active_flows - 1
+                    dn.active_flows = f if f > 0 else 0
+                    nf[node_pos[src]] = sn.active_flows
+                    nf[node_pos[dst]] = dn.active_flows
+                else:
+                    net.close_flow(src, dst)
             if a.state is not RUNNING:
                 continue
             fetched = ss.fetched
@@ -1014,17 +1034,23 @@ class BatchShuffle(EventShuffle):
                     continue
                 status[j] = S_INFLIGHT
                 ss.n_ready -= 1
-                # per-flow rate decided at flow start (fetch_throughput)
-                sn = nodes[src2]
-                dn = nodes[dst]
-                if src2 == dst:
-                    rate = DISK_BW / (sn.active_flows + 1)
+                if inline_net:
+                    # per-flow rate decided at flow start (the seed-
+                    # compat flat model's fetch_throughput arithmetic)
+                    sn = nodes[src2]
+                    dn = nodes[dst]
+                    if src2 == dst:
+                        rate = DISK_BW / (sn.active_flows + 1)
+                    else:
+                        sf = sn.active_flows + 1
+                        df = dn.active_flows + 1
+                        rate = NIC_BW / (sf if sf > df else df)
+                    sn.active_flows += 1
+                    dn.active_flows += 1
+                    nf[node_pos[src2]] = sn.active_flows
+                    nf[node_pos[dst]] = dn.active_flows
                 else:
-                    sf = sn.active_flows + 1
-                    df = dn.active_flows + 1
-                    rate = NIC_BW / (sf if sf > df else df)
-                sn.active_flows += 1
-                dn.active_flows += 1
+                    rate = net.open_flow(src2, dst)
                 ss.fetch_srcs[m2] = src2
                 job2 = prod.job
                 size = psizes.get(job2)
@@ -1147,6 +1173,10 @@ class BatchShuffle(EventShuffle):
         live_map = self.registry.live
         nodes = sim.cluster.nodes
         batches = self.batches
+        net = self._net
+        inline_net = self._inline_flat
+        nf = net.node_flows
+        node_pos = self._node_pos
         now = sim.engine.now
         dst = a.node_id
         row = a.row
@@ -1184,18 +1214,24 @@ class BatchShuffle(EventShuffle):
                 continue
             status[i] = S_INFLIGHT
             ss.n_ready -= 1
-            # inline _launch_fetch (cluster.fetch_throughput semantics:
-            # quasi-static per-flow rate decided at flow start)
-            sn = nodes[src]
-            dn = nodes[dst]
-            if src == dst:
-                rate = DISK_BW / (sn.active_flows + 1)
+            if inline_net:
+                # inline _launch_fetch (the seed-compat flat model's
+                # fetch_throughput semantics: quasi-static per-flow
+                # rate decided at flow start)
+                sn = nodes[src]
+                dn = nodes[dst]
+                if src == dst:
+                    rate = DISK_BW / (sn.active_flows + 1)
+                else:
+                    sf = sn.active_flows + 1
+                    df = dn.active_flows + 1
+                    rate = NIC_BW / (sf if sf > df else df)
+                sn.active_flows += 1
+                dn.active_flows += 1
+                nf[node_pos[src]] = sn.active_flows
+                nf[node_pos[dst]] = dn.active_flows
             else:
-                sf = sn.active_flows + 1
-                df = dn.active_flows + 1
-                rate = NIC_BW / (sf if sf > df else df)
-            sn.active_flows += 1
-            dn.active_flows += 1
+                rate = net.open_flow(src, dst)
             ss.fetch_srcs[m] = src
             dt = self._psize(prod.job) / rate
             if dt < 1e-3:

@@ -83,13 +83,17 @@ def run_traced(mode: str, policy: str, fault: Optional[Callable] = None,
                assess_backend: Optional[str] = None,
                checks: Optional[Sequence[float]] = None,
                columnar: bool = True,
+               net: object = "flat", racks: int = 0,
+               net_opts: Optional[dict] = None,
                generic_drain: bool = False) -> TraceResult:
     """One seeded simulation with launch instrumentation. ``checks``
     schedules mid-run invariant sweeps (shuffle partition + registry +
-    columnar mirror); ``generic_drain`` forces the batch lane's
-    reference drain loop (parity vs the fused loop)."""
+    columnar mirror + network flow/link counters); ``net``/``racks``
+    select the network model (DESIGN.md §15); ``generic_drain`` forces
+    the batch lane's reference drain loop (parity vs the fused loop)."""
     sim = Simulation(policy=policy, seed=seed, shuffle=mode,
                      columnar=columnar, assess_backend=assess_backend,
+                     net=net, racks=racks, net_opts=net_opts,
                      record_actions=True)
     if generic_drain:
         sim.shuffle.batches._drain_impl = sim.shuffle.batches._generic_drain
@@ -116,8 +120,9 @@ def run_traced(mode: str, policy: str, fault: Optional[Callable] = None,
 
 def check_invariants(sim: Simulation) -> None:
     """Mid-run consistency sweep: the per-dependency status partition,
-    the MOF registry vs a from-scratch recomputation, and (when the
-    columnar mirror is on) the incrementally-maintained columns."""
+    the MOF registry vs a from-scratch recomputation, the network
+    model's flow/link counters vs a live-transfer recount, and (when
+    the columnar mirror is on) the incrementally-maintained columns."""
     for job in sim.active_jobs.values():
         for t in job.reduces:
             for a in t.running_attempts():
@@ -128,11 +133,14 @@ def check_invariants(sim: Simulation) -> None:
                 nid for nid in t.output_nodes
                 if sim.cluster.nodes[nid].alive
                 and t.task_id in sim.cluster.nodes[nid].mofs
-                and nid not in sim._marked_failed}
+                and nid not in sim._marked_failed
+                and nid not in sim._link_down}
             got = {nid for nid in t.output_nodes if nid in live}
             assert got == expect, (t.task_id, got, expect)
     if sim.arrays is not None:
-        sim.verify_arrays()
+        sim.verify_arrays()  # includes the verify_network recount
+    else:
+        sim.verify_network()
 
 
 def assert_runs_equivalent(runs: Sequence[TraceResult],

@@ -53,7 +53,17 @@ def apply_script(sim, job, script):
         kind, idx, x, y = step
         nid = sim.cluster.node_ids[idx % len(sim.cluster.node_ids)]
         at = 10.0 + x * 200.0
-        if kind == "crash":
+        if kind == "degrade":
+            # rack-switch degradation (no-op on flat: no uplinks)
+            faults.rack_switch_degrade_at(
+                sim, idx, at, factor=0.02 + 0.2 * y,
+                duration=45.0 + y * 150.0)
+        elif kind == "cut":
+            faults.link_cut_at(sim, nid, at, duration=25.0 + y * 120.0)
+        elif kind == "part":
+            faults.rack_partition_at(sim, idx, at,
+                                     duration=20.0 + y * 90.0)
+        elif kind == "crash":
             faults.crash_node_at(sim, nid, at)
         elif kind == "crash_restore":
             faults.crash_node_at(sim, nid, at,
@@ -81,13 +91,13 @@ def script_fault(script):
 
 
 def run_matrix(script, *, policy, seed, gb=1.0, shuffles=SHUFFLES,
-               backends=BACKENDS, checks=None):
+               backends=BACKENDS, checks=None, net="flat", racks=0):
     runs, labels = [], []
     for backend in backends:
         for mode in shuffles:
             runs.append(run_traced(
                 mode, policy, script_fault(script), seed=seed, gb=gb,
-                assess_backend=backend,
+                assess_backend=backend, net=net, racks=racks,
                 checks=checks if mode == "batch" else None))
             labels.append(f"{mode}/{backend}")
     assert_runs_equivalent(runs, labels)
@@ -130,6 +140,60 @@ def test_pinned_scripts_equivalent_across_matrix(name, policy, seed,
                                                  script):
     run_matrix(script, policy=policy, seed=seed,
                checks=range(20, 700, 45))
+
+
+# Network-fault corpus (ISSUE 5 satellite): rack-switch degradation,
+# link cuts and whole-rack partitions — alone and composed with the
+# classic primitives — pinned across rescan/event/batch on both the
+# flat and the 4-rack topo network (the rack primitives are topology
+# no-ops or whole-cluster events on flat; equivalence must hold there
+# too). The job is 6 GB so pack-first placement spills across racks
+# (48 maps on n00–n05 = racks 0–1) — a 1 GB job co-locates inside one
+# rack and never crosses an uplink. The rack-degrade scenario runs
+# under BOTH speculation policies (acceptance gate).
+NET_GB = 6.0
+PINNED_NET = [
+    ("rack_degrade_yarn", "yarn", 2, [("degrade", 0, 0.2, 0.3)]),
+    ("rack_degrade_bino", "bino", 3,
+     [("degrade", 0, 0.25, 0.1), ("slow", 2, 0.3, 0.4)]),
+    ("link_cut_recovery", "bino", 1, [("cut", 1, 0.25, 0.5)]),
+    ("rack_partition_heal", "yarn", 4, [("part", 1, 0.3, 0.7)]),
+    ("cut_plus_mof", "bino", 2,
+     [("cut", 3, 0.3, 0.4), ("mof", 0, 0.85, 0.8)]),
+    ("cut_then_crash", "yarn", 3,
+     [("cut", 4, 0.2, 0.9), ("crash", 4, 0.5, 0.0)]),
+]
+
+
+@pytest.mark.parametrize("net,racks", [("flat", 0), ("topo", 4)],
+                         ids=["flat", "topo4"])
+@pytest.mark.parametrize("name,policy,seed,script",
+                         PINNED_NET, ids=[p[0] for p in PINNED_NET])
+def test_pinned_net_scripts_equivalent_across_matrix(name, policy, seed,
+                                                     script, net, racks):
+    run_matrix(script, policy=policy, seed=seed, gb=NET_GB, net=net,
+               racks=racks, backends=("numpy",),
+               checks=range(20, 700, 45))
+
+
+def test_pinned_net_scripts_probe_faults():
+    """The network corpus must actually bend behavior on the 4-rack
+    topology: a degraded uplink / cut link / partition shows up as a
+    JCT shift against the fault-free run, fetch failures, or recovery
+    launches."""
+    probed = 0
+    for name, policy, seed, script in PINNED_NET:
+        base = run_traced("batch", policy, None, seed=seed, gb=NET_GB,
+                          net="topo", racks=4)
+        r = run_traced("batch", policy, script_fault(script), seed=seed,
+                       gb=NET_GB, net="topo", racks=4)
+        jct_shift = abs(r.results[0].finish_time
+                        - base.results[0].finish_time) > 1.0
+        extra = sum(1 for launch in r.launches if launch[3])
+        fetch_fail = sum(res.n_fetch_failures for res in r.results)
+        if jct_shift or extra or fetch_fail:
+            probed += 1
+    assert probed >= (2 * len(PINNED_NET)) // 3, probed
 
 
 def test_pinned_scripts_probe_faults():
@@ -201,6 +265,30 @@ if HAVE_HYPOTHESIS:
         backend (the jax column rides the pinned corpus — per-example
         device sweeps would blow the fuzz budget)."""
         run_matrix(script, policy=policy, seed=seed, backends=("numpy",))
+
+    _net_step = st.tuples(
+        st.sampled_from(["degrade", "cut", "part", "crash", "slow",
+                         "mof"]),
+        st.integers(0, 9),            # victim node / rack / map index
+        st.floats(0.0, 1.0),          # time / progress fraction
+        st.floats(0.0, 1.0))          # magnitude / duration scale
+
+    _net_script = st.lists(_net_step, min_size=1, max_size=3)
+
+    @given(script=_net_script, seed=st.integers(0, 7),
+           policy=st.sampled_from(["yarn", "bino"]))
+    @settings(max_examples=_FUZZ_EXAMPLES, deadline=None)
+    @example(script=[("degrade", 0, 0.2, 0.1), ("cut", 3, 0.4, 0.5)],
+             seed=3, policy="bino")
+    @example(script=[("part", 1, 0.3, 0.6), ("mof", 0, 0.9, 1.0)],
+             seed=1, policy="yarn")
+    def test_random_net_scripts_equivalent_across_shuffles(script, seed,
+                                                           policy):
+        """Rack/link fault scripts on the 4-rack topo network: every
+        shuffle engine must agree transfer-for-transfer while uplinks
+        degrade, links cut and racks partition mid-shuffle."""
+        run_matrix(script, policy=policy, seed=seed, gb=NET_GB,
+                   net="topo", racks=4, backends=("numpy",))
 
     @given(script=_script, seed=st.integers(0, 7))
     @settings(max_examples=max(_FUZZ_EXAMPLES // 2, 4), deadline=None)
