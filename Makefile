@@ -4,8 +4,9 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fuzz test-net lint bench bench-perf bench-perf-full \
-	bench-accel bench-accel-full bench-net bench-net-full
+.PHONY: test test-fuzz test-net test-runtime lint bench bench-perf \
+	bench-perf-full bench-accel bench-accel-full bench-net bench-net-full \
+	bench-runtime bench-runtime-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -25,16 +26,28 @@ test-net:
 	REPRO_FUZZ_EXAMPLES=15 $(PY) -m pytest -q \
 		tests/test_fuzz_equivalence.py -k net
 
+# Chaos-hardened live-runtime lane (DESIGN.md §16): fault-free golden +
+# the pinned chaos matrix (fault scripts x recovery policies, exactly-
+# once bit-identity, differential columnar/reference decisions) on the
+# deterministic FakeClock, plus checkpoint crash-safety. Thread-based,
+# wall-clock-bounded; REPRO_CHAOS_EXAMPLES widens the randomized-script
+# budget (CI pins a small one).
+test-runtime:
+	REPRO_CHAOS_EXAMPLES=$(or $(REPRO_CHAOS_EXAMPLES),5) \
+		$(PY) -m pytest -q \
+		tests/test_runtime.py tests/test_data_checkpoint.py
+
 # Ruff config lives in pyproject.toml ([tool.ruff]). Scope = the layers
 # the shuffle refactor owns; widen as seed modules are modernized.
 # Degrades to a no-op warning where ruff isn't installed (the baked
 # container has no network; CI installs it).
 LINT_PATHS = src/repro/sim src/repro/net src/repro/core/arrays.py \
-	src/repro/accel \
-	benchmarks examples/cluster_sim.py tests/test_shuffle.py \
+	src/repro/accel src/repro/runtime \
+	benchmarks examples/cluster_sim.py examples/serve.py \
+	tests/test_shuffle.py \
 	tests/test_columnar.py tests/test_accel.py tests/test_cluster_index.py \
 	tests/test_engine.py tests/test_fuzz_equivalence.py tests/test_net.py \
-	tests/conftest.py
+	tests/test_runtime.py tests/conftest.py
 
 lint:
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
@@ -72,3 +85,11 @@ bench-net:
 
 bench-net-full:
 	$(PY) -m benchmarks.run --only perf_net
+
+# Live-runtime load harness: fault-free p50/p99 step latency + recovery
+# time for one crash script under both policies (gate: bino < restart).
+bench-runtime:
+	$(PY) -m benchmarks.run --only perf_runtime --quick
+
+bench-runtime-full:
+	$(PY) -m benchmarks.run --only perf_runtime

@@ -1,0 +1,177 @@
+"""Live-runtime load harness (ISSUE 6; DESIGN.md §16.8).
+
+Measures the chaos-hardened coordinator end-to-end on real threads and a
+real clock: p50/p99 committed-step latency fault-free, then the recovery
+cost of one pinned crash script under each recovery policy. The fault is
+released *after* the JIT warm-up steps (``ChaosController(defer_arm=
+True)``), so the crash lands at a known instant inside the measured
+window and the recovery metric is not polluted by compile time.
+
+Metrics (merged into ``BENCH_scale.json`` under ``perf_runtime``):
+
+- ``p50_ms`` / ``p99_ms`` — fault-free committed-step latency;
+- ``recovery_s`` per policy — the disturbed step's excess wall over the
+  fault-free p50 (detection + re-execution, everything the fault cost);
+- the correctness rider: every policy's final parameters must be
+  BIT-identical to the fault-free run's (the exactly-once invariant,
+  measured here under load, pinned down in tests/test_runtime.py).
+
+Acceptance gate (asserted, not just printed): under the crash script,
+bino's recovery beats gang-restart — bino pays adaptive detection plus
+re-execution of only the dead host's *missing* microbatches; restart
+pays its conservative silence timeout plus a full step re-run.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.perf_runtime [--quick]
+    PYTHONPATH=src python -m benchmarks.run --only perf_runtime --quick
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, bench_json_update, bench_quick
+from repro.configs import get_config, reduced_config
+from repro.runtime import ChaosController, RuntimeConfig, TrainerRuntime
+from repro.train.loop import TrainConfig
+
+HOSTS = 4
+MICROBATCHES = 4
+COMPUTE_DELAY = 0.08          # per-microbatch work floor: makes the
+                              # re-execution cost visible above JIT noise
+WARMUP_STEPS = 2
+SEQ_LEN = 32
+
+# One crash script (the fault vocabulary shared with sim/faults.py and
+# the test corpus): permanent loss of host index 1, fired ~0.1 s after
+# release — i.e. inside the first measured step.
+CRASH_SCRIPT = [("crash", 1, 0.02, 0.0)]
+CHAOS_HORIZON = 5.0
+
+# Detection knobs, policy-faithful: restart keeps its conservative
+# silence timeout; bino detects via Eq. 4 assessment + coverage-hole
+# repair. This asymmetry IS the paper's claim being measured.
+RESTART_TIMEOUT = 2.5
+REPAIR_TIMEOUT = 0.6
+
+
+def _measure(policy: str, script, n_meas: int,
+             seed: int = 0) -> Tuple[List[float], Dict, np.ndarray]:
+    """Run WARMUP_STEPS fault-free, release the script, run ``n_meas``
+    measured steps. Returns (measured walls, counters, final params)."""
+    cfg = reduced_config(get_config("qwen1.5-0.5b"))
+    chaos = (ChaosController(script, horizon=CHAOS_HORIZON, seed=seed,
+                             defer_arm=True)
+             if script is not None else None)
+    rt = RuntimeConfig(
+        n_hosts=HOSTS, microbatches_per_shard=MICROBATCHES,
+        recovery=policy, compute_delay=COMPUTE_DELAY,
+        restart_timeout=RESTART_TIMEOUT, repair_timeout=REPAIR_TIMEOUT)
+    t = TrainerRuntime(cfg, TrainConfig(), rt, seq_len=SEQ_LEN,
+                       per_shard_batch=2, seed=seed, chaos=chaos)
+    try:
+        reports = []
+        for i in range(WARMUP_STEPS):
+            reports.append(t.coord.run_step(i))
+        if chaos is not None:
+            chaos.release()
+        for i in range(WARMUP_STEPS, WARMUP_STEPS + n_meas):
+            reports.append(t.coord.run_step(i))
+        meas = [r.wall_s for r in reports[WARMUP_STEPS:]]
+        counters = {
+            "recoveries": sum(len(r.recoveries) for r in reports),
+            "restarts": sum(r.restarts for r in reports),
+            "wedges": sum(r.wedges for r in reports),
+            "mb_executed": sum(r.mb_executed for r in reports),
+            "mb_needed": sum(r.mb_needed for r in reports),
+            "resends": t.coord.resend_count,
+        }
+        vec = np.concatenate([np.asarray(l, np.float32).ravel()
+                              for l in jax.tree.leaves(t.state["params"])])
+        return meas, counters, vec
+    finally:
+        t.shutdown()
+
+
+def run() -> List[Row]:
+    quick = bench_quick()
+    n_meas = 4 if quick else 8
+    rows: List[Row] = []
+
+    base_walls, base_ctr, base_vec = _measure("bino", None, n_meas)
+    p50 = float(np.percentile(base_walls, 50))
+    p99 = float(np.percentile(base_walls, 99))
+    rows.append(("perf_runtime/p50_ms", p50 * 1e3,
+                 f"fault-free committed-step latency over {n_meas} steps"))
+    rows.append(("perf_runtime/p99_ms", p99 * 1e3,
+                 f"hosts={HOSTS} mb/shard={MICROBATCHES}"))
+
+    policies: Dict[str, Dict] = {}
+    for policy in ("bino", "restart"):
+        walls, ctr, vec = _measure(policy, CRASH_SCRIPT, n_meas)
+        recovery = max(walls) - p50
+        exact = bool(np.array_equal(base_vec, vec))
+        policies[policy] = {
+            "walls_s": [round(w, 4) for w in walls],
+            "recovery_s": round(recovery, 4),
+            "bit_identical": exact,
+            **ctr,
+        }
+        rows.append((f"perf_runtime/{policy}_recovery_s", recovery,
+                     f"recoveries={ctr['recoveries']} "
+                     f"restarts={ctr['restarts']} "
+                     f"waste_mb={ctr['mb_executed'] - ctr['mb_needed']}"))
+        if not exact:
+            raise AssertionError(
+                f"{policy}: faulted params diverged from fault-free "
+                f"(exactly-once invariant broken under load)")
+    b, r = policies["bino"]["recovery_s"], policies["restart"]["recovery_s"]
+    rows.append(("perf_runtime/restart_over_bino_recovery",
+                 r / max(b, 1e-9),
+                 f"bino={b:.2f}s restart={r:.2f}s (gate: bino < restart)"))
+    if b >= r:
+        raise AssertionError(
+            f"recovery gate failed: bino {b:.2f}s >= restart {r:.2f}s "
+            f"under crash script {CRASH_SCRIPT}")
+
+    payload = {
+        "hosts": HOSTS,
+        "microbatches_per_shard": MICROBATCHES,
+        "compute_delay_s": COMPUTE_DELAY,
+        "warmup_steps": WARMUP_STEPS,
+        "measured_steps": n_meas,
+        "crash_script": [list(s) for s in CRASH_SCRIPT],
+        "restart_timeout_s": RESTART_TIMEOUT,
+        "repair_timeout_s": REPAIR_TIMEOUT,
+        "baseline": {"walls_s": [round(w, 4) for w in base_walls],
+                     "p50_ms": round(p50 * 1e3, 2),
+                     "p99_ms": round(p99 * 1e3, 2),
+                     **base_ctr},
+        "policies": policies,
+        "gate": {"bino_recovery_s": b, "restart_recovery_s": r,
+                 "ok": b < r},
+    }
+    path = bench_json_update("perf_runtime", payload,
+                             mode="quick" if quick else "full")
+    rows.append(("perf_runtime/json", 1.0, str(path)))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer measured steps")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.quick and not args.full:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+    for name, value, derived in run():
+        print(f"{name},{value:.4g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

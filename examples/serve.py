@@ -1,70 +1,107 @@
-"""Batched serving example: continuous-batching decode over a prefill-built
-KV/SSM cache, with per-request lengths and throughput reporting.
+"""Chaos-hardened runtime demo: drive the live coordinator under a
+declarative fault script and validate every committed model update.
 
-    PYTHONPATH=src python examples/serve.py --arch mamba2-2.7b --requests 8
+Runs the same control plane as ``examples/train_lm.py`` but against the
+chaos plane (DESIGN.md §16): pick a recovery policy, pick a fault script
+(a named pinned script or an inline ``kind:victim:x:y,...`` spec — the
+same vocabulary ``sim/faults.py`` interprets), and the process exits
+non-zero if any committed update is corrupted (non-finite parameters or
+loss) or a step wedges past its retries.
+
+    PYTHONPATH=src python examples/serve.py --policy bino --chaos crash
+    PYTHONPATH=src python examples/serve.py --policy restart \
+        --chaos "drop:1:0.1:0.5,dup:0:0.05:0.9" --steps 6
+
+Exit codes: 0 ok, 2 corrupted model update, 3 wedged (retries exhausted).
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
-from repro.models import model as MODEL
-from repro.train.loop import TrainConfig, make_serve_step
+from repro.runtime import (
+    ChaosController,
+    RuntimeConfig,
+    StepWedged,
+    TrainerRuntime,
+    parse_script,
+)
+from repro.runtime.chaos import PINNED_SCRIPTS
+from repro.train.loop import TrainConfig
 
 
-def main() -> None:
+def _update_corrupted(trainer) -> bool:
+    for leaf in jax.tree.leaves(trainer.state["params"]):
+        if not np.all(np.isfinite(np.asarray(leaf))):
+            return True
+    return False
+
+
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b", choices=ARCH_IDS)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--hosts", type=int, default=4)
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--policy", default="bino", choices=["bino", "restart"])
+    ap.add_argument("--chaos", default=None, metavar="SCRIPT",
+                    help="named pinned script (%s) or inline "
+                         "kind:victim:x:y[,...]" % ", ".join(PINNED_SCRIPTS))
+    ap.add_argument("--horizon", type=float, default=20.0,
+                    help="chaos horizon in seconds (x/y map into it)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
-    if cfg.is_encoder_only():
-        raise SystemExit(f"{args.arch} is encoder-only: no decode path")
-    tc = TrainConfig()
-    b, p, g = args.requests, args.prompt_len, args.gen_len
-    max_len = p + g
-
-    key = jax.random.PRNGKey(0)
-    params = MODEL.init_params(cfg, key)
-    prompts = jax.random.randint(key, (b, p), 0, cfg.vocab_size, jnp.int32)
-    batch = {"tokens": prompts}
-    if cfg.family == "vlm":
-        batch = {"tokens": prompts,
-                 "feats": jnp.zeros((b, cfg.frontend.n_prefix,
-                                     cfg.frontend.feature_dim), jnp.float32)}
-
-    t0 = time.time()
-    logits, cache = MODEL.prefill(cfg, params, batch, max_len=max_len)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    print(f"prefill: {b} requests × {p} tokens in {t_prefill:.2f}s "
-          f"(incl. compile)")
-
-    serve = jax.jit(make_serve_step(cfg, tc))
-    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    pos = jnp.full((b,), p, jnp.int32)
-    out = [np.asarray(tokens)]
-    t0 = time.time()
-    for i in range(g - 1):
-        logits, cache = serve(params, cache, tokens, pos)
-        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        pos = pos + 1
-        out.append(np.asarray(tokens))
-    jax.block_until_ready(tokens)
-    dt = time.time() - t0
-    print(f"decode: {b}×{g - 1} tokens in {dt:.2f}s "
-          f"→ {b * (g - 1) / dt:.1f} tok/s (batched, incl. compile)")
-    gen = np.stack(out, axis=1)
-    print("sample generation (token ids):", gen[0, :16].tolist())
+    chaos = (ChaosController(parse_script(args.chaos),
+                             horizon=args.horizon, seed=args.seed)
+             if args.chaos else None)
+    rt = RuntimeConfig(
+        n_hosts=args.hosts, microbatches_per_shard=args.microbatches,
+        recovery=args.policy, compute_delay=0.02,
+        repair_timeout=1.0, restart_timeout=3.0)
+    trainer = TrainerRuntime(cfg, TrainConfig(), rt,
+                             seq_len=args.seq_len, per_shard_batch=2,
+                             seed=args.seed, chaos=chaos)
+    print(f"policy={args.policy} hosts={args.hosts} "
+          f"chaos={args.chaos or 'none'}")
+    try:
+        try:
+            reports = trainer.run(args.steps)
+        except StepWedged as e:
+            print(f"FATAL: step {e.step} wedged past retry limit",
+                  file=sys.stderr)
+            return 3
+        bad = False
+        for r in reports:
+            loss = r.metrics.get("loss", float("nan"))
+            line = (f"step {r.step:3d}  loss {loss:7.3f}  "
+                    f"wall {r.wall_s:6.2f}s  mb {r.mb_executed}/{r.mb_needed}")
+            if r.restarts:
+                line += f"  restarts={r.restarts}"
+            if r.wedges:
+                line += f"  wedges={r.wedges}"
+            for rec in r.recoveries:
+                line += f"\n      recovery: {rec}"
+            print(line)
+            if not np.isfinite(loss):
+                bad = True
+        if chaos is not None:
+            active = {k: v for k, v in chaos.stats.items() if v}
+            print(f"chaos stats: {active or 'no events fired'}")
+        if bad or _update_corrupted(trainer):
+            print("FATAL: corrupted model update detected", file=sys.stderr)
+            return 2
+        print("ok: all committed updates finite")
+        return 0
+    finally:
+        trainer.shutdown()
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

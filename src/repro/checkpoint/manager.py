@@ -38,12 +38,37 @@ def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
     return out
 
 
+def _fsync_path(path: str) -> None:
+    """Best-effort fsync of a file or directory (directory fsync pins the
+    rename/creation in the parent's metadata — required for the commit to
+    survive power loss, not just process death)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir-open
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - fs without fsync support
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_pytree(dirpath: str, tree: Any, *, step: int,
                 metadata: Optional[Dict[str, Any]] = None,
-                tag: str = "primary") -> str:
+                tag: str = "primary", fsync: bool = True) -> str:
     """Write one checkpoint dir atomically; returns the committed path.
     If another writer already committed this step, keeps ours as a shadow
-    copy (``step_N.shadow-<tag>``) — both outputs retained (§III.B)."""
+    copy (``step_N.shadow-<tag>``) — both outputs retained (§III.B).
+
+    Crash-safe write discipline (DESIGN.md §16.7): every leaf and the
+    manifest are flushed+fsynced inside the tmp dir, the tmp dir itself is
+    fsynced, THEN the atomic rename commits, then the parent dir is
+    fsynced. A writer dying (or machine losing power) at any point leaves
+    either the complete previous state or a ``.tmp-`` orphan that
+    ``CheckpointManager`` sweeps on startup — never a torn checkpoint.
+    The manifest is written last, so its presence certifies every leaf.
+    """
     final = os.path.join(dirpath, f"step_{step:09d}")
     tmp = final + f".tmp-{tag}"
     os.makedirs(tmp, exist_ok=True)
@@ -51,19 +76,32 @@ def save_pytree(dirpath: str, tree: Any, *, step: int,
     for i, (key, leaf) in enumerate(_leaf_paths(tree)):
         fname = f"leaf_{i:05d}.npy"
         names[fname] = key
-        np.save(os.path.join(tmp, fname), np.asarray(leaf))
+        fpath = os.path.join(tmp, fname)
+        with open(fpath, "wb") as f:
+            np.save(f, np.asarray(leaf))
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
     manifest = {"step": step, "leaves": names, "tag": tag,
                 "metadata": metadata or {}}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
+    if fsync:
+        _fsync_path(tmp)
     try:
         os.rename(tmp, final)
-        return final
+        committed = final
     except OSError:
         shadow = final + f".shadow-{tag}"
         shutil.rmtree(shadow, ignore_errors=True)
         os.rename(tmp, shadow)
-        return shadow
+        committed = shadow
+    if fsync:
+        _fsync_path(dirpath)
+    return committed
 
 
 def restore_pytree(dirpath: str, like: Any, *, step: Optional[int] = None
@@ -100,6 +138,17 @@ class CheckpointManager:
         os.makedirs(dirpath, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._sweep_stale_tmps()
+
+    def _sweep_stale_tmps(self) -> None:
+        """Startup recovery: a ``.tmp-`` dir is a writer that died mid-save
+        (possibly torn — no manifest, partial leaves); it can never be
+        restored from, so it is removed. Shadow copies are committed
+        (manifest-complete) and stay until the normal commit-barrier GC."""
+        for d in os.listdir(self.dir):
+            if ".tmp-" in d:
+                shutil.rmtree(os.path.join(self.dir, d),
+                              ignore_errors=True)
 
     # -- writing --------------------------------------------------------
     def save(self, tree: Any, step: int, *, tag: str = "primary",

@@ -1,10 +1,28 @@
 """Live training runtime: binocular speculation driving a JAX train loop
 over thread-simulated multi-host workers (real control plane — heartbeats,
 progress logs, speculative reassignment, rollback — with the model math
-running on the container's CPU device)."""
-from repro.runtime.coordinator import Coordinator, RuntimeConfig, StepReport
-from repro.runtime.hosts import GradMessage, HostDaemon, ProgressMessage, WorkItem
+running on the container's CPU device). Chaos-hardened (DESIGN.md §16):
+fault scripts shared with the simulator, at-least-once delivery with
+retry/backoff, coverage-based hole repair, quorum rollback resume, and an
+injectable clock for deterministic failure-timeline tests."""
+from repro.runtime.chaos import PINNED_SCRIPTS, ChaosController, parse_script
+from repro.runtime.clock import Clock, FakeClock, SystemClock
+from repro.runtime.coordinator import (
+    Coordinator,
+    RuntimeConfig,
+    StepReport,
+    StepWedged,
+)
+from repro.runtime.hosts import (
+    AckMessage,
+    GradMessage,
+    HostDaemon,
+    ProgressMessage,
+    WorkItem,
+)
 from repro.runtime.trainer import TrainerRuntime
 
-__all__ = ["Coordinator", "GradMessage", "HostDaemon", "ProgressMessage",
-           "RuntimeConfig", "StepReport", "TrainerRuntime", "WorkItem"]
+__all__ = ["AckMessage", "ChaosController", "Clock", "Coordinator",
+           "FakeClock", "GradMessage", "HostDaemon", "PINNED_SCRIPTS",
+           "ProgressMessage", "RuntimeConfig", "StepReport", "StepWedged",
+           "SystemClock", "TrainerRuntime", "WorkItem", "parse_script"]

@@ -3,9 +3,18 @@
 Each ``HostDaemon`` executes assigned *map work* — microbatch gradient
 production for a data shard — and streams results + progress reports to
 the coordinator. Fault injection mirrors the simulator's vocabulary:
-``freeze()`` (crash: heartbeats and compute stop), ``slow(factor)``
+``freeze()`` (crash: heartbeats and compute stop), ``hang()`` (the liar
+node: compute stops but heartbeats keep flowing), ``slow(factor)``
 (straggler), ``mute(duration)`` (transient network outage: compute
-continues, heartbeats vanish).
+continues, heartbeats vanish). Message-plane faults (drop / duplicate /
+delay / reorder on the way to the coordinator) are injected one layer
+up, by ``repro.runtime.chaos`` wrapping the out-queue and the heartbeat
+callback (DESIGN.md §16.3).
+
+Delivery is at-least-once: the coordinator redelivers unacknowledged
+``WorkItem``s with backoff, so the daemon acks every item and keeps a
+seen-set to make redelivery idempotent (§16.5). All time flows through
+an injected :class:`repro.runtime.clock.Clock`.
 
 The JAX computation itself runs in-process (one CPU device stands in for
 every host's chip); what is REAL here is the control plane the paper is
@@ -20,6 +29,7 @@ import time
 from typing import Any, Callable, Dict, Optional
 
 from repro.data.pipeline import DataState
+from repro.runtime.clock import Clock, SystemClock
 
 
 @dataclasses.dataclass
@@ -64,12 +74,25 @@ class ProgressMessage:
     done: bool = False
 
 
+@dataclasses.dataclass
+class AckMessage:
+    """Work-item receipt: the coordinator stops redelivering on this.
+    Acks themselves ride the (chaos-faultable) out-queue, so a dropped
+    ack triggers a redelivery the seen-set then swallows — idempotent in
+    both directions."""
+
+    step: int
+    attempt_id: str
+    host_id: str
+
+
 class HostDaemon(threading.Thread):
     def __init__(self, host_id: str, *, grad_fn: Callable,
                  batch_fn: Callable[[DataState], Dict[str, Any]],
-                 out_queue: "queue.Queue", heartbeat: Callable[[str, float], None],
+                 out_queue, heartbeat: Callable[[str, float], None],
                  heartbeat_period: float = 0.05,
-                 compute_delay: float = 0.0):
+                 compute_delay: float = 0.0,
+                 clock: Optional[Clock] = None):
         super().__init__(daemon=True, name=f"host-{host_id}")
         self.host_id = host_id
         self.grad_fn = grad_fn
@@ -77,6 +100,7 @@ class HostDaemon(threading.Thread):
         self.out = out_queue
         self.heartbeat_cb = heartbeat
         self.heartbeat_period = heartbeat_period
+        self.clock = clock if clock is not None else SystemClock()
         # artificial per-microbatch delay: makes tiny test models behave
         # like real work so stragglers/failures have visible timelines
         self.compute_delay = compute_delay
@@ -85,10 +109,14 @@ class HostDaemon(threading.Thread):
         self._params_lock = threading.Lock()
         # fault state
         self._frozen = threading.Event()
+        self._hung = threading.Event()
         self._speed = 1.0
         self._mute_until = 0.0
-        self._stop = threading.Event()
+        self._halt = threading.Event()
         self._cancelled: set = set()
+        # at-least-once delivery: attempt ids already accepted (redelivered
+        # work items are re-acked but not re-executed)
+        self._seen: set = set()
 
     # -- control ---------------------------------------------------------
     def set_params(self, params) -> None:
@@ -102,7 +130,7 @@ class HostDaemon(threading.Thread):
         self._cancelled.add(attempt_id)
 
     def shutdown(self) -> None:
-        self._stop.set()
+        self._halt.set()
         self._work.put(None)
 
     # -- fault injection ---------------------------------------------------
@@ -113,13 +141,22 @@ class HostDaemon(threading.Thread):
     def unfreeze(self) -> None:
         self._frozen.clear()
 
+    def hang(self) -> None:
+        """Livelock: compute stops but heartbeats keep flowing — the node
+        that looks healthy to Eq. 4 and can only be caught by the
+        progress-based assessments (Eq. 1–3 / tail-straggler)."""
+        self._hung.set()
+
+    def unhang(self) -> None:
+        self._hung.clear()
+
     def slow(self, factor: float) -> None:
         """Straggler: microbatches take ``factor×`` longer."""
         self._speed = max(factor, 1e-3)
 
     def mute(self, duration: float) -> None:
         """Transient outage: heartbeats vanish, compute continues."""
-        self._mute_until = time.time() + duration
+        self._mute_until = self.clock.time() + duration
 
     @property
     def frozen(self) -> bool:
@@ -129,33 +166,45 @@ class HostDaemon(threading.Thread):
     def _hb_loop(self) -> None:
         """NodeManager heartbeat thread: independent of task work (a busy
         or compiling host still heartbeats — only crash/outage silences)."""
-        while not self._stop.is_set():
-            now = time.time()
+        while not self._halt.is_set():
+            now = self.clock.time()
             if not self._frozen.is_set() and now >= self._mute_until:
                 self.heartbeat_cb(self.host_id, now)
-            time.sleep(self.heartbeat_period)
+            self.clock.sleep(self.heartbeat_period)
 
     def run(self) -> None:
         threading.Thread(target=self._hb_loop, daemon=True,
                          name=f"hb-{self.host_id}").start()
-        while not self._stop.is_set():
+        while not self._halt.is_set():
             try:
                 item = self._work.get(timeout=self.heartbeat_period)
             except queue.Empty:
                 continue
             if item is None:
                 return
-            self._execute(item)
+            # Ack on receipt; a redelivered item is acked again but not
+            # re-executed (exactly-once execution under at-least-once
+            # delivery).
+            first = item.attempt_id not in self._seen
+            self._seen.add(item.attempt_id)
+            self.out.put(AckMessage(step=item.step,
+                                    attempt_id=item.attempt_id,
+                                    host_id=self.host_id))
+            if first:
+                self._execute(item)
+
+    def _blocked(self) -> bool:
+        return self._frozen.is_set() or self._hung.is_set()
 
     def _execute(self, item: WorkItem) -> None:
         state = item.data_state
         for mb in range(item.mb_start, item.mb_end):
-            # crash = stop mid-task, silently
-            while self._frozen.is_set():
-                if self._stop.is_set():
+            # crash/hang = stop making progress, silently
+            while self._blocked():
+                if self._halt.is_set():
                     return
-                time.sleep(0.01)
-            if item.attempt_id in self._cancelled or self._stop.is_set():
+                time.sleep(0.002)
+            if item.attempt_id in self._cancelled or self._halt.is_set():
                 return
             batch = self.batch_fn(state)
             with self._params_lock:
@@ -163,9 +212,19 @@ class HostDaemon(threading.Thread):
             grads, metrics = self.grad_fn(params, batch)
             delay = self.compute_delay * self._speed
             if delay > 0:
-                time.sleep(delay)
+                self.clock.sleep(delay)
             if self._frozen.is_set():
                 return  # crashed during compute: result lost with the host
+            if self._hung.is_set():
+                continue_at = mb  # hung mid-compute: result withheld
+                while self._hung.is_set() and not self._frozen.is_set():
+                    if self._halt.is_set() \
+                            or item.attempt_id in self._cancelled:
+                        return
+                    time.sleep(0.002)
+                if self._frozen.is_set():
+                    return
+                del continue_at
             state = state.advance()
             self.out.put(GradMessage(
                 step=item.step, task_id=item.task_id,

@@ -1,9 +1,17 @@
 """TrainerRuntime: model + data + optimizer wired into the coordinator.
 
-The end-to-end driver behind ``examples/train_lm.py`` and the runtime
-integration tests: trains any registry architecture (reduced or full
-config) under injected host failures/stragglers, with either recovery
-strategy, checkpoint/restore, and a per-step report stream.
+The end-to-end driver behind ``examples/train_lm.py``, ``examples/
+serve.py`` and the runtime integration tests: trains any registry
+architecture (reduced or full config) under injected host failures /
+stragglers / chaos scripts, with either recovery strategy, checkpoint/
+restore, and a per-step report stream.
+
+Two rollback tiers (DESIGN.md §16.7):
+- in-memory — the coordinator retries a wedged step from its pre-step
+  commit point (model state only mutates on step success);
+- durable  — when a step exhausts its retries (:class:`StepWedged`),
+  ``run`` restores the last crash-safe checkpoint and re-runs from the
+  restored step, dropping reports from rolled-back steps.
 """
 from __future__ import annotations
 
@@ -19,14 +27,21 @@ from repro.configs.base import ModelConfig
 from repro.data.pipeline import DataState, ShardedTokenPipeline, TokenDataset
 from repro.models import model as MODEL
 from repro.optim.adamw import adamw_init, adamw_update
-from repro.runtime.coordinator import Coordinator, RuntimeConfig, StepReport
+from repro.runtime.clock import Clock
+from repro.runtime.coordinator import (
+    Coordinator,
+    RuntimeConfig,
+    StepReport,
+    StepWedged,
+)
 from repro.train.loop import TrainConfig, cross_entropy_loss
 
 
 class TrainerRuntime:
     def __init__(self, cfg: ModelConfig, tc: TrainConfig,
                  rt: RuntimeConfig, *, seq_len: int = 128,
-                 per_shard_batch: int = 2, seed: int = 0):
+                 per_shard_batch: int = 2, seed: int = 0,
+                 clock: Optional[Clock] = None, chaos=None):
         self.cfg = cfg
         self.tc = tc
         self.rt = rt
@@ -68,7 +83,8 @@ class TrainerRuntime:
                   for s in range(rt.n_hosts)]
         self.coord = Coordinator(
             rt, grad_fn=grad_fn, apply_fn=apply_fn, batch_fn=batch_fn,
-            init_state=init_state, datastates=shards)
+            init_state=init_state, datastates=shards,
+            clock=clock, chaos=chaos)
         self.ckpt = (CheckpointManager(rt.checkpoint_dir)
                      if rt.checkpoint_dir else None)
         self._start_step = 0
@@ -89,13 +105,29 @@ class TrainerRuntime:
         return step
 
     def run(self, n_steps: int,
-            on_step: Optional[Callable[[int, "TrainerRuntime"], None]] = None
-            ) -> List[StepReport]:
-        reports = []
-        for i in range(self._start_step, self._start_step + n_steps):
+            on_step: Optional[Callable[[int, "TrainerRuntime"], None]] = None,
+            max_durable_rollbacks: int = 2) -> List[StepReport]:
+        reports: List[StepReport] = []
+        target = self._start_step + n_steps
+        i = self._start_step
+        rollbacks = 0
+        while i < target:
             if on_step is not None:
                 on_step(i, self)
-            rep = self.coord.run_step(i)
+            try:
+                rep = self.coord.run_step(i)
+            except StepWedged:
+                # durable rollback: restore the last crash-safe checkpoint
+                # and re-run from there (DESIGN.md §16.7)
+                if (self.ckpt is None or self.ckpt.latest_step() is None
+                        or rollbacks >= max_durable_rollbacks):
+                    raise
+                rollbacks += 1
+                self.ckpt.wait()
+                step = self.restore()
+                reports = [r for r in reports if r.step < step]
+                i = step
+                continue
             reports.append(rep)
             if self.ckpt is not None and self.rt.checkpoint_every and \
                     (i + 1) % self.rt.checkpoint_every == 0:
@@ -104,6 +136,7 @@ class TrainerRuntime:
                     metadata={"datastates": [
                         dataclasses.asdict(d)
                         for d in self.coord.datastates]})
+            i += 1
         if self.ckpt is not None:
             self.ckpt.wait()
         return reports

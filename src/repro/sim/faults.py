@@ -14,6 +14,71 @@ from repro.core.types import TaskState
 from repro.sim.mapreduce import SimJob, Simulation
 
 
+# ---------------------------------------------------------------------------
+# Declarative fault scripts (DESIGN.md §16.4): one script, two worlds.
+#
+# A script is a list of plain tuples ``(kind, idx, x, y)`` — printable,
+# picklable, and identical across every engine of the differential fuzz
+# matrix AND across the sim/runtime boundary: ``apply_script`` interprets
+# a script against the discrete-event simulator, while
+# ``repro.runtime.chaos.ChaosController`` interprets the *same* tuples
+# against live coordinator/host threads. ``idx`` selects the victim node
+# (modulo cluster size) or rack/map index, ``x`` is a time or progress
+# fraction in [0, 1], ``y`` a magnitude/duration scale in [0, 1].
+#
+# Runtime-only kinds (message-plane faults the discrete-event simulator
+# has no wire for) degrade to their nearest sim-visible equivalent — the
+# equivalence waivers are tabulated in DESIGN.md §16.4:
+#   drop     -> link cut (messages lost both ways)
+#   dup      -> no-op    (sim event delivery is exactly-once by construction)
+#   reorder  -> no-op    (sim events are totally ordered by the calendar)
+#   delay_hb -> heartbeat outage (late heartbeats look silent, then resume)
+#   hang     -> slowdown to ~0 (compute stops, heartbeats continue)
+# ---------------------------------------------------------------------------
+SCRIPT_KINDS = ("crash", "crash_restore", "slow", "hb", "mof", "disk",
+                "degrade", "cut", "part",
+                # runtime-first kinds with sim waivers:
+                "drop", "dup", "reorder", "delay_hb", "hang")
+
+
+def apply_script(sim: Simulation, job: Optional[SimJob], script) -> None:
+    """Arm every step of a declarative fault script against ``sim``."""
+    for step in script:
+        kind, idx, x, y = step
+        nid = sim.cluster.node_ids[idx % len(sim.cluster.node_ids)]
+        at = 10.0 + x * 200.0
+        if kind == "degrade":
+            # rack-switch degradation (no-op on flat: no uplinks)
+            rack_switch_degrade_at(sim, idx, at, factor=0.02 + 0.2 * y,
+                                   duration=45.0 + y * 150.0)
+        elif kind in ("cut", "drop"):
+            link_cut_at(sim, nid, at, duration=25.0 + y * 120.0)
+        elif kind == "part":
+            rack_partition_at(sim, idx, at, duration=20.0 + y * 90.0)
+        elif kind == "crash":
+            crash_node_at(sim, nid, at)
+        elif kind == "crash_restore":
+            crash_node_at(sim, nid, at, restore_after=20.0 + y * 100.0)
+        elif kind == "slow":
+            slow_node_at(sim, nid, at, factor=0.02 + 0.06 * y,
+                         duration=30.0 + y * 150.0)
+        elif kind == "hang":
+            # compute stops while heartbeats continue: the liar node
+            slow_node_at(sim, nid, at, factor=1e-3,
+                         duration=30.0 + y * 150.0)
+        elif kind in ("hb", "delay_hb"):
+            heartbeat_outage_at(sim, nid, at, duration=15.0 + y * 60.0)
+        elif kind == "mof":
+            lose_mof_at_map_progress(sim, job, max(x, 0.05),
+                                     max_stragglers=2 + int(y * 14))
+        elif kind == "disk":
+            disk_exception_on_map(sim, job, idx % 8, at_spill=1 + int(y * 3))
+        elif kind in ("dup", "reorder"):
+            pass  # exactly-once / totally-ordered by construction (§16.4)
+        else:  # pragma: no cover - strategy bug guard
+            raise ValueError(kind)
+
+
 def crash_node_at(sim: Simulation, node_id: str, at: float,
                   restore_after: Optional[float] = None) -> None:
     sim.engine.at(at, sim.crash_node, node_id)

@@ -116,3 +116,36 @@ def test_async_save_surfaces_and_restores(tmp_path):
 def test_restore_empty_dir_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         restore_pytree(str(tmp_path), _tree())
+
+
+def test_stale_tmp_swept_on_startup(tmp_path):
+    """A writer that died mid-save leaves a torn ``.tmp-`` dir; the next
+    CheckpointManager must sweep it and never restore from it."""
+    t = _tree()
+    save_pytree(str(tmp_path), t, step=3)
+    torn = os.path.join(str(tmp_path), "step_000000004.tmp-primary")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "leaf_00000.npy"), "wb") as f:
+        f.write(b"\x93NUMPY partial garbage")  # no manifest, torn leaf
+    mgr = CheckpointManager(str(tmp_path))
+    assert not os.path.isdir(torn)
+    assert mgr.latest_step() == 3
+    restored, step, _ = mgr.restore(t)
+    assert step == 3
+    np.testing.assert_array_equal(restored["w"], t["w"])
+
+
+def test_crash_before_rename_leaves_previous_intact(tmp_path):
+    """Kill the writer between leaf writes and the atomic rename: the
+    previously committed step must restore bit-exact (torn dirs are
+    invisible to latest_step)."""
+    t = _tree()
+    save_pytree(str(tmp_path), t, step=1)
+    # simulate the dying writer: everything written, rename never ran
+    tmp = os.path.join(str(tmp_path), "step_000000002.tmp-primary")
+    os.makedirs(tmp)
+    np.save(os.path.join(tmp, "leaf_00000.npy"), t["w"])
+    mgr = CheckpointManager(str(tmp_path))  # sweeps the orphan
+    restored, step, _ = mgr.restore(t)
+    assert step == 1
+    np.testing.assert_array_equal(restored["w"], t["w"])

@@ -46,42 +46,11 @@ _FUZZ_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "8"))
 
 # ---------------------------------------------------------------------------
 # Fault-script interpretation: every step is a plain tuple, so scripts
-# are printable, picklable, and identical across the matrix runs.
+# are printable, picklable, and identical across the matrix runs — and
+# since ISSUE 6 the interpreter lives in sim/faults.py, shared with the
+# live-runtime chaos layer (one script, two worlds; DESIGN.md §16.4).
 # ---------------------------------------------------------------------------
-def apply_script(sim, job, script):
-    for step in script:
-        kind, idx, x, y = step
-        nid = sim.cluster.node_ids[idx % len(sim.cluster.node_ids)]
-        at = 10.0 + x * 200.0
-        if kind == "degrade":
-            # rack-switch degradation (no-op on flat: no uplinks)
-            faults.rack_switch_degrade_at(
-                sim, idx, at, factor=0.02 + 0.2 * y,
-                duration=45.0 + y * 150.0)
-        elif kind == "cut":
-            faults.link_cut_at(sim, nid, at, duration=25.0 + y * 120.0)
-        elif kind == "part":
-            faults.rack_partition_at(sim, idx, at,
-                                     duration=20.0 + y * 90.0)
-        elif kind == "crash":
-            faults.crash_node_at(sim, nid, at)
-        elif kind == "crash_restore":
-            faults.crash_node_at(sim, nid, at,
-                                 restore_after=20.0 + y * 100.0)
-        elif kind == "slow":
-            faults.slow_node_at(sim, nid, at, factor=0.02 + 0.06 * y,
-                                duration=30.0 + y * 150.0)
-        elif kind == "hb":
-            faults.heartbeat_outage_at(sim, nid, at,
-                                       duration=15.0 + y * 60.0)
-        elif kind == "mof":
-            faults.lose_mof_at_map_progress(sim, job, max(x, 0.05),
-                                            max_stragglers=2 + int(y * 14))
-        elif kind == "disk":
-            faults.disk_exception_on_map(sim, job, idx % 8,
-                                         at_spill=1 + int(y * 3))
-        else:  # pragma: no cover - strategy bug guard
-            raise ValueError(kind)
+apply_script = faults.apply_script
 
 
 def script_fault(script):
