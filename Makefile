@@ -4,9 +4,10 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fuzz test-net test-runtime lint bench bench-perf \
-	bench-perf-full bench-accel bench-accel-full bench-net bench-net-full \
-	bench-runtime bench-runtime-full
+.PHONY: test test-fuzz test-net test-runtime test-kernel-drain lint \
+	bench bench-perf bench-perf-full bench-accel bench-accel-full \
+	bench-net bench-net-full bench-runtime bench-runtime-full \
+	bench-bulk bench-bulk-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -25,6 +26,16 @@ test-net:
 	$(PY) -m pytest -q tests/test_net.py
 	REPRO_FUZZ_EXAMPLES=15 $(PY) -m pytest -q \
 		tests/test_fuzz_equivalence.py -k net
+
+# Kernelized-drain lane (DESIGN.md §17): the kernel engine's byte-
+# identity column of the fuzz matrix on flat/topo, the ε-fair
+# bulk/scalar/generic differentials + jax bulk-solver parity + realloc
+# invariants, and the engine/BatchQueue ordering unit gate. CPU-only:
+# jax pinned to the CPU platform, pallas kernels in interpret mode.
+test-kernel-drain:
+	JAX_PLATFORMS=cpu REPRO_FUZZ_EXAMPLES=10 $(PY) -m pytest -q \
+		tests/test_fuzz_equivalence.py tests/test_engine.py \
+		-k "kernel or fair or drain or pinned"
 
 # Chaos-hardened live-runtime lane (DESIGN.md §16): fault-free golden +
 # the pinned chaos matrix (fault scripts x recovery policies, exactly-
@@ -85,6 +96,17 @@ bench-net:
 
 bench-net-full:
 	$(PY) -m benchmarks.run --only perf_net
+
+# Kernelized bulk-launch drain trajectory (DESIGN.md §17.6): kernel vs
+# batch walls and drain-path cost in perf_shuffle + perf_net. The quick
+# budget smokes flat slots_filled equality and records the fair
+# drain-cost ratio at 20/100/500 nodes; the full sweep adds the gated
+# 10 000-node tier (drain-cost >= 2.2x, end-to-end >= 1.3x on fair).
+bench-bulk:
+	$(PY) -m benchmarks.run --only perf_shuffle,perf_net --quick
+
+bench-bulk-full:
+	$(PY) -m benchmarks.run --only perf_shuffle,perf_net
 
 # Live-runtime load harness: fault-free p50/p99 step latency + recovery
 # time for one crash script under both policies (gate: bino < restart).

@@ -32,10 +32,12 @@ from benchmarks.common import (
     SCALE_N_CONTAINERS,
     SCALE_SIM_SECONDS_FULL,
     SCALE_SIM_SECONDS_QUICK,
+    SCALE_SIZE_XL,
     SCALE_SIZES_FULL,
     SCALE_SIZES_QUICK,
     SCALE_SPLITS_PER_WORKER,
     Row,
+    attach_drain_timer,
     bench_json_update,
     bench_quick,
 )
@@ -47,6 +49,18 @@ from repro.sim.mapreduce import SimParams, Simulation
 # batch engine at 1000 nodes. Asserted, not just printed.
 GATE_FAIR_DRAIN_1000 = 1.5
 GATE_FAIR_SMOKE_500 = 1.3
+# Acceptance gates (ISSUE 7): the kernelized bulk-launch drain vs the
+# PR 4 batch plane on the ε-fair network at the 10 000-node tier. The
+# drain-cost gate compares per-record drain-path cost (loop + the
+# begin/end recompute/rebuild brackets): the kernel absorbs milestones
+# and heartbeat/expiry ticks as in-lane records at a few µs apiece
+# while batch pays them as ~25 µs heap events outside its drain, so the
+# kernel's drain amortizes the brackets over ~3× the records. Measured
+# 3.0× per-record / 1.7× end-to-end on the reference box; gates sit
+# well below (wall-clock noise on shared CI runners is ±10 %+) and the
+# measured values are what BENCH_scale.json records.
+GATE_KERNEL_DRAIN_10K = 2.2
+GATE_KERNEL_E2E_10K = 1.3
 
 CONFIGS = (
     ("flat", "flat", None),
@@ -57,29 +71,38 @@ CONFIGS = (
 
 
 def measure(n_workers: int, *, net: str, net_opts: Optional[Dict],
-            sim_seconds: float, seed: int = 0) -> Dict:
+            sim_seconds: float, seed: int = 0,
+            shuffle: str = "batch") -> Dict:
     n_maps = SCALE_SPLITS_PER_WORKER * n_workers
     spec = JobSpec("scale", "terasort", n_maps / 8.0)  # 8 splits per GB
     params = dataclasses.replace(SimParams(), sim_time_cap=sim_seconds)
     racks = max(2, n_workers // 25)
     sim = Simulation(policy="yarn", seed=seed, n_workers=n_workers,
                      n_containers=SCALE_N_CONTAINERS, params=params,
-                     shuffle="batch", net=net, racks=racks,
+                     shuffle=shuffle, net=net, racks=racks,
                      net_opts=net_opts)
     sim.submit(spec)
+    drain = attach_drain_timer(sim)
     t0 = time.perf_counter()
     sim.run()
     wall = time.perf_counter() - t0
     prof = sim.shuffle.profile
+    lane = getattr(sim.shuffle, "batches", None)
+    recs = lane.applied if lane is not None else 0
     return {
         "n_workers": n_workers,
         "racks": racks,
         "net": net,
         "net_opts": net_opts or {},
+        "shuffle": shuffle,
         "sim_seconds": sim_seconds,
         "wall_s": round(wall, 3),
+        "drain_s": round(drain["s"], 3),
+        "drain_records": recs,
+        "drain_us_per_record": round(1e6 * drain["s"] / max(recs, 1), 2),
         "slots_filled": prof.slots_filled,
         "recomputes": getattr(sim.cluster.net, "n_recomputes", 0),
+        "reallocs": getattr(sim.shuffle, "n_reallocs", 0),
     }
 
 
@@ -93,11 +116,14 @@ def run() -> List[Row]:
     fair_speedup_at: Dict[int, float] = {}
     for n in sizes:
         walls: Dict[str, float] = {}
+        batch_fair: Optional[Dict] = None
         for label, net, opts in CONFIGS:
             r = measure(n, net=net, net_opts=opts, sim_seconds=sim_seconds)
             r["config"] = label
             results.append(r)
             walls[label] = r["wall_s"]
+            if label == "fair_drain":
+                batch_fair = r
             rows.append((f"perf_net/{label}_{n}n_wall_s", r["wall_s"],
                          f"slots={r['slots_filled']} "
                          f"recomputes={r['recomputes']}"))
@@ -108,6 +134,24 @@ def run() -> List[Row]:
             f"fair-flow={walls['fair_flow']:.2f}s "
             f"fair-drain={walls['fair_drain']:.2f}s "
             f"(gate at 1000n: >={GATE_FAIR_DRAIN_1000:g}x)"))
+        # Kernelized bulk-launch drain on the same ε-fair/drain config
+        # (ISSUE 7 smoke coverage at every size; the gated tier is the
+        # 10k run below). No slots_filled equality here: drain-boundary
+        # recompute cadence differs once milestones/ticks join the lane,
+        # the DESIGN.md §17.3 waiver — equivalence on fair is pinned by
+        # the fuzz suite's bulk-vs-generic differential instead.
+        ke = measure(n, net="fair", net_opts={"recompute": "drain"},
+                     sim_seconds=sim_seconds, shuffle="kernel")
+        ke["config"] = "fair_kernel"
+        results.append(ke)
+        ratio = (batch_fair["drain_us_per_record"]
+                 / max(ke["drain_us_per_record"], 1e-9))
+        rows.append((
+            f"perf_net/fair_kernel_{n}n_wall_s", ke["wall_s"],
+            f"batch-drain={batch_fair['wall_s']:.2f}s "
+            f"drain_cost_ratio={ratio:.2f}x "
+            f"({batch_fair['drain_us_per_record']:.1f} -> "
+            f"{ke['drain_us_per_record']:.1f} us/record)"))
     at_1000 = fair_speedup_at.get(1000)
     if at_1000 is not None and at_1000 < GATE_FAIR_DRAIN_1000:
         raise AssertionError(
@@ -118,12 +162,58 @@ def run() -> List[Row]:
         raise AssertionError(
             f"fair drain 500-node smoke gate failed: {at_500} < "
             f"{GATE_FAIR_SMOKE_500}x over per-flow accounting")
+    kernel_10k = {}
+    if not quick:
+        # The gated kernel-drain tier (ISSUE 7): 10 000-node terasort on
+        # the ε-fair/drain network, batch plane vs kernelized drain.
+        n = SCALE_SIZE_XL
+        opts = {"recompute": "drain"}
+        ba = measure(n, net="fair", net_opts=opts,
+                     sim_seconds=sim_seconds)
+        ke = measure(n, net="fair", net_opts=opts,
+                     sim_seconds=sim_seconds, shuffle="kernel")
+        # Drain-boundary reallocation rides along unguarded: recorded
+        # for the §17.4 waiver's cost story, not gated.
+        re = measure(n, net="fair", net_opts=dict(opts, realloc=True),
+                     sim_seconds=sim_seconds, shuffle="kernel")
+        for r, label in ((ba, "fair_batch_10k"), (ke, "fair_kernel_10k"),
+                         (re, "fair_realloc_10k")):
+            r["config"] = label
+            results.append(r)
+        e2e = ba["wall_s"] / max(ke["wall_s"], 1e-9)
+        ratio = (ba["drain_us_per_record"]
+                 / max(ke["drain_us_per_record"], 1e-9))
+        kernel_10k = {
+            "batch_wall_s": ba["wall_s"],
+            "kernel_wall_s": ke["wall_s"],
+            "e2e_speedup": round(e2e, 2),
+            "batch_drain_us_per_record": ba["drain_us_per_record"],
+            "kernel_drain_us_per_record": ke["drain_us_per_record"],
+            "drain_cost_ratio": round(ratio, 2),
+            "realloc_wall_s": re["wall_s"],
+            "reallocs": re["reallocs"],
+        }
+        rows.append((
+            f"perf_net/kernel_drain_ratio_{n}n", ratio,
+            f"{ba['drain_us_per_record']:.1f} -> "
+            f"{ke['drain_us_per_record']:.1f} us/record, e2e={e2e:.2f}x "
+            f"(gates: drain>={GATE_KERNEL_DRAIN_10K:g}x, "
+            f"e2e>={GATE_KERNEL_E2E_10K:g}x)"))
+        if ratio < GATE_KERNEL_DRAIN_10K:
+            raise AssertionError(
+                f"kernel drain-cost 10k gate failed: {ratio:.2f} < "
+                f"{GATE_KERNEL_DRAIN_10K}x over the batch plane")
+        if e2e < GATE_KERNEL_E2E_10K:
+            raise AssertionError(
+                f"kernel end-to-end 10k gate failed: {e2e:.2f} < "
+                f"{GATE_KERNEL_E2E_10K}x over the batch plane")
     payload = {
         "sim_seconds": sim_seconds,
         "splits_per_worker": SCALE_SPLITS_PER_WORKER,
         "results": results,
         "fair_drain_speedup_at": {str(k): v
                                   for k, v in fair_speedup_at.items()},
+        "kernel_10k": kernel_10k,
     }
     path = bench_json_update("perf_net", payload,
                              mode="quick" if quick else "full")

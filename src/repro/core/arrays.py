@@ -83,6 +83,11 @@ class ArraySnapshot:
         self.node_free = np.full(n, n_containers, dtype=np.int32)
         self.node_total = np.full(n, n_containers, dtype=np.int32)
         self.node_marked = np.zeros(n, dtype=bool)
+        # Liveness + heartbeat-suppression mirrors: the per-second RM
+        # tick is one vectorized mask over these instead of a python
+        # loop over every SimNode (DESIGN.md §17.5).
+        self.node_alive = np.ones(n, dtype=bool)
+        self.node_supp = np.zeros(n)
         # --- network columns (DESIGN.md §15) -----------------------------
         # Active shuffle flows per node, link liveness, rack membership
         # and per-rack uplink flow/degradation state. ``init_net`` aliases
@@ -422,7 +427,8 @@ class ArraySnapshot:
         c.node_ids = list(self.node_ids)
         c.node_index = dict(self.node_index)
         for name in ("node_hb", "node_speed", "node_free", "node_total",
-                     "node_marked", "node_flows", "node_link_up",
+                     "node_marked", "node_alive", "node_supp",
+                     "node_flows", "node_link_up",
                      "node_rack", "rack_flows", "rack_factor"):
             # .copy() detaches the net-aliased columns: scenario sweeps
             # may perturb rack/flow state without touching the live model

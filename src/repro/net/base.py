@@ -81,6 +81,11 @@ class NetworkModel:
     name = "base"
     inline_flat = False
     wants_drain_hook = False
+    # Models that can stage flow bookkeeping across a drain and apply it
+    # in one vectorized end-of-drain step (FairNetwork's bulk mode,
+    # DESIGN.md §17.2) advertise it here; the kernel drain engine calls
+    # ``enable_bulk()`` when True.
+    supports_bulk = False
 
     def __init__(self, *, nic_bw: float = NIC_BW, disk_bw: float = DISK_BW,
                  seed_compat: bool = True):

@@ -42,7 +42,8 @@ class FairNetwork(NetworkModel):
 
     def __init__(self, racks: int = 1, oversub: float = DEFAULT_OVERSUB,
                  uplink_bw: float = None, eps: float = 0.05,
-                 recompute: str = "drain", **kw):
+                 recompute: str = "drain", bulk: bool = True,
+                 bulk_backend="numpy", realloc: bool = False, **kw):
         # The fair model carries no seed-compat burden: flows count once
         # per distinct endpoint (the symmetric accounting).
         kw.setdefault("seed_compat", False)
@@ -60,6 +61,8 @@ class FairNetwork(NetworkModel):
         self.f_links = np.full((cap, 4), -1, dtype=np.int32)
         self.f_active = np.zeros(cap, dtype=bool)
         self.f_rate = np.zeros(cap)
+        self.f_si = np.zeros(cap, dtype=np.int32)   # endpoint positions:
+        self.f_di = np.zeros(cap, dtype=np.int32)   # the bulk link source
         self._free: List[int] = []
         self._hi = 0                      # slots ever touched
         self.n_flows = 0
@@ -72,6 +75,39 @@ class FairNetwork(NetworkModel):
         self._frozen = False
         self._lane_seen = False           # a BatchQueue drain ever ran
         self.n_recomputes = 0             # solver invocations (profiling)
+        # Bulk mode (DESIGN.md §17.2): while a drain holds the shares
+        # frozen, opens/closes stage only the scalar flow-table fields
+        # (si/di/active/pair) and ``end_drain`` rebuilds the link/count
+        # tables in one vectorized step; the water-fill delegates to a
+        # repro.accel.bulk backend. Armed by ``enable_bulk()`` — only
+        # the kernel drain calls it, so batch-engine traces (the perf
+        # baseline) never change. ``bulk=False`` in net_opts keeps even
+        # the kernel engine on the incremental path (the differential
+        # bulk-vs-incremental pin in the fuzz suite).
+        self._bulk_opt = bool(bulk)
+        self._bulk_backend_spec = bulk_backend
+        self._bulk = False
+        self._backend = None
+        self._stale = False               # staged table updates pending
+        self.last_slot = -1               # slot of the latest open_flow
+        # Drain-boundary re-allocation of in-flight transfers (§17.4
+        # waiver): opt-in; consumed by KernelShuffle, not by this class.
+        self.realloc = bool(realloc)
+
+    @property
+    def supports_bulk(self) -> bool:
+        # flow-mode recomputes *inside* every open: incompatible with
+        # staging the tables until end-of-drain
+        return self._bulk_opt and self.recompute_mode == "drain"
+
+    def enable_bulk(self) -> None:
+        assert self.recompute_mode == "drain", self.recompute_mode
+        assert self.n_flows == 0, "enable_bulk() before any traffic"
+        if self._bulk:
+            return
+        from repro.accel.bulk import get_bulk_backend
+        self._backend = get_bulk_backend(self._bulk_backend_spec)
+        self._bulk = True
 
     # ------------------------------------------------------------------
     def _post_bind(self) -> None:
@@ -88,6 +124,9 @@ class FairNetwork(NetworkModel):
         ])
         self.link_share = self._eff_cap()
         self.link_nflows = np.zeros(len(self.link_cap), dtype=np.int32)
+        # Python-scalar rack lookup for the kernel drain's inlined
+        # staged-open pricing (the layout is fixed after bind).
+        self._rack_py = self.node_rack.tolist()
         self._dirty = True
 
     def _eff_cap(self) -> np.ndarray:
@@ -124,7 +163,7 @@ class FairNetwork(NetworkModel):
             links = np.full((cap, 4), -1, dtype=np.int32)
             links[:slot] = self.f_links[:slot]
             self.f_links = links
-            for name in ("f_active", "f_rate"):
+            for name in ("f_active", "f_rate", "f_si", "f_di"):
                 col = getattr(self, name)
                 new = np.zeros(cap, dtype=col.dtype)
                 new[:slot] = col[:slot]
@@ -134,11 +173,49 @@ class FairNetwork(NetworkModel):
 
     # ------------------------------------------------------------------
     def open_flow(self, src: str, dst: str) -> float:
+        pos = self._node_pos
+        si = pos[src]
+        di = si if src == dst else pos[dst]
+        if self._frozen and self._bulk:
+            # Staged open: the drain prices against frozen shares, so
+            # the link/count tables are dead until ``end_drain`` rebuilds
+            # them — record only the endpoints and the frozen price.
+            slot = self._alloc()
+            self.last_slot = slot
+            self.f_si[slot] = si
+            self.f_di[slot] = di
+            self.f_active[slot] = True
+            self.n_flows += 1
+            self._pair.setdefault((src, dst), []).append(slot)
+            self._stale = True
+            share = self.link_share
+            n = len(self.node_ids)
+            if si == di:
+                r = share[n + si]
+            else:
+                r = share[si]
+                x = share[di]
+                if x < r:
+                    r = x
+                rs = self.node_rack[si]
+                rd = self.node_rack[di]
+                if rs != rd:
+                    n2 = 2 * n
+                    x = share[n2 + rs]
+                    if x < r:
+                        r = x
+                    x = share[n2 + rd]
+                    if x < r:
+                        r = x
+            return float(r) if r > 1.0 else 1.0
         links = self._flow_link_list(src, dst)
         slot = self._alloc()
+        self.last_slot = slot
         row = self.f_links[slot]
         row[:] = -1
         row[:len(links)] = links
+        self.f_si[slot] = si
+        self.f_di[slot] = di
         self.f_active[slot] = True
         self.n_flows += 1
         n2 = 2 * len(self.node_ids)
@@ -166,6 +243,15 @@ class FairNetwork(NetworkModel):
         slot = slots.pop()
         if not slots:
             del self._pair[(src, dst)]
+        if self._frozen and self._bulk:
+            # Staged close (see open_flow): only the slot dies now; the
+            # count tables catch up in the end_drain rebuild.
+            self.f_active[slot] = False
+            self.f_rate[slot] = 0.0
+            self.n_flows -= 1
+            self._free.append(slot)
+            self._stale = True
+            return
         row = self.f_links[slot]
         n2 = 2 * len(self.node_ids)
         for l in row:
@@ -196,6 +282,49 @@ class FairNetwork(NetworkModel):
 
     def end_drain(self) -> None:
         self._frozen = False
+        if self._stale:
+            self._stale = False
+            self._rebuild_tables()
+            # flows changed during the drain: the next begin_drain (or
+            # rate_probe) re-solves — the incremental path's cadence
+            self._dirty = True
+
+    def _rebuild_tables(self) -> None:
+        """Catch the link/count tables up with the drain's staged
+        opens/closes in one vectorized pass over the active flows:
+        derive every flow's link row from its endpoints, bincount the
+        per-link/rack loads, and diff-sync the per-node counters (the
+        ``node_flows``/``rack_flows`` stores are aliased into
+        ``ArraySnapshot`` — all writes in place). Runs between the
+        drain and the next heap event, so no reader can observe the
+        mid-drain staleness."""
+        n = len(self.node_ids)
+        n2 = 2 * n
+        idx = np.flatnonzero(self.f_active[: self._hi])
+        si = self.f_si[idx]
+        di = self.f_di[idx]
+        local = si == di
+        rs = self.node_rack[si]
+        rd = self.node_rack[di]
+        inter = ~local & (rs != rd)
+        L = np.empty((len(idx), 4), dtype=np.int32)
+        L[:, 0] = np.where(local, n + si, si)
+        L[:, 1] = np.where(local, -1, di)
+        L[:, 2] = np.where(inter, n2 + rs, -1)
+        L[:, 3] = np.where(inter, n2 + rd, -1)
+        self.f_links[idx] = L
+        self.link_nflows[:] = np.bincount(L[L >= 0],
+                                          minlength=len(self.link_cap))
+        self.rack_flows[:] = self.link_nflows[n2:]
+        newc = np.bincount(si, minlength=n) + \
+            np.bincount(di[~local], minlength=n)
+        changed = np.flatnonzero(newc != self.node_flows)
+        if len(changed):
+            nodes = self.nodes
+            ids = self.node_ids
+            self.node_flows[changed] = newc[changed]
+            for i in changed.tolist():
+                nodes[ids[i]].active_flows = int(newc[i])
 
     # ------------------------------------------------------------------
     def _recompute(self) -> None:
@@ -217,6 +346,13 @@ class FairNetwork(NetworkModel):
             return
         L = self.f_links[idx]
         valid = L >= 0
+        if self._backend is not None:
+            # bulk mode: the water-fill itself sits behind the pluggable
+            # solver (numpy backend ≡ the loop below, bit-for-bit)
+            share, rate = self._backend.waterfill(eff, L, valid, self.eps)
+            self.f_rate[idx] = rate
+            self.link_share = share
+            return
         flat_links = np.where(valid, L, 0)
         k = len(idx)
         rem = eff.copy()
@@ -278,3 +414,11 @@ class FairNetwork(NetworkModel):
         n_pair = sum(len(v) for v in self._pair.values())
         assert n_pair == self.n_flows, (n_pair, self.n_flows)
         assert int(self.f_active[: self._hi].sum()) == self.n_flows
+        assert not self._stale, "staged bulk updates leaked past a drain"
+        pos = self._node_pos
+        for (src, dst), slots in self._pair.items():
+            si, di = pos[src], pos[dst]
+            for s in slots:
+                assert bool(self.f_active[s]), (src, dst, s)
+                assert int(self.f_si[s]) == si, (src, dst, s)
+                assert int(self.f_di[s]) == di, (src, dst, s)

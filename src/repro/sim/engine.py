@@ -64,9 +64,10 @@ class BatchQueue:
                       ("row", np.int32), ("dep", np.int32),
                       ("payload", np.int32)])
 
-    __slots__ = ("engine", "recs", "objs", "_heap", "_n", "_apply",
-                 "_flush", "_drain_impl", "_kind", "_time", "_row", "_dep",
-                 "_payload", "in_drain", "applied", "on_begin", "on_end")
+    __slots__ = ("engine", "recs", "objs", "_heap", "_n", "_free",
+                 "_apply", "_flush", "_drain_impl", "_kind", "_time",
+                 "_row", "_dep", "_payload", "in_drain", "applied",
+                 "on_begin", "on_end")
 
     def __init__(self, engine: "Engine", apply: Callable, flush: Callable,
                  drain: Optional[Callable] = None, cap: int = 1024):
@@ -75,6 +76,12 @@ class BatchQueue:
         self.objs: List[object] = []
         self._heap: List[Tuple[float, int, int]] = []
         self._n = 0
+        # Popped slots are recycled (a slot is reusable the moment its
+        # record leaves the heap: every live token is a *pending* record,
+        # so no consumer can still hold a freed slot's token). Without
+        # this the store could only reset when the lane fully drained —
+        # impossible once self-rescheduling tick records live here.
+        self._free: List[int] = []
         self._apply = apply
         self._flush = flush
         # Consumers may supply a fused drain loop (the shuffle engine
@@ -116,20 +123,26 @@ class BatchQueue:
                  dep: int, payload: int) -> int:
         """Append one record; returns its slot id — the *token* the
         consumer stores wherever it would have stored an EventHandle.
-        Slots are unique for the life of the pending set (the store is
-        recycled only once the lane is fully drained)."""
+        Slots are unique for the life of the pending set: a slot is
+        freed (and may be reissued) only when its record pops off the
+        lane heap, at which point any dangling copy of the token has
+        already been forgotten or invalidated by the applier."""
         eng = self.engine
         assert t >= eng.now - 1e-9, (t, eng.now)
-        slot = self._n
-        if slot == len(self.recs):
-            self._grow()
-        self._n = slot + 1
+        if self._free:
+            slot = self._free.pop()
+            self.objs[slot] = obj
+        else:
+            slot = self._n
+            if slot == len(self.recs):
+                self._grow()
+            self._n = slot + 1
+            self.objs.append(obj)
         self._kind[slot] = kind
         self._time[slot] = t
         self._row[slot] = row
         self._dep[slot] = dep
         self._payload[slot] = payload
-        self.objs.append(obj)
         heapq.heappush(self._heap, (t, eng._seq, slot))
         eng._seq += 1
         return slot
@@ -156,6 +169,7 @@ class BatchQueue:
         if not self._heap:
             self._n = 0
             self.objs.clear()
+            self._free.clear()
         return paused
 
     def _generic_drain(self, heap: list, until: Optional[float]) -> bool:
@@ -187,9 +201,12 @@ class BatchQueue:
                 pay_v = self._payload
             obj = objs[slot]
             objs[slot] = None  # release the ref for GC
+            kind = int(kind_v[slot])
+            dep = int(dep_v[slot])
+            pay = int(pay_v[slot])
+            self._free.append(slot)
             self.applied += 1
-            apply(int(kind_v[slot]), obj, int(dep_v[slot]),
-                  int(pay_v[slot]), slot)
+            apply(kind, obj, dep, pay, slot)
         return False
 
 

@@ -104,6 +104,7 @@ def heartbeat_outage_at(sim: Simulation, node_id: str, at: float,
         node = sim.cluster.nodes[node_id]
         node.hb_suppressed_until = max(node.hb_suppressed_until,
                                        sim.engine.now + duration)
+        sim._arr_node_supp(node_id)
     sim.engine.at(at, start)
 
 

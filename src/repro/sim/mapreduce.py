@@ -30,7 +30,8 @@ import dataclasses
 import itertools
 import time
 from collections.abc import Mapping as _Mapping
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple,
+                    Union)
 
 import numpy as np
 
@@ -55,7 +56,8 @@ from repro.sim.cluster import Cluster, HEARTBEAT_PERIOD
 from repro.sim.dispatch import Dispatcher, LaunchRequest
 from repro.sim.engine import Engine, EventHandle
 from repro.sim.job import JobResult, JobSpec
-from repro.sim.shuffle import ShuffleState, make_engine
+from repro.sim.shuffle import (ShuffleState, TICK_EXPIRY, TICK_HB,
+                               make_engine)
 
 __all__ = [
     "BINO_PARAMS", "LaunchRequest", "SimAttempt", "SimJob", "SimParams",
@@ -122,7 +124,9 @@ class SimAttempt:
         self.work_total = task.work_seconds * noise + sim.params.task_overhead
         self.work_done = start_offset * self.work_total
         self.last_sync = sim.engine.now
-        self._milestone: Optional[EventHandle] = None
+        # Pending milestone/completion timer: an EventHandle on the heap,
+        # or an int calendar-lane token for batch-mode map milestones.
+        self._milestone: Optional[Union[EventHandle, int]] = None
         # Map-only: progress point where an injected disk exception fires.
         self.disk_exception_at: Optional[float] = None
         # Milestone-ladder cache: (disk_exception_at, points) — the
@@ -452,6 +456,14 @@ class Simulation:
             arr.node_free[arr.node_index[node_id]] = \
                 self.cluster.nodes[node_id].free_containers
 
+    def _arr_node_supp(self, node_id: str) -> None:
+        # Heartbeat-suppression window changed: refresh the columnar
+        # mirror the vectorized RM tick masks against.
+        arr = self.arrays
+        if arr is not None:
+            arr.node_supp[arr.node_index[node_id]] = \
+                self.cluster.nodes[node_id].hb_suppressed_until
+
     def _start_background(self) -> None:
         if self._started:
             return
@@ -460,9 +472,15 @@ class Simulation:
             self.cluster.nodes[nid].last_heartbeat = self.engine.now
         if self.arrays is not None:
             self.arrays.node_hb[:] = self.engine.now
-        self.engine.after(self.params.heartbeat, self._heartbeat_tick)
+        # Heartbeat/expiry are high-volume fixed-rate ticks: the shuffle
+        # engine decides whether they live on the heap or in the calendar
+        # lane (batch mode folds them into the lane as typed records —
+        # DESIGN.md §17). The speculator stays on the heap: its actions
+        # can complete attempts and flip run(stop=...), which lane
+        # records must never do.
+        self.shuffle.schedule_tick(self.params.heartbeat, TICK_HB)
         self.engine.after(self.params.spec_interval, self._speculator_tick)
-        self.engine.after(self.params.expiry_check, self._expiry_tick)
+        self.shuffle.schedule_tick(self.params.expiry_check, TICK_EXPIRY)
 
     def submit(self, spec: JobSpec) -> SimJob:
         job = SimJob(self, spec)
@@ -566,10 +584,19 @@ class Simulation:
         a._milestones_cache = (a.disk_exception_at, pts)
         return pts
 
-    def _schedule_map_milestone(self, a: SimAttempt) -> None:
-        if a._milestone is not None:
-            a._milestone.cancel()
+    def _cancel_timer(self, a: SimAttempt) -> None:
+        """Cancel an attempt's pending milestone/completion timer. The
+        timer is either a heap EventHandle or (batch-mode map milestones)
+        an int lane token — lane cancellation is just forgetting the
+        token; the record's applier drops it as stale."""
+        h = a._milestone
+        if h is not None:
             a._milestone = None
+            if type(h) is not int:
+                h.cancel()
+
+    def _schedule_map_milestone(self, a: SimAttempt) -> None:
+        self._cancel_timer(a)
         if a.state != AttemptState.RUNNING:
             return
         a.sync()
@@ -577,15 +604,23 @@ class Simulation:
         if speed <= 0.0:
             return  # frozen; node death/expiry will clean up
         frac_done = a.work_done / a.work_total
-        for frac, kind in self._map_milestones(a):
+        pts = self._map_milestones(a)
+        for idx, (frac, kind) in enumerate(pts):
             if frac > frac_done + 1e-12:
                 dt = (frac * a.work_total - a.work_done) / speed
-                a._milestone = self.engine.after(
-                    dt, self._map_milestone_fired, a, frac, kind)
+                a._milestone = self.shuffle.schedule_milestone(
+                    a, dt, idx, frac, kind)
                 return
         # everything already passed (e.g. rollback at 100%): complete now
-        a._milestone = self.engine.after(0.0, self._map_milestone_fired,
-                                         a, 1.0, "complete")
+        a._milestone = self.shuffle.schedule_milestone(
+            a, 0.0, pts.index((1.0, "complete")), 1.0, "complete")
+
+    def _map_milestone_fired_idx(self, a: SimAttempt, idx: int) -> None:
+        """Lane-record entry point: the record carries the ladder index;
+        resolve it against the (cached, stable for a fixed
+        disk_exception_at) milestone list."""
+        frac, kind = self._map_milestones(a)[idx]
+        self._map_milestone_fired(a, frac, kind)
 
     def _map_milestone_fired(self, a: SimAttempt, frac: float, kind: str) -> None:
         if a.state != AttemptState.RUNNING:
@@ -683,9 +718,10 @@ class Simulation:
         self._schedule_reduce_completion(a)
 
     def _schedule_reduce_completion(self, a: SimAttempt) -> None:
-        if a._milestone is not None:
-            a._milestone.cancel()
-            a._milestone = None
+        # Reduce completions stay on the heap in every mode: completing
+        # the last reduce flips run(stop=...), which lane records must
+        # never do (BatchQueue contract).
+        self._cancel_timer(a)
         if a.state != AttemptState.RUNNING or not a.compute_started:
             return
         a.sync()
@@ -774,9 +810,7 @@ class Simulation:
     def _teardown_attempt(self, a: SimAttempt) -> None:
         a.node.busy.discard(a.attempt_id)
         self._arr_node_free(a.node_id)
-        if a._milestone is not None:
-            a._milestone.cancel()
-            a._milestone = None
+        self._cancel_timer(a)
         self.shuffle.detach(a)
 
     # ------------------------------------------------------------------
@@ -858,6 +892,7 @@ class Simulation:
                   else float("inf"))
         if target > node.hb_suppressed_until:
             node.hb_suppressed_until = target
+            self._arr_node_supp(node_id)
             # remember the window this cut owns so restore can tell it
             # apart from a foreign (outage-installed) window
             self._cut_hb[node_id] = target
@@ -910,6 +945,7 @@ class Simulation:
         if owned is not None and node.hb_suppressed_until == owned \
                 and owned > self.engine.now:
             node.hb_suppressed_until = self.engine.now
+            self._arr_node_supp(node_id)
         if node.alive:
             for task_id in node.mofs:
                 t = self._task(task_id)
@@ -942,6 +978,8 @@ class Simulation:
         self.set_node_speed(node_id, 0.0)
         self.shuffle.registry.drop_node_sources(node)
         node.fail()
+        if self.arrays is not None:
+            self.arrays.node_alive[self.arrays.node_index[node_id]] = False
         self._arr_node_free(node_id)
         # The crashed host's own in-flight fetches stall out silently: no
         # immediate retry — the next producer completion in the job
@@ -980,6 +1018,7 @@ class Simulation:
             self.arrays.node_speed[i] = node.speed
             self.arrays.node_hb[i] = node.last_heartbeat
             self.arrays.node_marked[i] = False
+            self.arrays.node_alive[i] = True
             self.arrays.node_free[i] = node.free_containers
         if hasattr(self.speculator, "glance"):
             self.speculator.glance.reset_node(node_id)
@@ -991,20 +1030,33 @@ class Simulation:
     def _heartbeat_tick(self) -> None:
         now = self.engine.now
         arr = self.arrays
-        hb = arr.node_hb if arr is not None else None
         marked = self._marked_failed
-        for i, node in enumerate(self.cluster.nodes.values()):
-            if node.alive and now >= node.hb_suppressed_until:
-                node.last_heartbeat = now
-                if hb is not None:
-                    hb[i] = now
-                if marked and node.node_id in marked:
-                    # transient outage misjudged as failure: NM rejoins
-                    marked.discard(node.node_id)
-                    if arr is not None:
-                        arr.node_marked[i] = False
+        if arr is not None and not marked:
+            # Vectorized RM tick (DESIGN.md §17.5): the all-healthy
+            # common case is one mask over the liveness/suppression
+            # mirrors; only the heartbeating rows' python attrs sync.
+            idx = np.flatnonzero(arr.node_alive & (arr.node_supp <= now))
+            arr.node_hb[idx] = now
+            nodes = self.cluster.nodes
+            ids = self.cluster.node_ids
+            for i in idx.tolist():
+                nodes[ids[i]].last_heartbeat = now
+        else:
+            # Reference loop: no columnar mirror, or a misjudged-dead
+            # node whose rejoin needs the per-node ``marked`` check.
+            hb = arr.node_hb if arr is not None else None
+            for i, node in enumerate(self.cluster.nodes.values()):
+                if node.alive and now >= node.hb_suppressed_until:
+                    node.last_heartbeat = now
+                    if hb is not None:
+                        hb[i] = now
+                    if marked and node.node_id in marked:
+                        # transient outage misjudged as failure: NM rejoins
+                        marked.discard(node.node_id)
+                        if arr is not None:
+                            arr.node_marked[i] = False
         if self.active_jobs or len(self.results) < len(self.jobs):
-            self.engine.after(self.params.heartbeat, self._heartbeat_tick)
+            self.shuffle.schedule_tick(self.params.heartbeat, TICK_HB)
 
     def _expiry_tick(self) -> None:
         now = self.engine.now
@@ -1025,7 +1077,7 @@ class Simulation:
             if now - node.last_heartbeat > self.params.nm_expiry:
                 self.node_lost(node.node_id)
         if self.active_jobs or len(self.results) < len(self.jobs):
-            self.engine.after(self.params.expiry_check, self._expiry_tick)
+            self.shuffle.schedule_tick(self.params.expiry_check, TICK_EXPIRY)
 
     def _speculator_tick(self) -> None:
         self.sched.watchdog()
@@ -1123,6 +1175,8 @@ class Simulation:
             assert arr.node_speed[i] == node.speed, nid
             assert arr.node_free[i] == node.free_containers, nid
             assert bool(arr.node_marked[i]) == (nid in self._marked_failed), nid
+            assert bool(arr.node_alive[i]) == node.alive, nid
+            assert arr.node_supp[i] == node.hb_suppressed_until, nid
             assert arr.node_flows[i] == node.active_flows, nid
             assert bool(arr.node_link_up[i]) == (nid not in self._link_down), \
                 nid
@@ -1167,6 +1221,8 @@ class Simulation:
                 assert arr.sh_ready[r] == 0
                 assert arr.sh_inflight[r] == 0
                 assert arr.sh_fail[r] == 0
+            if a.state == AttemptState.RUNNING:
+                self.shuffle.verify_timer(a)
             assert prog[k] == a.progress(), (a.attempt_id, prog[k],
                                              a.progress())
 

@@ -48,6 +48,7 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
+from repro.core.rollback import ProgressLog
 from repro.core.speculator import BinocularSpeculator
 from repro.core.types import AttemptState, TaskState
 from repro.sim.cluster import DISK_BW, NIC_BW
@@ -396,6 +397,30 @@ class ShuffleEngine:
         caller already performs) *is* the cancellation."""
         h.cancel()
 
+    # -- simulation-side timers (map milestones, background ticks) --------
+    # Heap-backed engines schedule plain events; the batch engine routes
+    # both through its calendar lane as typed records (same global seq
+    # counter — identical merged order).
+    def schedule_milestone(self, a: "SimAttempt", dt: float, idx: int,
+                           frac: float, kind: str):
+        """Arm the attempt's next map-milestone timer; returns the value
+        ``a._milestone`` should hold (EventHandle or lane token)."""
+        sim = self.sim
+        return sim.engine.after(dt, sim._map_milestone_fired, a, frac,
+                                kind)
+
+    def schedule_tick(self, dt: float, which: int) -> None:
+        """Arm one background tick (TICK_HB / TICK_EXPIRY)."""
+        sim = self.sim
+        fn = sim._heartbeat_tick if which == TICK_HB else sim._expiry_tick
+        sim.engine.after(dt, fn)
+
+    def verify_timer(self, a: "SimAttempt") -> None:
+        """Consistency hook for a live ``a._milestone`` (verify_arrays)."""
+        h = a._milestone
+        if h is not None:
+            assert not isinstance(h, int), a.attempt_id
+
     def try_start(self, a: "SimAttempt") -> None:
         raise NotImplementedError
 
@@ -662,10 +687,20 @@ class EventShuffle(ShuffleEngine):
                     (a.attempt_id, deps[i])
 
 
-# BatchQueue record kinds (the shuffle owns kinds 1/2; 0 stays invalid so
-# a zeroed record slot can never masquerade as a live event).
+# BatchQueue record kinds (the shuffle owns the registry; 0 stays invalid
+# so a zeroed record slot can never masquerade as a live event). Kinds 3/4
+# carry the simulation's map-milestone ladder and fixed-rate background
+# ticks as typed lane records (DESIGN.md §17): same global seq counter, so
+# the merged order equals the heap-only order; their appliers obey the
+# lane contract (neither can complete a job — reduce completions, the one
+# job-finishing event, stay on the heap).
 K_FETCH_DONE = 1
 K_FAIL_CYCLE = 2
+K_MILESTONE = 3    # obj = map SimAttempt, dep = milestone ladder index
+K_TICK = 4         # obj = None, dep = TICK_* selector
+
+TICK_HB = 0        # Simulation._heartbeat_tick
+TICK_EXPIRY = 1    # Simulation._expiry_tick
 
 
 class BatchShuffle(EventShuffle):
@@ -745,6 +780,12 @@ class BatchShuffle(EventShuffle):
         # Deferred write-through: attempts whose shuffle columns changed
         # during the current lane drain.
         self._dirty: Dict["SimAttempt", None] = {}
+        # Drain-boundary re-allocation registry (DESIGN.md §17.4, opt-in
+        # via net_opts={"realloc": True} on the kernel engine): live
+        # fetch token → (flow slot, launch rate). None = off (the
+        # default; launches then skip the bookkeeping entirely).
+        self._tok_rate: Optional[Dict[int, tuple]] = None
+        self.n_reallocs = 0
         # Hot-path caches (immutable for the simulation's lifetime).
         self._psizes: Dict[object, float] = {}
         self._node_pos = sim.cluster._node_pos
@@ -765,6 +806,16 @@ class BatchShuffle(EventShuffle):
     def _cancel(h) -> None:
         """Lane tokens need no disarming — the caller's dict removal
         already orphaned the record (see BatchQueue)."""
+
+    def _apply_tick(self, which: int) -> None:
+        # Shared record machinery: only KernelShuffle *schedules* K_TICK
+        # records, but the reference applier and the fused loop dispatch
+        # them here (the generic-drain parity path runs under kernel too).
+        sim = self.sim
+        if which == TICK_HB:
+            sim._heartbeat_tick()
+        else:
+            sim._expiry_tick()
 
     def _psize(self, job) -> float:
         s = self._psizes.get(job)
@@ -822,6 +873,20 @@ class BatchShuffle(EventShuffle):
     def _apply_record(self, kind: int, a: "SimAttempt", i: int,
                       src_idx: int, token: int) -> None:
         self.profile.lane_records += 1
+        if kind > K_FAIL_CYCLE:
+            if kind == K_MILESTONE:
+                # stale-token drop = cancellation (reschedule/teardown
+                # moved the attempt's milestone past this record)
+                if a._milestone == token:
+                    a._milestone = None
+                    self.sim._map_milestone_fired_idx(a, i)
+            else:
+                self._apply_tick(i)
+            return
+        if kind == K_FETCH_DONE and self._tok_rate is not None:
+            # token dies with this pop, live or stale — slots recycle
+            # (§17.4: realloc registry hygiene; mirrors the fused loop)
+            self._tok_rate.pop(token, None)
         ss = a.shuffle
         if ss is None:
             return
@@ -888,8 +953,15 @@ class BatchShuffle(EventShuffle):
         lheap = q._heap
         eng = q.engine
         objs = q.objs
+        free = q._free
         kind_v = q._kind
         dep_v = q._dep
+        time_v = q._time
+        row_v = q._row
+        pay_v = q._payload
+        time_v = q._time
+        row_v = q._row
+        pay_v = q._payload
         pop = heapq.heappop
         push = heapq.heappush
         sim = self.sim
@@ -908,8 +980,32 @@ class BatchShuffle(EventShuffle):
         cycle = self._cycle
         bino = self._bino
         speculator = sim.speculator
+        tok_rate = self._tok_rate
+        arrs = sim.arrays
+        arr_wd = arrs.work_done if arrs is not None else None
+        arr_ls = arrs.last_sync if arrs is not None else None
         RUNNING = AttemptState.RUNNING
         T_COMPLETED = TaskState.COMPLETED
+        # FairNetwork bulk mode (kernel drain): open/close stage only the
+        # scalar flow-table fields while the drain holds shares frozen —
+        # small enough to inline here, like the flat block below. The
+        # staged arithmetic mirrors FairNetwork.open_flow/close_flow's
+        # frozen branches field-for-field (the bulk-vs-incremental fuzz
+        # differential pins it).
+        bulk_net = (not inline_net) and getattr(net, "_bulk", False) \
+            and net._frozen
+        if bulk_net:
+            pair = net._pair
+            nfree = net._free
+            f_active = net.f_active
+            f_rate = net.f_rate
+            f_si = net.f_si
+            f_di = net.f_di
+            # python-scalar reads: frozen shares + static rack layout
+            share_l = net.link_share.tolist()
+            rack_l = net._rack_py
+            n_nodes = len(net.node_ids)
+            nn2 = 2 * n_nodes
         n_records = 0
         n_pops = 0
         n_slots = 0
@@ -931,23 +1027,139 @@ class BatchShuffle(EventShuffle):
             if kind_v is not q._kind:  # store grew mid-drain
                 kind_v = q._kind
                 dep_v = q._dep
+                time_v = q._time
+                row_v = q._row
+                pay_v = q._payload
             a = objs[slot]
             objs[slot] = None
+            i = int(dep_v[slot])
+            k = kind_v[slot]
+            free.append(slot)  # popped ⇒ recyclable (reads done above)
             n_records += 1
+            if k != K_FETCH_DONE:
+                if k == K_MILESTONE:
+                    # ---- map-milestone ladder (kernel mode only; the
+                    # map phase's hot loop). The common transition — an
+                    # on-schedule spill with the node still at speed —
+                    # is `_map_milestone_fired` + `_schedule_map_
+                    # milestone` inlined arithmetic-for-arithmetic
+                    # (sync fold, max clamp, ladder scan); everything
+                    # else (slowdown recheck, disk exception,
+                    # completion) drops to the reference path.
+                    if a._milestone != slot:
+                        continue  # stale: rescheduled or torn down
+                    a._milestone = None
+                    if a.state is not RUNNING:
+                        continue
+                    cache = a._milestones_cache
+                    if cache is not None and \
+                            cache[0] == a.disk_exception_at:
+                        pts = cache[1]
+                    else:
+                        pts = sim._map_milestones(a)
+                    p = pts[i]
+                    frac = p[0]
+                    node = nodes[a.node_id]
+                    speed = node.speed
+                    wt = a.work_total
+                    wd = a.work_done + (lt - a.last_sync) * speed
+                    if wd > wt:
+                        wd = wt
+                    target = frac * wt
+                    if p[1] != "spill" or wd + 1e-9 < target:
+                        sim._map_milestone_fired(a, frac, p[1])
+                        kind_v = q._kind
+                        dep_v = q._dep
+                        time_v = q._time
+                        row_v = q._row
+                        pay_v = q._payload
+                        continue
+                    if target > wd:
+                        wd = target
+                    a.work_done = wd
+                    a.last_sync = lt
+                    row_a = a.row
+                    if row_a >= 0:
+                        if arr_wd is not arrs.work_done:
+                            arr_wd = arrs.work_done  # grew mid-drain
+                            arr_ls = arrs.last_sync
+                        arr_wd[row_a] = wd
+                        arr_ls[row_a] = lt
+                    tid = a.task.task_id
+                    sl = node.spill_logs
+                    prev = sl.get(tid)
+                    if prev is None or frac > prev:
+                        sl[tid] = frac
+                    if bino:
+                        speculator.record_progress_log(ProgressLog(
+                            task_id=tid, node_id=a.node_id, offset=frac))
+                    if speed <= 0.0:
+                        continue  # frozen; expiry/death cleans up
+                    thresh = wd / wt + 1e-12
+                    nxt = 0
+                    npts = len(pts)
+                    while nxt < npts and pts[nxt][0] <= thresh:
+                        nxt += 1
+                    if nxt == npts:  # degenerate: ladder exhausted
+                        sim._schedule_map_milestone(a)
+                        kind_v = q._kind
+                        dep_v = q._dep
+                        time_v = q._time
+                        row_v = q._row
+                        pay_v = q._payload
+                        continue
+                    dt = (pts[nxt][0] * wt - wd) / speed
+                    if free:
+                        tok = free.pop()
+                        objs[tok] = a
+                    else:
+                        tok = q._n
+                        if tok == len(q.recs):
+                            q._grow()
+                            kind_v = q._kind
+                            dep_v = q._dep
+                            time_v = q._time
+                            row_v = q._row
+                            pay_v = q._payload
+                        q._n = tok + 1
+                        objs.append(a)
+                    t2 = lt + dt if dt > 0.0 else lt
+                    kind_v[tok] = K_MILESTONE
+                    time_v[tok] = t2
+                    row_v[tok] = row_a
+                    dep_v[tok] = nxt
+                    pay_v[tok] = 0
+                    push(lheap, (t2, eng._seq, tok))
+                    eng._seq += 1
+                    a._milestone = tok
+                    continue
+                # rare kinds (faults, background ticks): reference
+                # paths; they may re-enter try_start/schedule and grow
+                # the store — rebind defensively after
+                if k == K_FAIL_CYCLE:
+                    ss = a.shuffle
+                    if ss is not None:
+                        self._apply_fail(a, ss, i, slot)
+                else:  # K_TICK
+                    self._apply_tick(i)
+                kind_v = q._kind
+                dep_v = q._dep
+                time_v = q._time
+                row_v = q._row
+                pay_v = q._payload
+                continue
+            # ---- fetch completion (== _apply_record's hot branch) ----
+            if tok_rate is not None:
+                # The token dies with this pop — live or stale. Lane
+                # slots recycle, so a leftover entry would silently
+                # re-key itself to whatever fetch is issued the slot
+                # next (§17.4: realloc registry hygiene).
+                tok_rate.pop(slot, None)
             ss = a.shuffle
             if ss is None:
                 continue
-            i = int(dep_v[slot])
             deps = a.task.deps
             m = deps[i]
-            if kind_v[slot] == K_FAIL_CYCLE:
-                # rare (faults only): reference path; it may re-enter
-                # try_start and grow the store — rebind defensively
-                self._apply_fail(a, ss, i, slot)
-                kind_v = q._kind
-                dep_v = q._dep
-                continue
-            # ---- fetch completion (== _apply_record's hot branch) ----
             inflight = ss.inflight
             if inflight.get(m) != slot:
                 continue  # cancelled or superseded re-fetch
@@ -964,6 +1176,19 @@ class BatchShuffle(EventShuffle):
                     dn.active_flows = f if f > 0 else 0
                     nf[node_pos[src]] = sn.active_flows
                     nf[node_pos[dst]] = dn.active_flows
+                elif bulk_net:
+                    # staged close: the slot dies now, count tables
+                    # catch up in the end_drain rebuild
+                    key = (src, dst)
+                    slots_f = pair[key]
+                    slot_f = slots_f.pop()
+                    if not slots_f:
+                        del pair[key]
+                    f_active[slot_f] = False
+                    f_rate[slot_f] = 0.0
+                    net.n_flows -= 1
+                    nfree.append(slot_f)
+                    net._stale = True
                 else:
                     net.close_flow(src, dst)
             if a.state is not RUNNING:
@@ -1011,19 +1236,26 @@ class BatchShuffle(EventShuffle):
                 if src2 is None:
                     status[j] = S_FAIL_CYCLE
                     ss.n_ready -= 1
-                    tok = q._n
-                    if tok == len(q.recs):
-                        q._grow()
-                        kind_v = q._kind
-                        dep_v = q._dep
-                    q._n = tok + 1
+                    if free:
+                        tok = free.pop()
+                        objs[tok] = a
+                    else:
+                        tok = q._n
+                        if tok == len(q.recs):
+                            q._grow()
+                            kind_v = q._kind
+                            dep_v = q._dep
+                            time_v = q._time
+                            row_v = q._row
+                            pay_v = q._payload
+                        q._n = tok + 1
+                        objs.append(a)
                     t2 = lt + cycle
-                    q._kind[tok] = K_FAIL_CYCLE
-                    q._time[tok] = t2
-                    q._row[tok] = a.row
-                    q._dep[tok] = j
-                    q._payload[tok] = 0
-                    objs.append(a)
+                    kind_v[tok] = K_FAIL_CYCLE
+                    time_v[tok] = t2
+                    row_v[tok] = a.row
+                    dep_v[tok] = j
+                    pay_v[tok] = 0
                     push(lheap, (t2, eng._seq, tok))
                     eng._seq += 1
                     fail_cycles[m2] = tok
@@ -1049,6 +1281,48 @@ class BatchShuffle(EventShuffle):
                     dn.active_flows += 1
                     nf[node_pos[src2]] = sn.active_flows
                     nf[node_pos[dst]] = dn.active_flows
+                elif bulk_net:
+                    # staged open priced against the frozen shares
+                    si = node_pos[src2]
+                    if src2 == dst:
+                        di = si
+                        r = share_l[n_nodes + si]
+                    else:
+                        di = node_pos[dst]
+                        r = share_l[si]
+                        x = share_l[di]
+                        if x < r:
+                            r = x
+                        rs = rack_l[si]
+                        rd = rack_l[di]
+                        if rs != rd:
+                            x = share_l[nn2 + rs]
+                            if x < r:
+                                r = x
+                            x = share_l[nn2 + rd]
+                            if x < r:
+                                r = x
+                    rate = r if r > 1.0 else 1.0
+                    if nfree:
+                        slot_f = nfree.pop()
+                    else:
+                        slot_f = net._alloc()
+                        f_active = net.f_active  # grow may swap stores
+                        f_rate = net.f_rate
+                        f_si = net.f_si
+                        f_di = net.f_di
+                    net.last_slot = slot_f
+                    f_si[slot_f] = si
+                    f_di[slot_f] = di
+                    f_active[slot_f] = True
+                    net.n_flows += 1
+                    key2 = (src2, dst)
+                    plist = pair.get(key2)
+                    if plist is None:
+                        pair[key2] = [slot_f]
+                    else:
+                        plist.append(slot_f)
+                    net._stale = True
                 else:
                     rate = net.open_flow(src2, dst)
                 ss.fetch_srcs[m2] = src2
@@ -1059,22 +1333,31 @@ class BatchShuffle(EventShuffle):
                 dt = size / rate
                 if dt < 1e-3:
                     dt = 1e-3
-                tok = q._n
-                if tok == len(q.recs):
-                    q._grow()
-                    kind_v = q._kind
-                    dep_v = q._dep
-                q._n = tok + 1
+                if free:
+                    tok = free.pop()
+                    objs[tok] = a
+                else:
+                    tok = q._n
+                    if tok == len(q.recs):
+                        q._grow()
+                        kind_v = q._kind
+                        dep_v = q._dep
+                        time_v = q._time
+                        row_v = q._row
+                        pay_v = q._payload
+                    q._n = tok + 1
+                    objs.append(a)
                 t2 = lt + dt
-                q._kind[tok] = K_FETCH_DONE
-                q._time[tok] = t2
-                q._row[tok] = a.row
-                q._dep[tok] = j
-                q._payload[tok] = node_pos[src2]
-                objs.append(a)
+                kind_v[tok] = K_FETCH_DONE
+                time_v[tok] = t2
+                row_v[tok] = a.row
+                dep_v[tok] = j
+                pay_v[tok] = node_pos[src2]
                 push(lheap, (t2, eng._seq, tok))
                 eng._seq += 1
                 inflight[m2] = tok
+                if tok_rate is not None:
+                    tok_rate[tok] = (net.last_slot, rate)
                 n_slots += 1
                 budget -= 1
                 changed = True
@@ -1236,8 +1519,12 @@ class BatchShuffle(EventShuffle):
             dt = self._psize(prod.job) / rate
             if dt < 1e-3:
                 dt = 1e-3
-            inflight[m] = batches.schedule(
+            tok = batches.schedule(
                 now + dt, K_FETCH_DONE, a, row, i, self._node_pos[src])
+            inflight[m] = tok
+            tr = self._tok_rate
+            if tr is not None:
+                tr[tok] = (net.last_slot, rate)
             prof.slots_filled += 1
             budget -= 1
             changed = True
@@ -1365,9 +1652,137 @@ class BatchShuffle(EventShuffle):
                     (a.attempt_id, m)
 
 
+class KernelShuffle(BatchShuffle):
+    """Bulk-launch drain (DESIGN.md §17): BatchShuffle with the three
+    residual per-record Python paths kernelized.
+
+    1. **Map milestones as lane records** (``K_MILESTONE``): the ladder
+       advances through typed ``(row, frac-index, kind)`` records on the
+       calendar lane instead of per-attempt ``engine.after`` callbacks.
+       Records draw from the same global seq counter the heap uses, so
+       on the count-based networks (flat/topo) the merged event order —
+       and therefore every trace — is byte-identical to BatchShuffle.
+    2. **Background ticks as lane records** (``K_TICK``): heartbeat and
+       NM-expiry scans ride the lane too, removing the last per-sim-
+       second heap events. Drains then span whole heap-event gaps,
+       which under ``FairNetwork`` coarsens the recompute cadence — the
+       documented trace-shift waiver (§17.3); flat/topo are unaffected
+       (rates there read live counts, not drain-frozen shares).
+    3. **Bulk flow accounting** on a ``FairNetwork`` in drain mode:
+       per-flow open/close bookkeeping is staged during the drain
+       (shares are frozen, so the tables are dead until end-of-drain
+       anyway) and applied in one vectorized step by ``end_drain``;
+       the water-fill solve itself sits behind a pluggable bulk
+       backend (``repro/accel/bulk.py``: numpy / jax / pallas).
+
+    Everything else — record layout, the fused drain loop's fetch hot
+    path, cancellation discipline — is inherited; the differential
+    fuzzer pins kernel ≡ batch byte-for-byte on flat/topo.
+    """
+
+    mode = "kernel"
+
+    def __init__(self, sim: "Simulation") -> None:
+        super().__init__(sim)
+        net = self._net
+        if getattr(net, "supports_bulk", False):
+            net.enable_bulk()
+            if net.realloc:
+                # §17.4 waiver: opt-in re-pricing of in-flight transfers
+                # at every drain boundary that re-solved the shares.
+                # Traces shift by design (completion times move), so the
+                # fuzz matrix excludes realloc runs from byte-equivalence
+                # and pins invariants instead.
+                self._tok_rate = {}
+                self.batches.on_begin = self._realloc_begin
+
+    def _realloc_begin(self) -> None:
+        """begin_drain plus §17.4 re-allocation: when the solve actually
+        ran (shares moved), re-price every live in-flight fetch with the
+        batch pricing rule (``BulkBackend.price`` — one vectorized step,
+        the Pallas kernel's production call site) and slide its lane
+        record: remaining bytes at the old rate, completion at the new.
+        Token-forgetting does the cancellation — the superseded record
+        stale-drops at pop because ``ss.inflight`` now maps to the new
+        token."""
+        net = self._net
+        before = net.n_recomputes
+        net.begin_drain()
+        tr = self._tok_rate
+        if net.n_recomputes == before or not tr:
+            return
+        q = self.batches
+        kind_v = q._kind
+        dep_v = q._dep
+        time_v = q._time
+        objs = q.objs
+        now = q.engine.now
+        live = []
+        for tok, (slot, rate_old) in list(tr.items()):
+            # A registry entry can outlive its record (normal pops and
+            # stale drops don't clean it): validate against the live
+            # store. A recycled token is either overwritten at its next
+            # fetch launch or fails these checks.
+            a = objs[tok] if kind_v[tok] == K_FETCH_DONE else None
+            ss = a.shuffle if a is not None else None
+            if ss is None or \
+                    ss.inflight.get(a.task.deps[dep_v[tok]]) != tok:
+                del tr[tok]
+                continue
+            # capture the record fields now: scheduling the replacement
+            # records below may grow (and swap) the column stores
+            live.append((tok, slot, rate_old, a, ss, float(time_v[tok]),
+                         int(dep_v[tok]), int(q._payload[tok])))
+        if not live:
+            return
+        slots = np.fromiter((e[1] for e in live), dtype=np.int64,
+                            count=len(live))
+        links = net.f_links[slots]
+        rates = net._backend.price(net.link_share, links, links >= 0)
+        for k, (tok, slot, rate_old, a, ss, t_done, i, pay) in \
+                enumerate(live):
+            r_new = float(rates[k])
+            if r_new == rate_old:
+                continue
+            rem = (t_done - now) * rate_old
+            if rem < 0.0:
+                rem = 0.0
+            dt = rem / r_new
+            if dt < 1e-3:
+                dt = 1e-3
+            new_tok = q.schedule(now + dt, K_FETCH_DONE, a, a.row, i, pay)
+            ss.inflight[a.task.deps[i]] = new_tok
+            del tr[tok]
+            tr[new_tok] = (slot, r_new)
+            self.n_reallocs += 1
+
+    # -- simulation-side timers as lane records (DESIGN.md §17) -----------
+    def schedule_milestone(self, a: "SimAttempt", dt: float, idx: int,
+                           frac: float, kind: str):
+        eng = self.sim.engine
+        t = eng.now + (dt if dt > 0.0 else 0.0)
+        return self.batches.schedule(t, K_MILESTONE, a, a.row, idx, 0)
+
+    def schedule_tick(self, dt: float, which: int) -> None:
+        eng = self.sim.engine
+        t = eng.now + (dt if dt > 0.0 else 0.0)
+        self.batches.schedule(t, K_TICK, None, -1, which, 0)
+
+    def verify_timer(self, a: "SimAttempt") -> None:
+        tok = a._milestone
+        if not isinstance(tok, int):
+            return  # reduce-completion timers stay heap EventHandles
+        q = self.batches
+        assert 0 <= tok < q._n, (a.attempt_id, tok, q._n)
+        assert q.objs[tok] is a, a.attempt_id
+        assert int(q._kind[tok]) == K_MILESTONE, a.attempt_id
+
+
 def make_engine(sim: "Simulation", mode: str) -> ShuffleEngine:
     if mode == "batch":
         return BatchShuffle(sim)
+    if mode == "kernel":
+        return KernelShuffle(sim)
     if mode == "event":
         return EventShuffle(sim)
     if mode == "rescan":

@@ -1,14 +1,24 @@
 """Differential fault-script fuzzer (ISSUE 4 satellite; DESIGN.md §14.4).
 
-Three shuffle engines (rescan / event / batch) and two assessment
-backends (numpy / jax) now coexist, each promising byte-identical
-behaviour. This suite composes random fault scripts from the
-``sim/faults.py`` primitives — crash (± restore), slowdown, heartbeat
-outage, silent MOF loss, disk exception — at random times / progress
-fractions, runs the same seeded script under every configuration, and
-asserts byte-identical speculator action traces, attempt-launch
-sequences (time, task, node, reason, speculative, rollback) and job
-results.
+Four shuffle engines (rescan / event / batch / kernel) and two
+assessment backends (numpy / jax) now coexist, each promising
+byte-identical behaviour on the flat and topo networks. This suite
+composes random fault scripts from the ``sim/faults.py`` primitives —
+crash (± restore), slowdown, heartbeat outage, silent MOF loss, disk
+exception — at random times / progress fractions, runs the same seeded
+script under every configuration, and asserts byte-identical speculator
+action traces, attempt-launch sequences (time, task, node, reason,
+speculative, rollback) and job results.
+
+On the ε-fair network the kernel engine is NOT trace-comparable to
+batch: folding milestones and ticks into the calendar lane moves drain
+boundaries, and the fair model re-solves its share tables per drain, so
+rates are priced at shifted instants (the DESIGN.md §17.3 cadence
+waiver). The fair column is therefore pinned differentially *within*
+the kernel engine — staged bulk tables vs scalar accounting vs the
+generic record-at-a-time drain, and numpy vs jax bulk solvers — plus
+invariant sweeps; drain-boundary reallocation (§17.4) shifts traces by
+design and is pinned on invariants only.
 
 Two layers:
 
@@ -38,7 +48,7 @@ from conftest import (
 )
 from repro.sim import JobSpec, faults
 
-SHUFFLES = ("rescan", "event", "batch")
+SHUFFLES = ("rescan", "event", "batch", "kernel")
 BACKENDS = ("numpy",) + (("jax",) if HAVE_JAX else ())
 
 _FUZZ_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "8"))
@@ -67,7 +77,7 @@ def run_matrix(script, *, policy, seed, gb=1.0, shuffles=SHUFFLES,
             runs.append(run_traced(
                 mode, policy, script_fault(script), seed=seed, gb=gb,
                 assess_backend=backend, net=net, racks=racks,
-                checks=checks if mode == "batch" else None))
+                checks=checks if mode in ("batch", "kernel") else None))
             labels.append(f"{mode}/{backend}")
     assert_runs_equivalent(runs, labels)
     assert runs[0].launches, "scenario launched nothing — not probing"
@@ -183,14 +193,90 @@ def test_pinned_scripts_probe_faults():
 def test_batch_generic_drain_parity_on_pinned():
     """The fused drain loop vs the reference record-at-a-time loop:
     transition-identical on every pinned script (guards the deliberate
-    inlining in BatchShuffle._drain_run)."""
-    for name, policy, seed, script in PINNED:
-        fused = run_traced("batch", policy, script_fault(script),
-                           seed=seed, gb=1.0)
-        generic = run_traced("batch", policy, script_fault(script),
-                            seed=seed, gb=1.0, generic_drain=True)
-        assert_runs_equivalent([fused, generic],
-                               [f"{name}/fused", f"{name}/generic"])
+    inlining in BatchShuffle._drain_run and the kernel engine's lane
+    foldings on top of it)."""
+    for mode in ("batch", "kernel"):
+        for name, policy, seed, script in PINNED:
+            fused = run_traced(mode, policy, script_fault(script),
+                               seed=seed, gb=1.0)
+            generic = run_traced(mode, policy, script_fault(script),
+                                 seed=seed, gb=1.0, generic_drain=True)
+            assert_runs_equivalent(
+                [fused, generic],
+                [f"{mode}/{name}/fused", f"{mode}/{name}/generic"])
+
+
+# ---------------------------------------------------------------------------
+# Kernel engine on the ε-fair network (ISSUE 7): differential pins
+# *within* the engine — see the module docstring for why batch-vs-kernel
+# trace comparison is waived here (§17.3).
+# ---------------------------------------------------------------------------
+FAIR_RACKS = 4
+# Subset of the corpus that stresses the fair model's drain cadence:
+# slow/hb/crash faults bend flow lifetimes and recompute schedules.
+PINNED_FAIR = [PINNED[1], PINNED[2], PINNED[3], PINNED[4], PINNED[9]]
+
+
+def _fair_run(policy, seed, script, **kw):
+    kw.setdefault("checks", range(20, 700, 45))
+    return run_traced("kernel", policy, script_fault(script), seed=seed,
+                      gb=NET_GB, net="fair", racks=FAIR_RACKS, **kw)
+
+
+@pytest.mark.parametrize("name,policy,seed,script",
+                         PINNED_FAIR, ids=[p[0] for p in PINNED_FAIR])
+def test_pinned_fair_kernel_bulk_differential(name, policy, seed,
+                                              script):
+    """Staged bulk flow tables vs scalar per-flow accounting vs the
+    generic record-at-a-time drain: one engine, three executions, one
+    trace. Pins the frozen-rate staging in BatchShuffle._drain_run and
+    FairNetwork's deferred open/close against the non-bulk reference."""
+    runs = [
+        _fair_run(policy, seed, script),
+        _fair_run(policy, seed, script, net_opts={"bulk": False}),
+        _fair_run(policy, seed, script, generic_drain=True),
+    ]
+    assert_runs_equivalent(runs, ["bulk/fused", "scalar/fused",
+                                  "bulk/generic"])
+    assert runs[0].launches, "scenario launched nothing — not probing"
+
+
+@pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+@pytest.mark.parametrize("name,policy,seed,script",
+                         PINNED_FAIR[:3], ids=[p[0]
+                                               for p in PINNED_FAIR[:3]])
+def test_pinned_fair_kernel_jax_bulk_solver(name, policy, seed, script):
+    """The jax bulk water-fill/pricing solver must be bit-identical to
+    the numpy reference through a whole faulted run (the anti-FMA
+    guard in repro/accel/bulk.py is what keeps this true)."""
+    runs = [
+        _fair_run(policy, seed, script),
+        _fair_run(policy, seed, script,
+                  net_opts={"bulk_backend": "jax"}),
+    ]
+    assert_runs_equivalent(runs, ["bulk/numpy", "bulk/jax"])
+
+
+def test_pinned_fair_realloc_invariants():
+    """Drain-boundary reallocation (§17.4) shifts traces by design —
+    the waiver trades byte-equivalence for invariants: every pinned
+    fair scenario must complete with the full invariant sweep green,
+    fused and generic drains must still agree with *each other*, and
+    the corpus must actually reallocate somewhere."""
+    reallocs = 0
+    for name, policy, seed, script in PINNED_FAIR:
+        fused = _fair_run(policy, seed, script,
+                          net_opts={"realloc": True})
+        generic = _fair_run(policy, seed, script,
+                            net_opts={"realloc": True},
+                            generic_drain=True)
+        assert_runs_equivalent(
+            [fused, generic],
+            [f"{name}/realloc/fused", f"{name}/realloc/generic"])
+        check_invariants(fused.sim)
+        assert fused.results, name
+        reallocs += fused.sim.shuffle.n_reallocs
+    assert reallocs > 0, "corpus never reallocated — not probing §17.4"
 
 
 def test_multi_job_matrix_equivalence():
@@ -277,3 +363,23 @@ if HAVE_HYPOTHESIS:
         r = run_traced("batch", "bino", script_fault(script), seed=seed,
                        gb=1.0, checks=range(5, 900, 13))
         check_invariants(r.sim)
+
+    @given(script=_net_script, seed=st.integers(0, 5),
+           policy=st.sampled_from(["yarn", "bino"]))
+    @settings(max_examples=max(_FUZZ_EXAMPLES // 2, 4), deadline=None)
+    @example(script=[("slow", 4, 0.3, 0.2), ("hb", 9, 0.25, 0.8)],
+             seed=2, policy="bino")
+    def test_random_fair_kernel_bulk_differential(script, seed, policy):
+        """Random rack/link/classic fault scripts on the ε-fair network:
+        the kernel engine's staged bulk tables, scalar accounting and
+        generic drain must stay trace-identical, with the invariant
+        sweep green on the bulk run."""
+        runs = [
+            _fair_run(policy, seed, script,
+                      checks=range(20, 700, 45)),
+            _fair_run(policy, seed, script, net_opts={"bulk": False}),
+            _fair_run(policy, seed, script, generic_drain=True),
+        ]
+        assert_runs_equivalent(runs, ["bulk/fused", "scalar/fused",
+                                      "bulk/generic"])
+        check_invariants(runs[0].sim)
