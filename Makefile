@@ -4,10 +4,10 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fuzz test-net test-runtime test-kernel-drain lint \
-	bench bench-perf bench-perf-full bench-accel bench-accel-full \
+.PHONY: test test-fuzz test-net test-runtime test-kernel-drain test-obs \
+	lint bench bench-perf bench-perf-full bench-accel bench-accel-full \
 	bench-net bench-net-full bench-runtime bench-runtime-full \
-	bench-bulk bench-bulk-full
+	bench-bulk bench-bulk-full bench-scorecard bench-scorecard-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -48,17 +48,24 @@ test-runtime:
 		$(PY) -m pytest -q \
 		tests/test_runtime.py tests/test_data_checkpoint.py
 
+# Flight-recorder lane (DESIGN.md §18): schema round-trip, bounded
+# memory, the obs-on == obs-off byte-identity gate per shuffle engine,
+# scorecard math, and the sim vs FakeClock-runtime cross-world
+# scorecard identity.
+test-obs:
+	$(PY) -m pytest -q tests/test_obs.py
+
 # Ruff config lives in pyproject.toml ([tool.ruff]). Scope = the layers
 # the shuffle refactor owns; widen as seed modules are modernized.
 # Degrades to a no-op warning where ruff isn't installed (the baked
 # container has no network; CI installs it).
 LINT_PATHS = src/repro/sim src/repro/net src/repro/core/arrays.py \
-	src/repro/accel src/repro/runtime \
+	src/repro/accel src/repro/obs src/repro/runtime \
 	benchmarks examples/cluster_sim.py examples/serve.py \
 	tests/test_shuffle.py \
 	tests/test_columnar.py tests/test_accel.py tests/test_cluster_index.py \
 	tests/test_engine.py tests/test_fuzz_equivalence.py tests/test_net.py \
-	tests/test_runtime.py tests/conftest.py
+	tests/test_runtime.py tests/test_obs.py tests/conftest.py
 
 lint:
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
@@ -115,3 +122,12 @@ bench-runtime:
 
 bench-runtime-full:
 	$(PY) -m benchmarks.run --only perf_runtime
+
+# Speculation scorecards (DESIGN.md §18.5): yarn vs bino detection
+# precision/recall/time-to-detect from flight-recorder traces on pinned
+# fault scripts, with the sim vs live-runtime cross-world identity gate.
+bench-scorecard:
+	$(PY) -m benchmarks.run --only fig_scorecard --quick
+
+bench-scorecard-full:
+	$(PY) -m benchmarks.run --only fig_scorecard

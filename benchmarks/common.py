@@ -40,35 +40,11 @@ SCALE_SIM_SECONDS_QUICK = 120.0
 SCALE_SIM_SECONDS_FULL = 240.0
 
 
-def attach_drain_timer(sim) -> Dict:
-    """Wrap the calendar lane's drain path — the fused/generic loop plus
-    its ``on_begin``/``on_end`` brackets (the ε-fair recompute/rebuild
-    lives in the brackets, so they are part of the drain's cost) — with a
-    wall-clock accumulator. Returns ``{"s": seconds}`` (records applied
-    are read off ``sim.shuffle.batches.applied`` afterwards). Call after
-    the simulation is fully constructed: engine wiring installs the
-    brackets at ``Simulation.__init__`` time."""
-    acc = {"s": 0.0}
-    q = getattr(sim.shuffle, "batches", None)
-    if q is None:  # rescan/event substrates have no calendar lane
-        return acc
-
-    def wrap(fn):
-        if fn is None:
-            return None
-
-        def timed(*a):
-            t0 = time.perf_counter()
-            try:
-                return fn(*a)
-            finally:
-                acc["s"] += time.perf_counter() - t0
-        return timed
-
-    q._drain_impl = wrap(q._drain_impl)
-    q.on_begin = wrap(q.on_begin)
-    q.on_end = wrap(q.on_end)
-    return acc
+def drain_seconds(reg) -> float:
+    """Drain wall accumulated by ``repro.obs.instrument_drain`` (which
+    retired PR 7's local ``attach_drain_timer``); 0.0 when the substrate
+    has no calendar lane."""
+    return float(reg.snapshot().get("drain_s", 0.0))
 
 
 def bench_quick() -> bool:

@@ -1,0 +1,139 @@
+"""Speculation scorecards: yarn vs bino detection quality from flight-
+recorder traces (ISSUE 8; DESIGN.md §18.5).
+
+Runs pinned declarative fault scripts through the simulator under both
+policies with a :class:`~repro.obs.TraceRecorder` wired in, joins each
+trace's fault ground truth (``K_FAULT``) against its detection verdicts
+(``K_DETECT``), and reports per-policy precision / recall / mean
+time-to-detect / wasted backup work. The same scripts then run against
+the *live* runtime (ChaosController on a FakeClock) and the cross-world
+gate asserts the comparable core — victims / tp / fp / fn / precision /
+recall — is identical between a script's sim trace and its runtime
+trace (time-to-detect is clock-relative and reported per world).
+
+Acceptance gates (asserted, not just printed):
+- bino recall is 1.0 on every script (every injected node fault caught);
+- bino never detects slower than yarn's fixed-expiry baseline
+  (mean time-to-detect, per script);
+- sim and runtime scorecards agree on the comparable core per script.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.fig_scorecard [--quick]
+    PYTHONPATH=src python -m benchmarks.run --only fig_scorecard --quick
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+from benchmarks.common import Row, bench_json_update, bench_quick
+from repro.obs import TraceRecorder, comparable_core, scorecard
+from repro.sim import JobSpec, faults
+from repro.sim.mapreduce import Simulation
+
+N_WORKERS = 4    # matches the runtime's host count, so node indices and
+#                  therefore scorecard victim sets align across worlds
+
+SCRIPTS = {
+    "one_crash": [("crash", 1, 0.2, 0.0)],
+    "two_crashes": [("crash", 1, 0.2, 0.0), ("crash", 2, 0.3, 0.0)],
+}
+
+
+def sim_card(policy: str, script, seed: int = 1) -> Dict:
+    rec = TraceRecorder()
+    sim = Simulation(policy=policy, seed=seed, n_workers=N_WORKERS,
+                     obs=rec)
+    job = sim.submit(JobSpec("j0", "terasort", 2.0))
+    faults.apply_script(sim, job, script)
+    sim.run()
+    return scorecard(rec, policy=policy)
+
+
+def runtime_card(recovery: str, script) -> Dict:
+    """Live coordinator/host threads on a FakeClock under the same
+    script, interpreted by the ChaosController."""
+    from repro.configs import get_config, reduced_config
+    from repro.runtime import (
+        ChaosController,
+        FakeClock,
+        RuntimeConfig,
+        TrainerRuntime,
+    )
+    from repro.train.loop import TrainConfig
+
+    rec = TraceRecorder(thread_safe=True)
+    rt = RuntimeConfig(n_hosts=N_WORKERS, microbatches_per_shard=4,
+                       recovery=recovery, compute_delay=0.02)
+    t = TrainerRuntime(
+        reduced_config(get_config("qwen1.5-0.5b")), TrainConfig(), rt,
+        seq_len=32, per_shard_batch=2, seed=0,
+        clock=FakeClock(auto_advance=True),
+        chaos=ChaosController(script, horizon=6.0, seed=7), obs=rec)
+    try:
+        t.run(3)
+    finally:
+        t.shutdown()
+    return scorecard(rec, policy=recovery)
+
+
+def run() -> List[Row]:
+    quick = bench_quick()
+    rows: List[Row] = []
+    per_script: Dict[str, Dict] = {}
+    for name, script in SCRIPTS.items():
+        cards = {"sim": {p: sim_card(p, script) for p in ("yarn", "bino")},
+                 "runtime": {"bino": runtime_card("bino", script)}}
+        sim_bino = cards["sim"]["bino"]
+        sim_yarn = cards["sim"]["yarn"]
+        rt_bino = cards["runtime"]["bino"]
+        cross_ok = comparable_core(sim_bino) == comparable_core(rt_bino)
+        per_script[name] = {
+            "script": [list(s) for s in script],
+            "cards": cards,
+            "cross_world_ok": cross_ok,
+        }
+        for policy, card in cards["sim"].items():
+            rows.append((
+                f"fig_scorecard/{name}_{policy}_recall", card["recall"],
+                f"precision={card['precision']} ttd={card['ttd']} "
+                f"wasted={card['wasted_backup_work']}"))
+        rows.append((
+            f"fig_scorecard/{name}_cross_world", float(cross_ok),
+            f"sim={comparable_core(sim_bino)} "
+            f"runtime_ttd={rt_bino['ttd']}"))
+        if not cross_ok:
+            raise AssertionError(
+                f"{name}: sim vs runtime scorecard diverged: "
+                f"{comparable_core(sim_bino)} != "
+                f"{comparable_core(rt_bino)}")
+        if sim_bino["recall"] != 1.0:
+            raise AssertionError(
+                f"{name}: bino missed an injected fault: {sim_bino}")
+        if sim_yarn["mean_ttd"] is not None \
+                and sim_bino["mean_ttd"] is not None \
+                and sim_bino["mean_ttd"] > sim_yarn["mean_ttd"] + 1e-9:
+            raise AssertionError(
+                f"{name}: bino detected slower than the yarn baseline: "
+                f"{sim_bino['mean_ttd']} > {sim_yarn['mean_ttd']}")
+    payload = {"n_workers": N_WORKERS, "scripts": per_script}
+    path = bench_json_update("fig_scorecard", payload,
+                             mode="quick" if quick else "full")
+    rows.append(("fig_scorecard/json", 1.0, str(path)))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.quick and not args.full:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+    for name, value, derived in run():
+        print(f"{name},{value:.4g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,10 +37,11 @@ from benchmarks.common import (
     SCALE_SIZES_QUICK,
     SCALE_SPLITS_PER_WORKER,
     Row,
-    attach_drain_timer,
     bench_json_update,
     bench_quick,
+    drain_seconds,
 )
+from repro.obs import instrument_drain
 from repro.sim.job import JobSpec
 from repro.sim.mapreduce import SimParams, Simulation
 
@@ -82,10 +83,11 @@ def measure(n_workers: int, *, net: str, net_opts: Optional[Dict],
                      shuffle=shuffle, net=net, racks=racks,
                      net_opts=net_opts)
     sim.submit(spec)
-    drain = attach_drain_timer(sim)
+    reg = instrument_drain(sim)
     t0 = time.perf_counter()
     sim.run()
     wall = time.perf_counter() - t0
+    drain_s = drain_seconds(reg)
     prof = sim.shuffle.profile
     lane = getattr(sim.shuffle, "batches", None)
     recs = lane.applied if lane is not None else 0
@@ -97,9 +99,9 @@ def measure(n_workers: int, *, net: str, net_opts: Optional[Dict],
         "shuffle": shuffle,
         "sim_seconds": sim_seconds,
         "wall_s": round(wall, 3),
-        "drain_s": round(drain["s"], 3),
+        "drain_s": round(drain_s, 3),
         "drain_records": recs,
-        "drain_us_per_record": round(1e6 * drain["s"] / max(recs, 1), 2),
+        "drain_us_per_record": round(1e6 * drain_s / max(recs, 1), 2),
         "slots_filled": prof.slots_filled,
         "recomputes": getattr(sim.cluster.net, "n_recomputes", 0),
         "reallocs": getattr(sim.shuffle, "n_reallocs", 0),

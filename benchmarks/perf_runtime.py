@@ -81,13 +81,20 @@ def _measure(policy: str, script, n_meas: int,
         for i in range(WARMUP_STEPS, WARMUP_STEPS + n_meas):
             reports.append(t.coord.run_step(i))
         meas = [r.wall_s for r in reports[WARMUP_STEPS:]]
+        # Recovery-work accounting now comes off the coordinator's
+        # metrics registry (repro.obs, DESIGN.md §18.3) instead of
+        # ad-hoc report scraping; ``mb_needed`` stays report-derived
+        # (it is a per-step target, not an event count).
+        snap = t.coord.metrics.snapshot()
         counters = {
-            "recoveries": sum(len(r.recoveries) for r in reports),
-            "restarts": sum(r.restarts for r in reports),
-            "wedges": sum(r.wedges for r in reports),
-            "mb_executed": sum(r.mb_executed for r in reports),
+            "recoveries": int(snap.get("recoveries", 0)),
+            "detections": int(snap.get("detections", 0)),
+            "expiry_declares": int(snap.get("expiry_declares", 0)),
+            "restarts": int(snap.get("restarts", 0)),
+            "wedges": int(snap.get("wedges", 0)),
+            "mb_executed": int(snap.get("mb_executed", 0)),
             "mb_needed": sum(r.mb_needed for r in reports),
-            "resends": t.coord.resend_count,
+            "resends": int(snap.get("resends", 0)),
         }
         vec = np.concatenate([np.asarray(l, np.float32).ravel()
                               for l in jax.tree.leaves(t.state["params"])])

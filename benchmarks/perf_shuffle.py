@@ -22,11 +22,13 @@ Usage:
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from benchmarks.common import (
+    BENCH_JSON,
     SCALE_N_CONTAINERS,
     SCALE_SIM_SECONDS_FULL,
     SCALE_SIM_SECONDS_QUICK,
@@ -35,10 +37,11 @@ from benchmarks.common import (
     SCALE_SIZES_QUICK,
     SCALE_SPLITS_PER_WORKER,
     Row,
-    attach_drain_timer,
     bench_json_update,
     bench_quick,
+    drain_seconds,
 )
+from repro.obs import TraceRecorder, instrument_drain
 from repro.sim.job import JobSpec
 from repro.sim.mapreduce import BINO_PARAMS, SimParams, Simulation
 
@@ -59,6 +62,84 @@ GATE_BATCH_SMOKE_500 = 1.3
 # heap-to-lane absorption of milestones and ticks — the drain-cost prize
 # gate lives in perf_net's ε-fair tier where the brackets dominate.
 GATE_KERNEL_E2E_10K = 1.0
+# Acceptance gates (ISSUE 8): the flight recorder's cost discipline at
+# the gate size (1000 nodes full / 500 quick), batch engine, min-of-N
+# walls on the same seed. obs-enabled is gated in-process against the
+# obs-disabled run; obs-disabled (one dead ``is not None`` branch per
+# emit site) is gated against the stored pre-PR baseline — but only
+# when the stored payload ran the same mode on the same machine shape
+# (cpu_count), since cross-machine wall comparisons are meaningless.
+GATE_OBS_ENABLED = 1.10
+GATE_OBS_DISABLED_VS_BASE = 1.02
+OBS_GATE_REPS = 3
+
+
+def _baseline_wall(n_workers: int, mode: str) -> Optional[float]:
+    """The stored (pre-update) perf_shuffle batch wall at ``n_workers``,
+    or None when absent or not comparable (different sweep mode or
+    machine shape)."""
+    if not BENCH_JSON.exists():
+        return None
+    try:
+        doc = json.loads(BENCH_JSON.read_text())
+    except (json.JSONDecodeError, OSError):
+        return None
+    payload = doc.get("benchmarks", {}).get("perf_shuffle")
+    if not payload or payload.get("mode") != mode \
+            or payload.get("cpu_count") != os.cpu_count():
+        return None
+    walls = [r["wall_s"] for r in payload.get("results", [])
+             if r.get("mode") == "batch" and r.get("policy") == "yarn"
+             and r.get("n_workers") == n_workers]
+    return min(walls) if walls else None
+
+
+def _obs_overhead_gate(sim_seconds: float, quick: bool,
+                       rows: List[Row]) -> Dict:
+    """Measure and assert the recorder's overhead envelope."""
+    n = 500 if quick else 1000
+    mode = "quick" if quick else "full"
+    base_wall = _baseline_wall(n, mode)  # read BEFORE the json update
+    off = on = float("inf")
+    n_records = 0
+    for _ in range(OBS_GATE_REPS):
+        off = min(off, measure("yarn", n, mode="batch",
+                               sim_seconds=sim_seconds)["wall_s"])
+        rec = TraceRecorder()
+        on = min(on, measure("yarn", n, mode="batch",
+                             sim_seconds=sim_seconds, obs=rec)["wall_s"])
+        n_records = len(rec) + rec.dropped
+    ratio = on / max(off, 1e-9)
+    base_ratio = off / base_wall if base_wall else None
+    info = {
+        "n_workers": n,
+        "reps": OBS_GATE_REPS,
+        "disabled_wall_s": round(off, 3),
+        "enabled_wall_s": round(on, 3),
+        "enabled_ratio": round(ratio, 4),
+        "records": n_records,
+        "baseline_wall_s": base_wall,
+        "disabled_vs_baseline": (round(base_ratio, 4)
+                                 if base_ratio is not None else None),
+        "baseline_waived": base_wall is None,
+    }
+    rows.append((
+        f"perf_shuffle/obs_overhead_{n}n", ratio,
+        f"enabled={on:.2f}s disabled={off:.2f}s "
+        f"(gate: <={GATE_OBS_ENABLED:g}x; {n_records} records) "
+        + (f"baseline={base_wall:.2f}s ratio={base_ratio:.3f} "
+           f"(gate: <={GATE_OBS_DISABLED_VS_BASE:g}x)"
+           if base_wall else "baseline: waived (not comparable)")))
+    if ratio > GATE_OBS_ENABLED:
+        raise AssertionError(
+            f"obs-enabled overhead gate failed at {n}n: {ratio:.3f}x "
+            f"> {GATE_OBS_ENABLED}x over obs-disabled")
+    if base_ratio is not None and base_ratio > GATE_OBS_DISABLED_VS_BASE:
+        raise AssertionError(
+            f"obs-disabled regression gate failed at {n}n: "
+            f"{off:.3f}s is {base_ratio:.3f}x the stored baseline "
+            f"{base_wall:.3f}s (gate {GATE_OBS_DISABLED_VS_BASE}x)")
+    return info
 
 
 def _kernel_gates(ba: Dict, ke: Dict, policy: str, n: int) -> None:
@@ -70,21 +151,24 @@ def _kernel_gates(ba: Dict, ke: Dict, policy: str, n: int) -> None:
 
 
 def measure(policy: str, n_workers: int, *, mode: str,
-            sim_seconds: float, seed: int = 0) -> Dict:
+            sim_seconds: float, seed: int = 0,
+            obs: Optional[TraceRecorder] = None) -> Dict:
     """One proportionally-sized job for ``sim_seconds`` of simulated time;
-    report whole-run wall-clock and the shuffle work counters."""
+    report whole-run wall-clock and the shuffle work counters. Pass an
+    ``obs`` recorder to measure the fully-wired flight-recorder cost."""
     n_maps = SCALE_SPLITS_PER_WORKER * n_workers
     spec = JobSpec("scale", "terasort", n_maps / 8.0)  # 8 splits per GB
     base = BINO_PARAMS if policy == "bino" else SimParams()
     params = dataclasses.replace(base, sim_time_cap=sim_seconds)
     sim = Simulation(policy=policy, seed=seed, n_workers=n_workers,
                      n_containers=SCALE_N_CONTAINERS, params=params,
-                     shuffle=mode)
+                     shuffle=mode, obs=obs)
     sim.submit(spec)
-    drain = attach_drain_timer(sim)
+    reg = instrument_drain(sim)
     t0 = time.perf_counter()
     sim.run()
     wall = time.perf_counter() - t0
+    drain_s = drain_seconds(reg)
     prof = sim.shuffle.profile
     lane = getattr(sim.shuffle, "batches", None)
     recs = lane.applied if lane is not None else 0
@@ -95,9 +179,9 @@ def measure(policy: str, n_workers: int, *, mode: str,
         "mode": mode,
         "sim_seconds": sim_seconds,
         "wall_s": round(wall, 3),
-        "drain_s": round(drain["s"], 3),
+        "drain_s": round(drain_s, 3),
         "drain_records": recs,
-        "drain_us_per_record": round(1e6 * drain["s"] / max(recs, 1), 2),
+        "drain_us_per_record": round(1e6 * drain_s / max(recs, 1), 2),
         "slots_filled": prof.slots_filled,
         "selection_work": prof.selection_work,
         "notifies": prof.notifies,
@@ -204,9 +288,11 @@ def run() -> List[Row]:
             raise AssertionError(
                 f"kernel drain 10k-node end-to-end gate failed: "
                 f"{k_speedup:.2f} < {GATE_KERNEL_E2E_10K}x over batch")
+    obs_overhead = _obs_overhead_gate(sim_seconds, quick, rows)
     payload = {
         "sim_seconds": sim_seconds,
         "splits_per_worker": SCALE_SPLITS_PER_WORKER,
+        "obs_overhead": obs_overhead,
         "results": results,
         "speedup_at_500": speedup_at,
         "batch_speedup_at": {str(k): v

@@ -35,6 +35,7 @@ FIGS = [
     "fig7_glance",
     "fig8_collective",
     "fig9_rollback",
+    "fig_scorecard",
     "perf_scale",
     "perf_shuffle",
     "perf_accel",
@@ -87,8 +88,8 @@ def main() -> None:
     jobs = max(1, args.jobs)
     # Modules that merge into BENCH_scale.json must not race each other's
     # read-modify-write; they run serially after the parallel batch.
-    writers = {"perf_scale", "perf_shuffle", "perf_accel", "perf_net",
-               "perf_runtime"}
+    writers = {"fig_scorecard", "perf_scale", "perf_shuffle", "perf_accel",
+               "perf_net", "perf_runtime"}
     parallel = [m for m in selected if m not in writers]
     by_mod = {}
     if jobs > 1 and len(parallel) > 1:

@@ -24,9 +24,10 @@ from repro.sim import JobSpec, Simulation, faults
 
 def run(policy: str, gb: float, frac: float, seed: int,
         shuffle: str = "batch", assess_backend: str = "numpy",
-        net: str = "flat", racks: int = 0):
+        net: str = "flat", racks: int = 0, obs=None):
     sim = Simulation(policy=policy, seed=seed, shuffle=shuffle,
-                     assess_backend=assess_backend, net=net, racks=racks)
+                     assess_backend=assess_backend, net=net, racks=racks,
+                     obs=obs)
     job = sim.submit(JobSpec("demo", "terasort", gb))
     faults.crash_busiest_node_at_map_progress(sim, job, frac)
 
@@ -191,6 +192,10 @@ def main() -> None:
                          "(default: 4 for topo, 1 for fair)")
     ap.add_argument("--sweep", type=int, default=0, metavar="N",
                     help="demo the batched sweep across N fault scenarios")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record the bino run with the flight recorder "
+                         "and export a Chrome/Perfetto trace "
+                         "(DESIGN.md §18; see examples/TRACES.md)")
     args = ap.parse_args()
 
     # fault-free baseline
@@ -203,10 +208,15 @@ def main() -> None:
           f"{args.frac:.0%} map progress (net={args.net}, "
           f"fault-free JCT {base:.0f}s) ===")
     yarn_sim = None
+    recorder = None
     for policy in ("yarn", "bino"):
+        obs = None
+        if args.trace and policy == "bino":
+            from repro.obs import TraceRecorder
+            obs = recorder = TraceRecorder()
         res, timeline, sim = run(policy, args.gb, args.frac, args.seed,
                                  assess_backend=args.assess_backend,
-                                 net=args.net, racks=args.racks)
+                                 net=args.net, racks=args.racks, obs=obs)
         if policy == "yarn":
             yarn_sim = sim
         print(f"\n--- {policy.upper()} ---  JCT {res.jct:.0f}s "
@@ -235,6 +245,21 @@ def main() -> None:
                             args.net, n_racks)
     if args.sweep:
         _demo_sweep(args.sweep, args.seed, net=args.net, racks=args.racks)
+    if recorder is not None:
+        from repro.obs import scorecard, write_chrome_trace
+        path = write_chrome_trace(recorder, args.trace,
+                                  node_names=sim.cluster.node_ids)
+        card = scorecard(recorder, policy="bino")
+        print("\n=== flight recorder (bino run) ===")
+        print(f"  {len(recorder)} records "
+              f"({recorder.dropped} dropped), counts: "
+              + ", ".join(f"{k}={v}"
+                          for k, v in sorted(recorder.counts().items())))
+        print(f"  scorecard: recall={card['recall']} "
+              f"precision={card['precision']} ttd={card['ttd']} "
+              f"wasted_backup_work={card['wasted_backup_work']}")
+        print(f"  wrote {path} — open in https://ui.perfetto.dev "
+              f"(examples/TRACES.md)")
 
 
 if __name__ == "__main__":

@@ -55,19 +55,28 @@ def main() -> int:
     ap.add_argument("--horizon", type=float, default=20.0,
                     help="chaos horizon in seconds (x/y map into it)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record the run with the flight recorder and "
+                         "export a Chrome/Perfetto trace (DESIGN.md §18; "
+                         "see examples/TRACES.md)")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
     chaos = (ChaosController(parse_script(args.chaos),
                              horizon=args.horizon, seed=args.seed)
              if args.chaos else None)
+    recorder = None
+    if args.trace:
+        from repro.obs import TraceRecorder
+        # chaos emits fault markers from its own scheduler thread
+        recorder = TraceRecorder(thread_safe=True)
     rt = RuntimeConfig(
         n_hosts=args.hosts, microbatches_per_shard=args.microbatches,
         recovery=args.policy, compute_delay=0.02,
         repair_timeout=1.0, restart_timeout=3.0)
     trainer = TrainerRuntime(cfg, TrainConfig(), rt,
                              seq_len=args.seq_len, per_shard_batch=2,
-                             seed=args.seed, chaos=chaos)
+                             seed=args.seed, chaos=chaos, obs=recorder)
     print(f"policy={args.policy} hosts={args.hosts} "
           f"chaos={args.chaos or 'none'}")
     try:
@@ -94,6 +103,18 @@ def main() -> int:
         if chaos is not None:
             active = {k: v for k, v in chaos.stats.items() if v}
             print(f"chaos stats: {active or 'no events fired'}")
+        if recorder is not None:
+            from repro.obs import scorecard, write_chrome_trace
+            hosts = [f"h{i:02d}" for i in range(args.hosts)]
+            path = write_chrome_trace(recorder, args.trace,
+                                      node_names=hosts)
+            card = scorecard(recorder, policy=args.policy)
+            print(f"trace: {len(recorder)} records "
+                  f"({recorder.dropped} dropped) -> {path} "
+                  f"(open in https://ui.perfetto.dev)")
+            if chaos is not None:
+                print(f"scorecard: recall={card['recall']} "
+                      f"precision={card['precision']} ttd={card['ttd']}")
         if bad or _update_corrupted(trainer):
             print("FATAL: corrupted model update detected", file=sys.stderr)
             return 2

@@ -26,6 +26,7 @@ from repro.core.types import (
     TaskState,
     TaskView,
 )
+from repro.obs.trace import K_RAMP
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +48,9 @@ class CollectiveSpeculation:
                  backend: "Optional[str | AssessmentBackend]" = None):
         self.cfg = cfg
         self.backend = get_backend(backend)
+        # Optional flight recorder (repro.obs): one K_RAMP record per
+        # ramp round that actually launches.
+        self.obs = None
         # Per job: ramp round and last ramp time.
         self._round: Dict[str, int] = {}
         self._last_check: Dict[str, float] = {}
@@ -148,6 +152,10 @@ class CollectiveSpeculation:
                 launched += 1
             if launched > 0:
                 self._round[job_id] = rnd + 1
+                if self.obs is not None:
+                    self.obs.emit(K_RAMP, a=rnd, b=launched,
+                                  f0=float(nh_budget),
+                                  f1=float(beyond_budget), obj=job_id)
 
         return actions
 

@@ -33,6 +33,12 @@ import numpy as np
 from repro.accel.base import AssessmentBackend, get_backend
 from repro.core import metrics as M
 from repro.core.types import AttemptState, ClusterSnapshot, TaskKind, TaskState
+from repro.obs.trace import (
+    K_GLANCE_FAIL,
+    K_GLANCE_SPATIAL,
+    K_GLANCE_TEMPORAL,
+    K_THRESH,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +149,9 @@ class NeighborhoodGlance:
         # (reference path); per-job (n_nodes,) counters (vectorized path).
         self._spatial_streak: Dict[Tuple[str, str], int] = {}
         self._v_streak: Dict[str, np.ndarray] = {}
+        # Optional flight recorder (repro.obs): verdict records carrying
+        # the Eq. 1–4 inputs at decision time. One branch per fire site.
+        self.obs = None
 
     def _build_neighborhoods(self, topology) -> np.ndarray:
         return build_neighborhoods(self.node_ids, self.cfg.size_neighbor,
@@ -180,6 +189,7 @@ class NeighborhoodGlance:
         # by an order of magnitude (the dichotomy, §II.B) — mixing them
         # makes every reducer-hosting node look slow. See DESIGN.md §8.
         hits: set = set()
+        pstats: Dict[int, Tuple[float, float, float]] = {}
         for kind in (TaskKind.MAP, TaskKind.REDUCE):
             prog, rt, nodes = [], [], []
             for t in snap.tasks.values():
@@ -198,7 +208,14 @@ class NeighborhoodGlance:
                 np.asarray(prog), np.asarray(rt), np.asarray(nodes),
                 len(self.node_ids))
             mask = M.spatial_slow_mask_np(P, self._neighborhoods)
-            hits |= {self.node_ids[i] for i in np.flatnonzero(mask)}
+            for i in np.flatnonzero(mask):
+                hits.add(self.node_ids[i])
+                if self.obs is not None:
+                    nh = P[self._neighborhoods[i]]
+                    nh = nh[~np.isnan(nh)]
+                    mu = float(nh.mean()) if len(nh) else 0.0
+                    sd = float(nh.std()) if len(nh) else 0.0
+                    pstats[int(i)] = (float(P[i]), mu, sd)
         out = []
         for nid in self.node_ids:
             key = (job_id, nid)
@@ -207,6 +224,11 @@ class NeighborhoodGlance:
                 self._spatial_streak[key] = streak
                 if streak >= self.cfg.spatial_consecutive:
                     out.append(nid)
+                    if self.obs is not None:
+                        i = self.node_index[nid]
+                        p, mu, sd = pstats.get(i, (0.0, 0.0, 0.0))
+                        self.obs.emit(K_GLANCE_SPATIAL, a=i, b=streak,
+                                      f0=p, f1=mu, f2=sd, obj=job_id)
             else:
                 self._spatial_streak.pop(key, None)
         return out
@@ -264,6 +286,12 @@ class NeighborhoodGlance:
         slow_mask, delta_now = M.temporal_slow_mask_np(
             zeta_now, zeta_prev, dt, delta_ref,
             threshold_slowdown=self.cfg.threshold_slowdown)
+        if self.obs is not None:
+            for i in np.flatnonzero(slow_mask):
+                self.obs.emit(K_GLANCE_TEMPORAL, a=int(i),
+                              f0=float(delta_now[i]),
+                              f1=float(delta_ref[i]), f2=dt,
+                              f3=self.cfg.threshold_slowdown)
         history.append(delta_now)
         del history[:-self.cfg.temporal_window]
         return slow_mask, delta_now
@@ -293,6 +321,10 @@ class NeighborhoodGlance:
             if silent > self._thresholds[i]:
                 self._declared[i] = True
                 newly_failed.append(nid)
+                if self.obs is not None:
+                    self.obs.emit(K_GLANCE_FAIL, a=i, f0=silent,
+                                  f1=float(self._thresholds[i]),
+                                  f2=silent - float(self._thresholds[i]))
         return newly_failed
 
     def _record_outage(self, node_id: str, duration: float) -> None:
@@ -302,9 +334,14 @@ class NeighborhoodGlance:
         del hist[:-L]
         est = M.eq4_estimate_np(hist, L)
         if est is not None:
-            self._thresholds[self.node_index[node_id]] = float(np.clip(
+            i = self.node_index[node_id]
+            self._thresholds[i] = float(np.clip(
                 est * self.cfg.fail_threshold_margin,
                 self.cfg.fail_threshold_min, self.cfg.fail_threshold_max))
+            if self.obs is not None:
+                self.obs.emit(K_THRESH, a=i, b=len(hist),
+                              f0=float(self._thresholds[i]), f1=duration,
+                              f2=float(est))
 
     # Substrate hook: a node confirmed dead externally resets its streak so a
     # replacement with the same id starts from the configured default.
@@ -352,6 +389,12 @@ class NeighborhoodGlance:
                 self._v_streak[jid] = streak
             streak[:] = np.where(hits[pos], streak + 1, 0)
             fire[pos] = streak >= self.cfg.spatial_consecutive
+            if self.obs is not None:
+                # Vectorized path: the backend consumed the P values; the
+                # verdict record carries the streak only (§18.2 waiver).
+                for i in np.flatnonzero(fire[pos]):
+                    self.obs.emit(K_GLANCE_SPATIAL, a=int(i),
+                                  b=int(streak[i]), obj=jid)
         if len(self._v_streak) > 2 * J + 16:  # shed completed jobs' state
             keep = {jid for jid, _ in active}
             self._v_streak = {j: s for j, s in self._v_streak.items()
@@ -404,4 +447,11 @@ class NeighborhoodGlance:
         newlost = ~resp & np.isnan(self._lost)
         self._lost[newlost] = arr.node_hb[newlost]
         self._declared[cand] = True
-        return [self.node_ids[i] for i in np.flatnonzero(cand)]
+        out = [self.node_ids[i] for i in np.flatnonzero(cand)]
+        if self.obs is not None:
+            for i in np.flatnonzero(cand):
+                silent = now - float(arr.node_hb[i])
+                self.obs.emit(K_GLANCE_FAIL, a=int(i), f0=silent,
+                              f1=float(self._thresholds[i]),
+                              f2=silent - float(self._thresholds[i]))
+        return out

@@ -35,10 +35,15 @@ from repro.core.types import (
     TaskState,
     TaskView,
 )
+from repro.obs.trace import K_LATE
 
 
 class Speculator:
     """Common protocol: one assessment tick → actions."""
+
+    # Optional flight recorder (repro.obs); Simulation._wire_obs / the
+    # runtime coordinator set it on the instance.
+    obs = None
 
     def assess(self, snap: ClusterSnapshot) -> List[Action]:  # pragma: no cover
         raise NotImplementedError
@@ -132,9 +137,12 @@ class YarnLateSpeculator(Speculator):
         if not slow:
             return None
         # Speculate the slow task with the LONGEST estimated remaining time.
-        _, _, victim = max(slow, key=lambda r: r[1])
+        rho_v, est_v, victim = max(slow, key=lambda r: r[1])
         self._last_launch[job_id] = snap.now
         self._spec_count[job_id] = self._spec_count.get(job_id, 0) + 1
+        if self.obs is not None:
+            self.obs.emit(K_LATE, f0=rho_v, f1=float(thresh), f2=est_v,
+                          obj=victim.task_id)
         return SpeculateTask(task_id=victim.task_id, reason="late")
 
     def job_done(self, job_id: str) -> None:
@@ -172,6 +180,10 @@ class YarnLateSpeculator(Speculator):
                     continue
                 self._last_launch[jid] = now
                 self._spec_count[jid] = self._spec_count.get(jid, 0) + 1
+                if self.obs is not None:
+                    # Vectorized path: ρ/threshold stay in the backend;
+                    # the record pins victim + time only (§18.2 waiver).
+                    self.obs.emit(K_LATE, obj=arr.task_ids[victims[pos]])
                 actions.append(SpeculateTask(
                     task_id=arr.task_ids[victims[pos]], reason="late"))
         return actions

@@ -37,6 +37,8 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.trace import K_FLOW_CLOSE, K_FLOW_OPEN
+
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.sim.cluster import Cluster
 
@@ -81,6 +83,9 @@ class NetworkModel:
     name = "base"
     inline_flat = False
     wants_drain_hook = False
+    # Optional flight recorder (repro.obs); Simulation._wire_obs sets it.
+    # Class-level None keeps the per-flow branch one attribute load.
+    obs = None
     # Models that can stage flow bookkeeping across a drain and apply it
     # in one vectorized end-of-drain step (FairNetwork's bulk mode,
     # DESIGN.md §17.2) advertise it here; the kernel drain engine calls
@@ -197,6 +202,8 @@ class NetworkModel:
         pos = self._node_pos
         nf = self.node_flows
         s = self.nodes[src]
+        if self.obs is not None:
+            self.obs.emit(K_FLOW_OPEN, a=pos[src], b=pos[dst])
         if src == dst:
             s.active_flows += 2 if self.seed_compat else 1
             nf[pos[src]] = s.active_flows
@@ -211,6 +218,8 @@ class NetworkModel:
         pos = self._node_pos
         nf = self.node_flows
         s = self.nodes[src]
+        if self.obs is not None:
+            self.obs.emit(K_FLOW_CLOSE, a=pos[src], b=pos[dst])
         if src == dst:
             k = 2 if self.seed_compat else 1
             s.active_flows = max(0, s.active_flows - k)

@@ -32,6 +32,7 @@ from typing import Dict, List, Sequence, Tuple
 import numpy as np
 
 from repro.net.base import DEFAULT_OVERSUB, NetworkModel
+from repro.obs.trace import K_FLOW_BULK
 
 _INIT_FLOWS = 256
 
@@ -89,6 +90,11 @@ class FairNetwork(NetworkModel):
         self._bulk = False
         self._backend = None
         self._stale = False               # staged table updates pending
+        # Staged open/close tallies since the last end_drain — the bulk
+        # path bypasses ``_count_open``/``_count_close`` (and thus their
+        # per-flow obs records); end_drain emits one K_FLOW_BULK summary.
+        self._staged_opens = 0
+        self._staged_closes = 0
         self.last_slot = -1               # slot of the latest open_flow
         # Drain-boundary re-allocation of in-flight transfers (§17.4
         # waiver): opt-in; consumed by KernelShuffle, not by this class.
@@ -188,6 +194,7 @@ class FairNetwork(NetworkModel):
             self.n_flows += 1
             self._pair.setdefault((src, dst), []).append(slot)
             self._stale = True
+            self._staged_opens += 1
             share = self.link_share
             n = len(self.node_ids)
             if si == di:
@@ -251,6 +258,7 @@ class FairNetwork(NetworkModel):
             self.n_flows -= 1
             self._free.append(slot)
             self._stale = True
+            self._staged_closes += 1
             return
         row = self.f_links[slot]
         n2 = 2 * len(self.node_ids)
@@ -288,6 +296,12 @@ class FairNetwork(NetworkModel):
             # flows changed during the drain: the next begin_drain (or
             # rate_probe) re-solves — the incremental path's cadence
             self._dirty = True
+            if self.obs is not None:
+                self.obs.emit(K_FLOW_BULK, b=self.n_flows,
+                              f0=float(self._staged_opens),
+                              f1=float(self._staged_closes))
+        self._staged_opens = 0
+        self._staged_closes = 0
 
     def _rebuild_tables(self) -> None:
         """Catch the link/count tables up with the drain's staged

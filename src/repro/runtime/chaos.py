@@ -47,6 +47,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.trace import FAULT_CODES, K_FAULT
 from repro.runtime.clock import Clock
 from repro.runtime.hosts import AckMessage, GradMessage, ProgressMessage
 
@@ -119,6 +120,12 @@ class ChaosController:
         self.script = [tuple(s) for s in script]
         self.horizon = float(horizon)
         self.defer_arm = bool(defer_arm)
+        # Optional flight recorder (repro.obs): one K_FAULT ground-truth
+        # record per script step, emitted at fire time from THIS
+        # controller's scheduler thread — pass a recorder built with
+        # ``thread_safe=True``. The Coordinator auto-wires its own ``obs``
+        # here when none was set.
+        self.obs = None
         self._armed = False
         self.rng = random.Random(seed)
         self.stats: Dict[str, int] = {}
@@ -190,7 +197,8 @@ class ChaosController:
         ids = sorted(self._hosts)
         for kind, idx, x, y in self.script:
             hid = ids[idx % len(ids)]
-            self._compile(kind, hid, float(x), float(y))
+            self._compile(kind, hid, float(x), float(y),
+                          pos=idx % len(ids))
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="chaos-sched")
         self._thread.start()
@@ -205,11 +213,22 @@ class ChaosController:
                 self._bump("reorder_flushed")
 
     # -- script compilation ----------------------------------------------
-    def _compile(self, kind: str, hid: str, x: float, y: float) -> None:
+    def _compile(self, kind: str, hid: str, x: float, y: float,
+                 pos: int = -1) -> None:
         at = self._t0 + x * self.horizon
         dur = (0.15 + 0.5 * y) * self.horizon
         host = self._hosts[hid]
         st = self._states.setdefault(hid, _HostState())
+
+        def emit_fault() -> None:
+            # ground truth for the speculation scorecard (§18.4): reads
+            # self.obs at fire time so late wiring still records
+            rec = self.obs
+            if rec is not None:
+                rec.emit(K_FAULT, a=pos, b=FAULT_CODES.get(kind, 0),
+                         f0=x, f1=y, obj=hid)
+
+        self._schedule(at, emit_fault)
 
         def window(attr: str) -> None:
             # windows only ever extend (overlap unions, like the sim)

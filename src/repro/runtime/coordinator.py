@@ -85,6 +85,16 @@ from repro.core.arrays import ArraySnapshot
 from repro.core.collective import CollectiveConfig
 from repro.core.glance import GlanceConfig
 from repro.data.pipeline import DataState
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import (
+    END_COMPLETED,
+    END_FAILED,
+    END_KILLED,
+    K_ATT_END,
+    K_ATT_START,
+    K_DETECT,
+    K_ROLLBACK,
+)
 from repro.runtime.clock import Clock, SystemClock
 from repro.runtime.hosts import (
     AckMessage,
@@ -179,7 +189,8 @@ class StepReport:
 class Coordinator:
     def __init__(self, cfg: RuntimeConfig, *, grad_fn, apply_fn, batch_fn,
                  init_state, datastates: Sequence[DataState],
-                 clock: Optional[Clock] = None, chaos=None):
+                 clock: Optional[Clock] = None, chaos=None,
+                 obs=None, metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.grad_fn = grad_fn
         self.apply_fn = apply_fn          # (state, summed_grads) -> state
@@ -200,7 +211,19 @@ class Coordinator:
         # at-least-once assign delivery: attempt_id -> in-flight send
         self._pending: Dict[str, Dict[str, Any]] = {}
         self.resend_count = 0
+        # Flight recorder + metrics plane (repro.obs, DESIGN.md §18).
+        # Pass a ``TraceRecorder(thread_safe=True)``: the coordinator only
+        # emits from its own thread, but a wired ChaosController emits
+        # K_FAULT from the chaos scheduler thread.
+        self.obs = obs
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         host_ids = [f"h{i:02d}" for i in range(cfg.n_hosts)]
+        self._host_pos = {hid: i for i, hid in enumerate(host_ids)}
+        if obs is not None:
+            obs.time_fn = self.clock.time
+            if self.chaos is not None and getattr(self.chaos, "obs", None) \
+                    is None:
+                self.chaos.obs = obs
         for hid in host_ids:
             self._spawn_host(hid)
         if self.chaos is not None:
@@ -227,6 +250,13 @@ class Coordinator:
                 self.arr.node_speed[:] = 0.0
             if cfg.verify_columnar and cfg.assess_columnar:
                 self._ref_spec = BinocularSpeculator(host_ids, bc)
+            if obs is not None:
+                # Policy-side decision records (K_LATE / K_GLANCE_* /
+                # K_THRESH / K_RAMP). Never wired into ``_ref_spec`` —
+                # the differential shadow would double-emit.
+                self.speculator.obs = obs
+                self.speculator.glance.obs = obs
+                self.speculator.collective.obs = obs
         self.reports: List[StepReport] = []
 
     # ------------------------------------------------------------------
@@ -288,14 +318,20 @@ class Coordinator:
                 break
             if status == "restart":
                 restarts += 1
+                self.metrics.counter("restarts").inc()
                 continue
             # Wedged: graceful degradation instead of gang abort — the
             # step rolls back to its in-memory commit point (state only
             # mutates on success) and resumes on the surviving quorum.
             wedges += 1
+            self.metrics.counter("wedges").inc()
             if wedges > self.cfg.step_retry_limit:
                 raise StepWedged(step, status)
             self._declare_silent_dead(recoveries)
+            if self.obs is not None:
+                # step-level in-memory rollback (a = -1: not host-scoped)
+                self.obs.emit(K_ROLLBACK, a=-1, b=wedges,
+                              obj=f"step{step}")
             recoveries.append(
                 f"step {step}: {status} -> rollback resume "
                 f"#{wedges} on {len(self.live_hosts())} hosts")
@@ -305,6 +341,8 @@ class Coordinator:
             mb_needed=self.n_shards * self.cfg.microbatches_per_shard,
             recoveries=recoveries, restarts=restarts, metrics=metrics,
             wedges=wedges)
+        self.metrics.histogram("step_wall").observe(report.wall_s)
+        self.metrics.counter("mb_executed").inc(mb_executed)
         self.reports.append(report)
         return report
 
@@ -322,6 +360,11 @@ class Coordinator:
         t = tasks[task_id]
         seq = len(t["attempts"])
         t["attempts"].append(rec)
+        if self.obs is not None:
+            self.obs.emit(
+                K_ATT_START, a=self._host_pos[host_id],
+                b=(1 if speculative else 0) | (2 if rollback else 0),
+                obj=aid)
         if self.arr is not None:
             rec.row = self.arr.add_attempt(
                 rec, aid, task_id, t["order"], seq, t["job_idx"],
@@ -375,6 +418,7 @@ class Coordinator:
                 continue
             p["tries"] += 1
             self.resend_count += 1
+            self.metrics.counter("resends").inc()
             backoff = min(cfg.backoff_cap,
                           cfg.backoff_base * (2.0 ** p["tries"]))
             backoff *= 1.0 + cfg.backoff_jitter * self._rng.random()
@@ -385,6 +429,15 @@ class Coordinator:
         rec.state = state
         if state != AttemptState.RUNNING:
             rec.end = self.clock.time()
+            if self.obs is not None:
+                code = (END_COMPLETED if state == AttemptState.COMPLETED
+                        else END_KILLED if state == AttemptState.KILLED
+                        else END_FAILED)
+                self.obs.emit(
+                    K_ATT_END, a=self._host_pos[rec.host_id], b=code,
+                    f0=rec.start, f1=float(rec.mb_done),
+                    f2=1.0 if rec.speculative else 0.0,
+                    obj=rec.attempt_id)
         if self.arr is not None and rec.row >= 0:
             self.arr.set_attempt_state(rec.row, state)
 
@@ -583,6 +636,10 @@ class Coordinator:
         for hid in self.live_hosts():
             if now - hb.get(hid, 0.0) > thresh:
                 self.dead_hosts.add(hid)
+                if self.obs is not None:
+                    self.obs.emit(K_DETECT, a=self._host_pos[hid], b=0,
+                                  obj="silent-at-rollback")
+                self.metrics.counter("expiry_declares").inc()
                 recoveries.append(
                     f"host {hid} silent {now - hb.get(hid, 0.0):.2f}s "
                     "at rollback -> declared dead")
@@ -660,6 +717,10 @@ class Coordinator:
                 if act.node_id in self.dead_hosts:
                     continue
                 self.dead_hosts.add(act.node_id)
+                if self.obs is not None:
+                    self.obs.emit(K_DETECT, a=self._host_pos[act.node_id],
+                                  b=1, obj=act.reason)
+                self.metrics.counter("detections").inc()
                 recoveries.append(f"host {act.node_id} declared failed "
                                   f"({act.reason})")
                 # fail its running attempts; reassignment happens via the
@@ -781,6 +842,11 @@ class Coordinator:
         st = self.datastates[shard]
         for _ in range(resume):
             st = st.advance()
+        if self.obs is not None and resume > 0:
+            # rollback resume: only the missing microbatches re-execute
+            self.obs.emit(K_ROLLBACK, a=self._host_pos[host],
+                          f0=resume / M, obj=tid)
+        self.metrics.counter("recoveries").inc()
         self._assign(step, tasks, attempts, tid, shard, host, resume,
                      speculative=speculative,
                      rollback=resume > 0, data_state=st)
@@ -805,6 +871,10 @@ class Coordinator:
             return False
         for hid in silent:
             self.dead_hosts.add(hid)
+            if self.obs is not None:
+                self.obs.emit(K_DETECT, a=self._host_pos[hid], b=0,
+                              obj="gang-timeout")
+            self.metrics.counter("expiry_declares").inc()
             recoveries.append(
                 f"host {hid} timed out ({self.cfg.restart_timeout}s) "
                 "-> gang restart of step")
@@ -815,7 +885,7 @@ class Coordinator:
         # abort: cancel everything, discard partials
         for a in attempts.values():
             if a.state == AttemptState.RUNNING:
-                a.state = AttemptState.KILLED
+                self._set_astate(a, AttemptState.KILLED)
                 if a.host_id not in self.dead_hosts:
                     self.hosts[a.host_id].cancel(a.attempt_id)
         self._pending.clear()

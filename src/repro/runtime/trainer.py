@@ -41,7 +41,8 @@ class TrainerRuntime:
     def __init__(self, cfg: ModelConfig, tc: TrainConfig,
                  rt: RuntimeConfig, *, seq_len: int = 128,
                  per_shard_batch: int = 2, seed: int = 0,
-                 clock: Optional[Clock] = None, chaos=None):
+                 clock: Optional[Clock] = None, chaos=None,
+                 obs=None, metrics=None):
         self.cfg = cfg
         self.tc = tc
         self.rt = rt
@@ -84,7 +85,7 @@ class TrainerRuntime:
         self.coord = Coordinator(
             rt, grad_fn=grad_fn, apply_fn=apply_fn, batch_fn=batch_fn,
             init_state=init_state, datastates=shards,
-            clock=clock, chaos=chaos)
+            clock=clock, chaos=chaos, obs=obs, metrics=metrics)
         self.ckpt = (CheckpointManager(rt.checkpoint_dir)
                      if rt.checkpoint_dir else None)
         self._start_step = 0

@@ -13,6 +13,7 @@ import dataclasses
 from typing import TYPE_CHECKING, List, Optional, Tuple
 
 from repro.core.types import TaskKind, TaskState
+from repro.obs.trace import K_DISPATCH
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
     from repro.sim.mapreduce import SimTask, Simulation
@@ -62,6 +63,12 @@ class Dispatcher:
             if node_id is None:
                 still.append(req)
                 continue
+            if sim.obs is not None:
+                sim.obs.emit(
+                    K_DISPATCH, a=sim.cluster._node_pos[node_id],
+                    b=(1 if req.speculative else 0) |
+                      (2 if req.rollback else 0),
+                    obj=req.reason or None)
             sim._start_attempt(req, node_id)
         self.pending = still
 

@@ -24,6 +24,8 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.trace import K_DRAIN as _K_DRAIN
+
 
 class Cancelled(Exception):
     pass
@@ -67,7 +69,7 @@ class BatchQueue:
     __slots__ = ("engine", "recs", "objs", "_heap", "_n", "_free",
                  "_apply", "_flush", "_drain_impl", "_kind", "_time",
                  "_row", "_dep", "_payload", "in_drain", "applied",
-                 "on_begin", "on_end")
+                 "on_begin", "on_end", "obs")
 
     def __init__(self, engine: "Engine", apply: Callable, flush: Callable,
                  drain: Optional[Callable] = None, cap: int = 1024):
@@ -100,6 +102,9 @@ class BatchQueue:
         # the drain-parity tests exercise identical rate schedules.
         self.on_begin: Optional[Callable] = None
         self.on_end: Optional[Callable] = None
+        # Optional flight recorder (repro.obs): one drain-summary record
+        # per drain run, no per-record cost.
+        self.obs = None
         engine.attach_lane(self)
 
     def _cache_views(self) -> None:
@@ -157,6 +162,10 @@ class BatchQueue:
         lane fully drains (every live token is a pending record, so an
         empty heap means no token dangles)."""
         self.in_drain = True
+        rec = self.obs
+        if rec is not None:
+            t0 = self.engine.now
+            n0 = self.applied
         if self.on_begin is not None:
             self.on_begin()
         try:
@@ -166,6 +175,8 @@ class BatchQueue:
             if self.on_end is not None:
                 self.on_end()
             self._flush()
+            if rec is not None:
+                rec.emit(_K_DRAIN, b=self.applied - n0, f0=t0)
         if not self._heap:
             self._n = 0
             self.objs.clear()

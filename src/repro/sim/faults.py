@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.core.types import TaskState
+from repro.obs.trace import FAULT_CODES, K_FAULT
 from repro.sim.mapreduce import SimJob, Simulation
 
 
@@ -101,6 +102,12 @@ def heartbeat_outage_at(sim: Simulation, node_id: str, at: float,
     ever extend (overlapping outages — or an outage during a link cut —
     union; a short outage must not resume a severed link's heartbeats)."""
     def start():
+        # Emit inside the existing callback — scheduling a separate obs
+        # event would shift engine seq allocation and break the
+        # obs-on ≡ obs-off byte-identity gate (DESIGN.md §18.2).
+        if sim.obs is not None:
+            sim.obs.emit(K_FAULT, a=sim.cluster._node_pos[node_id],
+                         b=FAULT_CODES["hb"], f0=duration)
         node = sim.cluster.nodes[node_id]
         node.hb_suppressed_until = max(node.hb_suppressed_until,
                                        sim.engine.now + duration)
@@ -129,6 +136,9 @@ def rack_switch_degrade_at(sim: Simulation, rack: int, at: float,
         return min((f for _e, f in reg), default=1.0)
 
     def start():
+        if sim.obs is not None:
+            sim.obs.emit(K_FAULT, a=-1, b=FAULT_CODES["degrade"],
+                         f0=factor, f1=float(key))
         end = (sim.engine.now + duration if duration is not None
                else float("inf"))
         sim._degrade_windows.setdefault(key, []).append((end, factor))
@@ -267,6 +277,9 @@ def disk_exception_on_map(sim: Simulation, job: SimJob, map_index: int,
         if map_index >= len(job.maps):
             return
         t = job.maps[map_index]
+        if sim.obs is not None:
+            sim.obs.emit(K_FAULT, a=-1, b=FAULT_CODES["disk"],
+                         f0=frac, obj=t.task_id)
         t.inject_disk_exception_at = frac
         # The first attempt may already be running (dispatch happens in the
         # submit event): inject directly and recompute its milestones.

@@ -52,6 +52,22 @@ from repro.core.types import (
     TaskView,
 )
 from repro.net.base import make_network
+from repro.obs.trace import (
+    ACT_KILL,
+    ACT_MARK_FAILED,
+    ACT_SPECULATE,
+    END_COMPLETED,
+    END_FAILED,
+    END_KILLED,
+    FAULT_CODES,
+    K_ACTION,
+    K_ATT_END,
+    K_ATT_START,
+    K_DETECT,
+    K_FAULT,
+    K_ROLLBACK,
+    TraceRecorder,
+)
 from repro.sim.cluster import Cluster, HEARTBEAT_PERIOD
 from repro.sim.dispatch import Dispatcher, LaunchRequest
 from repro.sim.engine import Engine, EventHandle
@@ -358,9 +374,12 @@ class Simulation:
     seed-exact quasi-static per-NIC share; "topo": rack-aware with
     oversubscribed uplinks; "fair": batched ε-fair flows re-solved per
     BatchQueue drain — DESIGN.md §15), with ``racks``/``net_opts``
-    parameterizing it. ``record_actions=True`` appends
-    ``(time, repr(action))`` to ``action_trace`` for those
-    comparisons."""
+    parameterizing it. ``record_actions=True`` keeps the policy-action
+    rail (read back lazily via the ``action_trace`` property) for those
+    comparisons; ``obs=TraceRecorder(...)`` additionally wires the
+    flight recorder through every subsystem emit site (DESIGN.md §18) —
+    glance verdicts with their Eq. 1–4 inputs, attempt lifecycle, drain
+    brackets, flow events, fault injections."""
 
     def __init__(self, *, policy: str = "yarn",
                  policy_factory: Optional[Callable[[Sequence[str]], Speculator]] = None,
@@ -370,7 +389,8 @@ class Simulation:
                  assess_backend: Optional[str] = None,
                  net: object = "flat", racks: int = 0,
                  net_opts: Optional[Dict] = None,
-                 record_actions: bool = False):
+                 record_actions: bool = False,
+                 obs: Optional[TraceRecorder] = None):
         self.engine = Engine()
         # Pluggable network substrate (DESIGN.md §15): "flat" is the
         # seed-exact default; "topo"/"fair" add rack topology and the
@@ -403,7 +423,18 @@ class Simulation:
         if self.arrays is not None:
             self.arrays.init_net(self.cluster.net)
         self.record_actions = record_actions
-        self.action_trace: List[Tuple[float, str]] = []
+        # Flight recorder (DESIGN.md §18). An explicitly-passed recorder
+        # is wired through every subsystem emit site after construction;
+        # record_actions=True alone gets a private actions-only recorder
+        # backing the lazy ``action_trace`` property (the seed's
+        # unbounded repr-string list is retired — reprs materialize only
+        # when an equivalence test reads the property).
+        self.obs = obs
+        self._act_rec = obs
+        if obs is None and record_actions:
+            self._act_rec = TraceRecorder()
+        if self._act_rec is not None:
+            self._act_rec.time_fn = lambda: self.engine.now
         # Assessment-path profiling (benchmarks/perf_scale.py).
         self.assess_ticks = 0
         self.assess_wall = 0.0
@@ -433,6 +464,37 @@ class Simulation:
         self.truth_crashed: Set[str] = set()
         self.policy_failed_calls: List[Tuple[float, str]] = []
         self._started = False
+        if obs is not None:
+            self._wire_obs(obs)
+
+    def _wire_obs(self, rec: TraceRecorder) -> None:
+        """Thread the flight recorder through every subsystem emit site
+        (DESIGN.md §18.2). Each site pays one ``is not None`` branch when
+        a recorder is absent; nothing else changes — the obs-on ≡ obs-off
+        byte-identity gate in tests/test_obs.py pins that."""
+        rec.time_fn = lambda: self.engine.now
+        self.cluster.net.obs = rec
+        sp = self.speculator
+        sp.obs = rec
+        glance = getattr(sp, "glance", None)
+        if glance is not None:
+            glance.obs = rec
+        coll = getattr(sp, "collective", None)
+        if coll is not None:
+            coll.obs = rec
+        lane = getattr(self.shuffle, "batches", None)
+        if lane is not None:
+            lane.obs = rec
+
+    @property
+    def action_trace(self) -> List[Tuple[float, str]]:
+        """Lazy ``(time, repr(action))`` materialization from the
+        recorder's action rail — read by the trace-equivalence tests;
+        empty unless ``record_actions`` (or an ``obs`` recorder) was
+        requested."""
+        if self._act_rec is None:
+            return []
+        return [(t, repr(a)) for t, a in self._act_rec.actions()]
 
     @property
     def pending(self) -> List[LaunchRequest]:
@@ -551,6 +613,11 @@ class Simulation:
         if req.speculative:
             task.job.n_spec_attempts += 1
         self.cluster.nodes[node_id].busy.add(a.attempt_id)
+        if self.obs is not None:
+            self.obs.emit(
+                K_ATT_START, a=self.cluster._node_pos[node_id],
+                b=(1 if req.speculative else 0) | (2 if rollback else 0),
+                obj=a.attempt_id)
         arr = self.arrays
         if arr is not None:
             a.row = arr.add_attempt(
@@ -645,10 +712,20 @@ class Simulation:
         else:
             self._map_completed(a)
 
+    def _obs_att_end(self, a: SimAttempt, code: int) -> None:
+        # _work_done_now() is the pure read: the emit must not perturb
+        # float state (obs-on/off byte identity, §18.2).
+        self.obs.emit(
+            K_ATT_END, a=self.cluster._node_pos[a.node_id], b=code,
+            f0=a.start_time, f1=a._work_done_now(),
+            f2=1.0 if a.is_speculative else 0.0, obj=a.attempt_id)
+
     def _map_completed(self, a: SimAttempt) -> None:
         task = a.task
         a.state = AttemptState.COMPLETED
         a.end_time = self.engine.now
+        if self.obs is not None:
+            self._obs_att_end(a, END_COMPLETED)
         a.node.busy.discard(a.attempt_id)
         self._arr_node_free(a.node_id)
         a.node.mofs[task.task_id] = task.job.spec.mof_bytes()
@@ -741,6 +818,8 @@ class Simulation:
         task = a.task
         a.state = AttemptState.COMPLETED
         a.end_time = self.engine.now
+        if self.obs is not None:
+            self._obs_att_end(a, END_COMPLETED)
         a.node.busy.discard(a.attempt_id)
         self._arr_node_free(a.node_id)
         task.state = TaskState.COMPLETED
@@ -759,6 +838,8 @@ class Simulation:
     def _attempt_failed(self, a: SimAttempt, reason: str) -> None:
         if a.state != AttemptState.RUNNING:
             return
+        if self.obs is not None:
+            self._obs_att_end(a, END_FAILED)
         a.state = AttemptState.FAILED
         a.end_time = self.engine.now
         if a.row >= 0:
@@ -785,6 +866,11 @@ class Simulation:
             and failed.node_id not in self._marked_failed
             and node.spill_logs.get(task.task_id, 0.0) > 0.0)
         if use_rollback:
+            if self.obs is not None:
+                self.obs.emit(
+                    K_ROLLBACK, a=self.cluster._node_pos[failed.node_id],
+                    f0=node.spill_logs.get(task.task_id, 0.0),
+                    obj=task.task_id)
             return [
                 LaunchRequest(task, placement=(failed.node_id,),
                               rollback=True, rollback_node=failed.node_id,
@@ -796,6 +882,8 @@ class Simulation:
     def _kill_attempt(self, a: SimAttempt, reason: str = "") -> None:
         if a.state != AttemptState.RUNNING:
             return
+        if self.obs is not None:
+            self._obs_att_end(a, END_KILLED)
         a.state = AttemptState.KILLED
         a.end_time = self.engine.now
         if a.row >= 0:
@@ -821,6 +909,9 @@ class Simulation:
         if node_id in self._marked_failed:
             return
         self._marked_failed.add(node_id)
+        if self.obs is not None:
+            self.obs.emit(K_DETECT, a=self.cluster._node_pos[node_id],
+                          b=1 if by_policy else 0)
         node = self.cluster.nodes[node_id]
         # Its MOF copies stop being fetchable the moment the RM marks it.
         self.shuffle.registry.drop_node_sources(node)
@@ -865,6 +956,9 @@ class Simulation:
         loss; the node stays healthy). In-flight transfers of that
         partition abort; task bookkeeping still believes the output exists
         — only subsequent fetches discover the loss."""
+        if self.obs is not None:
+            self.obs.emit(K_FAULT, a=-1, b=FAULT_CODES["mof"],
+                          obj=prod.task_id)
         for nid in list(prod.output_nodes):
             self.cluster.nodes[nid].mofs.pop(prod.task_id, None)
         self.shuffle.registry.drop_producer(prod.task_id)
@@ -888,6 +982,10 @@ class Simulation:
         ever extends — a cut never shortens a window someone else
         (an outage, an earlier cut) already installed."""
         node = self.cluster.nodes[node_id]
+        if self.obs is not None:
+            self.obs.emit(K_FAULT, a=self.cluster._node_pos[node_id],
+                          b=FAULT_CODES["cut"],
+                          f0=duration if duration is not None else 0.0)
         target = (self.engine.now + duration if duration is not None
                   else float("inf"))
         if target > node.hb_suppressed_until:
@@ -956,6 +1054,11 @@ class Simulation:
     def set_node_speed(self, node_id: str, speed: float) -> None:
         """Sync every hosted attempt at the OLD speed, flip, reschedule."""
         node = self.cluster.nodes[node_id]
+        if self.obs is not None and 0.0 < speed < 1.0:
+            # A slowdown fault (crash emits its own record at speed 0;
+            # restoring to 1.0 is recovery, not a fault).
+            self.obs.emit(K_FAULT, a=self.cluster._node_pos[node_id],
+                          b=FAULT_CODES["slow"], f0=speed)
         hosted = [a for a in self.attempts.values()
                   if a.node_id == node_id and a.state == AttemptState.RUNNING]
         for a in hosted:
@@ -974,6 +1077,9 @@ class Simulation:
         Attempts keep their frozen progress; RM/policy must DISCOVER the
         death (that discovery latency is the paper's whole subject)."""
         node = self.cluster.nodes[node_id]
+        if self.obs is not None:
+            self.obs.emit(K_FAULT, a=self.cluster._node_pos[node_id],
+                          b=FAULT_CODES["crash"])
         self.truth_crashed.add(node_id)
         self.set_node_speed(node_id, 0.0)
         self.shuffle.registry.drop_node_sources(node)
@@ -1087,10 +1193,19 @@ class Simulation:
         self.assess_wall += time.perf_counter() - t0
         self.assess_ticks += 1
         self.actions_emitted += len(actions)
-        if self.record_actions:
-            now = self.engine.now
+        rec = self._act_rec
+        if rec is not None and actions:
+            pos = self.cluster._node_pos
             for act in actions:
-                self.action_trace.append((now, repr(act)))
+                if isinstance(act, MarkNodeFailed):
+                    code, nid = ACT_MARK_FAILED, act.node_id
+                elif isinstance(act, SpeculateTask):
+                    code, nid = ACT_SPECULATE, self._spec_victim(act)
+                else:
+                    code = ACT_KILL
+                    att = self.attempts.get(act.attempt_id)
+                    nid = att.node_id if att is not None else None
+                rec.emit(K_ACTION, a=pos.get(nid, -1), b=code, obj=act)
         self._fetch_failures.clear()
         for act in actions:
             if isinstance(act, MarkNodeFailed):
@@ -1105,6 +1220,15 @@ class Simulation:
         if self.active_jobs or len(self.results) < len(self.jobs):
             self.engine.after(self.params.spec_interval,
                               self._speculator_tick)
+
+    def _spec_victim(self, act: SpeculateTask) -> Optional[str]:
+        """Node a SpeculateTask implicates: where the task's current
+        attempt runs (trace labeling only — never feeds decisions)."""
+        task = self._task(act.task_id)
+        if task is None:
+            return None
+        running = task.running_attempts()
+        return running[0].node_id if running else None
 
     def _apply_speculate(self, act: SpeculateTask) -> None:
         task = self._task(act.task_id)

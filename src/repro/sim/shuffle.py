@@ -51,6 +51,7 @@ import numpy as np
 from repro.core.rollback import ProgressLog
 from repro.core.speculator import BinocularSpeculator
 from repro.core.types import AttemptState, TaskState
+from repro.obs.trace import K_FETCH_FAIL
 from repro.sim.cluster import DISK_BW, NIC_BW
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
@@ -343,6 +344,9 @@ class ShuffleEngine:
             return
         ss.failed_cycles += 1
         sim = self.sim
+        if sim.obs is not None:
+            sim.obs.emit(K_FETCH_FAIL, a=sim.cluster._node_pos[a.node_id],
+                         b=ss.failed_cycles, obj=m)
         # AM-side report (quorum bookkeeping may re-run the producer).
         sim._report_fetch_failure(a, m)
         prod = sim._task(m)
@@ -928,6 +932,9 @@ class BatchShuffle(EventShuffle):
             return
         ss.failed_cycles += 1
         sim = self.sim
+        if sim.obs is not None:
+            sim.obs.emit(K_FETCH_FAIL, a=sim.cluster._node_pos[a.node_id],
+                         b=ss.failed_cycles, obj=m)
         sim._report_fetch_failure(a, m)
         prod = sim._task(m)
         if prod is not None and prod.state == TaskState.COMPLETED:

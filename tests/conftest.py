@@ -85,7 +85,8 @@ def run_traced(mode: str, policy: str, fault: Optional[Callable] = None,
                columnar: bool = True,
                net: object = "flat", racks: int = 0,
                net_opts: Optional[dict] = None,
-               generic_drain: bool = False) -> TraceResult:
+               generic_drain: bool = False,
+               obs: object = None) -> TraceResult:
     """One seeded simulation with launch instrumentation. ``checks``
     schedules mid-run invariant sweeps (shuffle partition + registry +
     columnar mirror + network flow/link counters); ``net``/``racks``
@@ -94,7 +95,7 @@ def run_traced(mode: str, policy: str, fault: Optional[Callable] = None,
     sim = Simulation(policy=policy, seed=seed, shuffle=mode,
                      columnar=columnar, assess_backend=assess_backend,
                      net=net, racks=racks, net_opts=net_opts,
-                     record_actions=True)
+                     record_actions=True, obs=obs)
     if generic_drain:
         sim.shuffle.batches._drain_impl = sim.shuffle.batches._generic_drain
     launches: List[Tuple] = []
