@@ -5,9 +5,11 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-fuzz test-net test-runtime test-kernel-drain test-obs \
+	test-dispatch \
 	lint bench bench-perf bench-perf-full bench-accel bench-accel-full \
 	bench-net bench-net-full bench-runtime bench-runtime-full \
-	bench-bulk bench-bulk-full bench-scorecard bench-scorecard-full
+	bench-bulk bench-bulk-full bench-scorecard bench-scorecard-full \
+	bench-dispatch bench-dispatch-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -48,6 +50,17 @@ test-runtime:
 		$(PY) -m pytest -q \
 		tests/test_runtime.py tests/test_data_checkpoint.py
 
+# Multi-tenant dispatch-plane lane (DESIGN.md §19): the two dispatcher
+# bugfixes (capped-launch retention, done-job enqueue guard + the
+# n_maps_done invariant), DRR fair-share properties, bulk/scalar/legacy
+# placement equivalence, the cluster-wide speculation budget policies
+# (budgeted/clone), workload generators, and the dispatch column of the
+# fuzz matrix.
+test-dispatch:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q tests/test_dispatch.py
+	JAX_PLATFORMS=cpu REPRO_FUZZ_EXAMPLES=10 $(PY) -m pytest -q \
+		tests/test_fuzz_equivalence.py -k dispatch
+
 # Flight-recorder lane (DESIGN.md §18): schema round-trip, bounded
 # memory, the obs-on == obs-off byte-identity gate per shuffle engine,
 # scorecard math, and the sim vs FakeClock-runtime cross-world
@@ -65,7 +78,8 @@ LINT_PATHS = src/repro/sim src/repro/net src/repro/core/arrays.py \
 	tests/test_shuffle.py \
 	tests/test_columnar.py tests/test_accel.py tests/test_cluster_index.py \
 	tests/test_engine.py tests/test_fuzz_equivalence.py tests/test_net.py \
-	tests/test_runtime.py tests/test_obs.py tests/conftest.py
+	tests/test_runtime.py tests/test_obs.py tests/test_dispatch.py \
+	tests/conftest.py
 
 lint:
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
@@ -131,3 +145,15 @@ bench-scorecard:
 
 bench-scorecard-full:
 	$(PY) -m benchmarks.run --only fig_scorecard
+
+# Multi-tenant dispatch plane (DESIGN.md §19): µs per granted launch,
+# bulk plane vs the pre-§19 linear rescan, plus the 100-worker fleet
+# figure (p50/p99 job slowdown + utilization for yarn/bino/budgeted/
+# clone). The full sweep adds the gated 10 000-node tier (plane cost
+# per decision >= 2x down vs the linear pass) and a 150-job fleet
+# reaching >= 100 concurrent jobs.
+bench-dispatch:
+	$(PY) -m benchmarks.run --only perf_dispatch --quick
+
+bench-dispatch-full:
+	$(PY) -m benchmarks.run --only perf_dispatch

@@ -41,6 +41,7 @@ FIGS = [
     "perf_accel",
     "perf_net",
     "perf_runtime",
+    "perf_dispatch",
 ]
 
 # (rows, wall seconds, error string or "")
@@ -89,7 +90,7 @@ def main() -> None:
     # Modules that merge into BENCH_scale.json must not race each other's
     # read-modify-write; they run serially after the parallel batch.
     writers = {"fig_scorecard", "perf_scale", "perf_shuffle", "perf_accel",
-               "perf_net", "perf_runtime"}
+               "perf_net", "perf_runtime", "perf_dispatch"}
     parallel = [m for m in selected if m not in writers]
     by_mod = {}
     if jobs > 1 and len(parallel) > 1:

@@ -408,6 +408,16 @@ class ArraySnapshot:
             minlength=len(starts)) > 0
         return rows[starts[~has_running]]
 
+    def n_running_spec(self) -> int:
+        """RUNNING speculative attempts of active jobs — the cluster-wide
+        speculation-budget occupancy (DESIGN.md §19.3). Mirrors the
+        reference walk over every active job's attempts exactly: task
+        state does not gate it (a completed task's still-running backup
+        occupies its slot until reaped)."""
+        m = self.active[:self.n] & self.spec[:self.n] \
+            & (self.a_state[:self.n] == A_RUNNING)
+        return int(m.sum())
+
     def owner(self, row: int) -> object:
         """The substrate object (attempt) that owns ``row``."""
         return self._owners[row]

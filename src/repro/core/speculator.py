@@ -35,7 +35,7 @@ from repro.core.types import (
     TaskState,
     TaskView,
 )
-from repro.obs.trace import K_LATE
+from repro.obs.trace import K_BUDGET, K_LATE
 
 
 class Speculator:
@@ -187,6 +187,267 @@ class YarnLateSpeculator(Speculator):
                 actions.append(SpeculateTask(
                     task_id=arr.task_ids[victims[pos]], reason="late"))
         return actions
+
+
+# ---------------------------------------------------------------------------
+# Cross-job policies under a cluster-wide speculation budget (ISSUE 9;
+# Xu & Lau, "Optimization for Speculative Execution of Multiple Jobs in
+# a MapReduce-like Cluster" and "Task-Cloning Algorithms with
+# Competitive Performance Bounds" — PAPERS.md). Both meter backup
+# launches *across* jobs instead of per-job: the budget bounds the
+# number of concurrently RUNNING speculative copies cluster-wide.
+# ---------------------------------------------------------------------------
+class SpeculationBudget:
+    """Cluster-wide speculative-slot meter.
+
+    Accounting contract (DESIGN.md §19.3): at the start of each
+    assessment tick ``begin_tick`` re-bases occupancy on the number of
+    speculative copies actually RUNNING; ``admit`` then charges this
+    tick's launches against the remaining headroom. Copies admitted but
+    still queued at the dispatcher (cluster momentarily full) are not
+    double-counted — the budget bounds *running* copies plus one tick's
+    admissions, not queue depth; the dispatcher's per-task
+    ``has_queued`` guard keeps re-proposals of a queued task out.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = max(0, int(capacity))
+        self.in_use = 0
+        # Lifetime counters (scorecards / benchmarks).
+        self.admitted = 0
+        self.denied = 0
+
+    def begin_tick(self, running_spec: int) -> None:
+        self.in_use = int(running_spec)
+
+    def admit(self, cost: int = 1) -> bool:
+        if self.in_use + cost > self.capacity:
+            self.denied += 1
+            return False
+        self.in_use += cost
+        self.admitted += 1
+        return True
+
+    @property
+    def available(self) -> int:
+        return max(0, self.capacity - self.in_use)
+
+
+def _count_running_spec(snap: ClusterSnapshot) -> int:
+    """Budget occupancy: RUNNING speculative attempts across every
+    active job (columnar when available; the reference walk matches it
+    attempt-for-attempt)."""
+    arr = getattr(snap, "arrays", None)
+    if arr is not None:
+        return arr.n_running_spec()
+    n = 0
+    for t in snap.tasks.values():
+        for a in t.attempts:
+            if a.state == AttemptState.RUNNING and a.is_speculative:
+                n += 1
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetConfig:
+    # Budget = max(min_budget, fraction × total container slots).
+    budget_fraction: float = 0.05
+    min_budget: int = 2
+    # The inner detector runs un-throttled (no per-job serial delay, no
+    # per-job cap) — throttling is the *global* budget's job.
+    late: LateConfig = LateConfig(launch_delay=0.0, speculative_cap=1.0)
+
+
+class BudgetedSpeculator(Speculator):
+    """Cross-job speculation with global admission (Xu & Lau).
+
+    An un-throttled LATE detector proposes per-job straggler candidates;
+    a cluster-level admission pass ranks them by estimated remaining
+    work (largest first — the copies that buy the most completion-time)
+    and admits greedily while the cluster-wide budget of speculative
+    copies lasts. Kill/reap actions pass through unmetered.
+    """
+
+    def __init__(self, total_slots: int = 160,
+                 cfg: BudgetConfig = BudgetConfig(),
+                 assess_backend: "Optional[str | AssessmentBackend]" = None,
+                 budget: Optional[SpeculationBudget] = None):
+        self.cfg = cfg
+        self.inner = YarnLateSpeculator(cfg.late,
+                                        assess_backend=assess_backend)
+        self.budget = budget if budget is not None else SpeculationBudget(
+            max(cfg.min_budget,
+                int(cfg.budget_fraction * total_slots)))
+
+    # The flight recorder threads through the inner detector (its K_LATE
+    # records carry the ranking inputs); the wrapper shares it.
+    @property
+    def obs(self):
+        return self.inner.obs
+
+    @obs.setter
+    def obs(self, rec) -> None:
+        self.inner.obs = rec
+
+    def _est_remaining(self, snap: ClusterSnapshot, task_id: str) -> float:
+        t = snap.tasks.get(task_id)
+        if t is None:
+            return 0.0
+        run = [a for a in t.attempts if a.state == AttemptState.RUNNING]
+        if not run:
+            return 0.0
+        a = max(run, key=lambda a: a.progress)
+        rho = a.progress_rate(snap.now)
+        return (1.0 - a.progress) / max(rho, 1e-9)
+
+    def assess(self, snap: ClusterSnapshot) -> List[Action]:
+        actions = self.inner.assess(snap)
+        keep: List[Action] = [a for a in actions
+                              if not isinstance(a, SpeculateTask)]
+        cands = [a for a in actions if isinstance(a, SpeculateTask)]
+        self.budget.begin_tick(_count_running_spec(snap))
+        admitted = 0
+        if cands:
+            # Benefit-greedy: longest estimated remaining work first
+            # (stable — ties keep per-job submission order).
+            ranked = sorted(
+                cands,
+                key=lambda a: -self._est_remaining(snap, a.task_id))
+            for act in ranked:
+                if self.budget.admit():
+                    admitted += 1
+                    keep.append(dataclasses.replace(
+                        act, reason="budgeted"))
+        if cands and self.obs is not None:
+            self.obs.emit(K_BUDGET, a=self.budget.in_use,
+                          b=self.budget.capacity, f0=float(len(cands)),
+                          f1=float(admitted),
+                          f2=float(len(cands) - admitted))
+        return keep
+
+    def job_done(self, job_id: str) -> None:
+        self.inner.job_done(job_id)
+
+
+@dataclasses.dataclass(frozen=True)
+class CloneConfig:
+    # Jobs with at most this many tasks are cloned upfront; bigger jobs
+    # fall back to LATE detection (Xu & Lau's small-job regime — the
+    # PACMan mix is 85 % such jobs).
+    small_job_tasks: int = 12
+    budget_fraction: float = 0.15
+    min_budget: int = 4
+    late: LateConfig = LateConfig()
+
+
+class CloneSmallJobs(Speculator):
+    """Upfront task cloning for small jobs (Xu & Lau).
+
+    Every task of a small job gets one clone as soon as its first
+    attempt runs — straggler *avoidance* rather than detection — metered
+    by the cluster-wide budget; large jobs keep LATE detection (whose
+    candidates for small jobs are dropped: the clone already covers
+    them). The sibling-completion reap kills whichever copy loses.
+    """
+
+    def __init__(self, total_slots: int = 160,
+                 cfg: CloneConfig = CloneConfig(),
+                 assess_backend: "Optional[str | AssessmentBackend]" = None,
+                 budget: Optional[SpeculationBudget] = None):
+        self.cfg = cfg
+        self.inner = YarnLateSpeculator(cfg.late,
+                                        assess_backend=assess_backend)
+        self.budget = budget if budget is not None else SpeculationBudget(
+            max(cfg.min_budget,
+                int(cfg.budget_fraction * total_slots)))
+        self._cloned: Set[str] = set()  # task_ids already offered a clone
+
+    @property
+    def obs(self):
+        return self.inner.obs
+
+    @obs.setter
+    def obs(self, rec) -> None:
+        self.inner.obs = rec
+
+    def _small_jobs(self, snap: ClusterSnapshot) -> Set[str]:
+        arr = getattr(snap, "arrays", None)
+        thr = self.cfg.small_job_tasks
+        if arr is not None:
+            return {jid for jid, jidx in arr.active_jobs()
+                    if arr.job_task_count(jidx) <= thr}
+        counts: Dict[str, int] = {}
+        for t in snap.tasks.values():
+            counts[t.job_id] = counts.get(t.job_id, 0) + 1
+        return {jid for jid, c in counts.items() if c <= thr}
+
+    def _clone_candidates(self, snap: ClusterSnapshot,
+                          small: Set[str]) -> List[str]:
+        """Uncloned small-job tasks with a running attempt and no
+        running speculative sibling, in canonical task order."""
+        arr = getattr(snap, "arrays", None)
+        out: List[str] = []
+        if arr is not None:
+            rows = arr.running_rows(snap.now)
+            if not len(rows):
+                return out
+            jobmask = np.zeros(len(arr.job_ids), dtype=bool)
+            for jid in small:
+                jobmask[arr.job_index[jid]] = True
+            srows = rows[jobmask[arr.job[rows]]]
+            if not len(srows):
+                return out
+            torder = arr.skey[srows] >> 20
+            starts, inv = arr.task_segments(torder)
+            has_spec = np.bincount(inv, weights=arr.spec[srows],
+                                   minlength=len(starts)) > 0
+            for pos, r in enumerate(srows[starts]):
+                if has_spec[pos]:
+                    continue
+                tid = arr.task_ids[r]
+                if tid not in self._cloned:
+                    out.append(tid)
+            return out
+        for t in snap.tasks.values():
+            if t.job_id not in small or t.state != TaskState.RUNNING:
+                continue
+            if t.task_id in self._cloned or t.has_speculative_running():
+                continue
+            if any(a.state == AttemptState.RUNNING for a in t.attempts):
+                out.append(t.task_id)
+        return out
+
+    def assess(self, snap: ClusterSnapshot) -> List[Action]:
+        actions = self.inner.assess(snap)
+        small = self._small_jobs(snap)
+        keep: List[Action] = []
+        for a in actions:
+            if isinstance(a, SpeculateTask):
+                tv = snap.tasks.get(a.task_id)
+                if tv is not None and tv.job_id in small:
+                    continue  # the upfront clone covers this task
+            keep.append(a)
+        self.budget.begin_tick(_count_running_spec(snap))
+        cands = self._clone_candidates(snap, small)
+        admitted = 0
+        for task_id in cands:
+            if not self.budget.admit():
+                break
+            self._cloned.add(task_id)
+            admitted += 1
+            keep.append(SpeculateTask(task_id=task_id, reason="clone"))
+        if cands and self.obs is not None:
+            self.obs.emit(K_BUDGET, a=self.budget.in_use,
+                          b=self.budget.capacity, f0=float(len(cands)),
+                          f1=float(admitted),
+                          f2=float(len(cands) - admitted))
+        return keep
+
+    def job_done(self, job_id: str) -> None:
+        self.inner.job_done(job_id)
+        prefix = job_id + "_"
+        self._cloned = {t for t in self._cloned
+                        if not t.startswith(prefix)}
 
 
 # ---------------------------------------------------------------------------

@@ -62,8 +62,13 @@ K_ROLLBACK = 15         # a = node idx / -1, b = retry count
 K_CHECKPOINT = 16       # b = step
 K_RAMP = 17             # collective ramp; a = task idx, b = n backups,
 #                         f0 = rnd draw, f1 = neighborhood budget
-K_DISPATCH = 18         # container grant; a = node idx, b = queue depth
+K_DISPATCH = 18         # container grant; a = node idx,
+#                         b = bit0 speculative | bit1 rollback
 K_FETCH_FAIL = 19       # fetch failure cycle burned; a = node idx
+K_BUDGET = 20           # cluster-wide speculation-budget tick;
+#                         a = slots in use after admission, b = capacity,
+#                         f0 = candidates proposed, f1 = admitted,
+#                         f2 = denied this tick
 
 KIND_NAMES = {
     K_ACTION: "action", K_DETECT: "detect",
@@ -73,7 +78,7 @@ KIND_NAMES = {
     K_DRAIN: "drain", K_FLOW_OPEN: "flow_open", K_FLOW_CLOSE: "flow_close",
     K_FLOW_BULK: "flow_bulk", K_FAULT: "fault", K_ROLLBACK: "rollback",
     K_CHECKPOINT: "checkpoint", K_RAMP: "ramp", K_DISPATCH: "dispatch",
-    K_FETCH_FAIL: "fetch_fail",
+    K_FETCH_FAIL: "fetch_fail", K_BUDGET: "budget",
 }
 
 # action codes for K_ACTION.b / attempt-end state codes for K_ATT_END.b

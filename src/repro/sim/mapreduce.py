@@ -389,6 +389,7 @@ class Simulation:
                  assess_backend: Optional[str] = None,
                  net: object = "flat", racks: int = 0,
                  net_opts: Optional[Dict] = None,
+                 dispatch_opts: Optional[Dict] = None,
                  record_actions: bool = False,
                  obs: Optional[TraceRecorder] = None):
         self.engine = Engine()
@@ -448,13 +449,27 @@ class Simulation:
         elif policy == "bino":
             self.speculator = BinocularSpeculator(
                 self.cluster.node_ids, assess_backend=assess_backend)
+        elif policy == "budgeted":
+            # Cross-job speculation under a cluster-wide slot budget
+            # (Xu & Lau admission — DESIGN.md §19.3).
+            from repro.core.speculator import BudgetedSpeculator
+            self.speculator = BudgetedSpeculator(
+                total_slots=n_workers * n_containers,
+                assess_backend=assess_backend)
+        elif policy == "clone":
+            # Upfront cloning for small jobs, LATE for the rest
+            # (Xu & Lau task-cloning — DESIGN.md §19.3).
+            from repro.core.speculator import CloneSmallJobs
+            self.speculator = CloneSmallJobs(
+                total_slots=n_workers * n_containers,
+                assess_backend=assess_backend)
         else:
             from repro.core.speculator import YarnLateSpeculator
             self.speculator = YarnLateSpeculator(
                 assess_backend=assess_backend)
         self.jobs: Dict[str, SimJob] = {}
         self.active_jobs: Dict[str, SimJob] = {}
-        self.sched = Dispatcher(self)
+        self.sched = Dispatcher(self, **(dispatch_opts or {}))
         self.shuffle = make_engine(self, shuffle)
         self.attempts: Dict[str, SimAttempt] = {}
         self._fetch_failures: List[FetchFailure] = []
@@ -743,6 +758,7 @@ class Simulation:
             self.arrays.set_attempt_state(a.row, a.state)
             self._arr_task_state(task)
         self._kill_siblings(task, keep=a.attempt_id)
+        self.sched.task_done(task)
         # fresh MOF: register the source and notify waiting fetchers
         self.shuffle.on_producer_completed(task, a.node_id)
         if first_completion:
@@ -829,6 +845,7 @@ class Simulation:
             self.arrays.set_attempt_state(a.row, a.state)
             self._arr_task_state(task)
         self._kill_siblings(task, keep=a.attempt_id)
+        self.sched.task_done(task)
         self._check_job_done(task.job)
         self._dispatch()
 
@@ -1380,6 +1397,7 @@ class Simulation:
         # done; they are killed below.
         if all(t.state == TaskState.COMPLETED for t in job.reduces):
             job.done = True
+            self.sched.job_done(job.spec.job_id)
             for t in job.tasks:
                 for a in t.running_attempts():
                     self._kill_attempt(a, "job done")

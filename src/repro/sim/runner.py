@@ -68,10 +68,14 @@ def run_workload(policy: str, specs: Sequence[JobSpec],
                  *, seed: int = 0, n_workers: int = 20,
                  n_containers: int = 8,
                  params: Optional[SimParams] = None,
-                 assess_backend: Optional[str] = None) -> List[JobResult]:
+                 assess_backend: Optional[str] = None,
+                 policy_factory=None,
+                 dispatch_opts: Optional[Dict] = None) -> List[JobResult]:
     sim = Simulation(policy=policy, seed=seed, n_workers=n_workers,
                      n_containers=n_containers, params=params,
-                     assess_backend=assess_backend)
+                     assess_backend=assess_backend,
+                     policy_factory=policy_factory,
+                     dispatch_opts=dispatch_opts)
     for spec in specs:
         sim.submit(spec)
     if fault_script is not None:

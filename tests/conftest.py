@@ -86,7 +86,8 @@ def run_traced(mode: str, policy: str, fault: Optional[Callable] = None,
                net: object = "flat", racks: int = 0,
                net_opts: Optional[dict] = None,
                generic_drain: bool = False,
-               obs: object = None) -> TraceResult:
+               obs: object = None,
+               dispatch_opts: Optional[dict] = None) -> TraceResult:
     """One seeded simulation with launch instrumentation. ``checks``
     schedules mid-run invariant sweeps (shuffle partition + registry +
     columnar mirror + network flow/link counters); ``net``/``racks``
@@ -95,7 +96,8 @@ def run_traced(mode: str, policy: str, fault: Optional[Callable] = None,
     sim = Simulation(policy=policy, seed=seed, shuffle=mode,
                      columnar=columnar, assess_backend=assess_backend,
                      net=net, racks=racks, net_opts=net_opts,
-                     record_actions=True, obs=obs)
+                     record_actions=True, obs=obs,
+                     dispatch_opts=dispatch_opts)
     if generic_drain:
         sim.shuffle.batches._drain_impl = sim.shuffle.batches._generic_drain
     launches: List[Tuple] = []
@@ -125,6 +127,11 @@ def check_invariants(sim: Simulation) -> None:
     model's flow/link counters vs a live-transfer recount, and (when
     the columnar mirror is on) the incrementally-maintained columns."""
     for job in sim.active_jobs.values():
+        # n_maps_done is decremented by producer re-execution (MOF loss)
+        # and must never undershoot zero, even when the loss races job
+        # completion (DISPATCH §19 double-enqueue audit).
+        assert 0 <= job.n_maps_done <= len(job.maps), \
+            (job.spec.job_id, job.n_maps_done, len(job.maps))
         for t in job.reduces:
             for a in t.running_attempts():
                 sim.shuffle.verify_state(a)

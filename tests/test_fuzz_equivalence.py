@@ -293,6 +293,53 @@ def test_multi_job_matrix_equivalence():
 
 
 # ---------------------------------------------------------------------------
+# Dispatch column (ISSUE 9): the multi-tenant plane's placement passes.
+# On a single job every dispatcher configuration — DRR default, forced
+# bulk, forced scalar, and the legacy global FIFO — must be
+# byte-identical (the §19 single-job equivalence gate). With several
+# tenants the *fair* order is fixed and bulk vs scalar placement must
+# still agree decision-for-decision; the legacy FIFO is excluded there
+# (different service order by design).
+# ---------------------------------------------------------------------------
+DISPATCH_VARIANTS = (
+    ("default", None),
+    ("bulk", {"bulk": True, "bulk_min": 1}),
+    ("scalar", {"bulk": False}),
+    ("legacy-fifo", {"fair": False, "bulk": False}),
+)
+
+
+@pytest.mark.parametrize("name,policy,seed,script",
+                         PINNED, ids=[p[0] for p in PINNED])
+def test_pinned_scripts_equivalent_across_dispatch(name, policy, seed,
+                                                   script):
+    for mode in ("batch", "kernel"):
+        runs, labels = [], []
+        for label, opts in DISPATCH_VARIANTS:
+            runs.append(run_traced(mode, policy, script_fault(script),
+                                   seed=seed, gb=1.0,
+                                   dispatch_opts=opts))
+            labels.append(f"{mode}/{label}")
+        assert_runs_equivalent(runs, labels)
+
+
+def test_multi_job_bulk_scalar_dispatch_equivalence():
+    extra = (JobSpec("j1", "wordcount", 0.5, submit_time=6.0),
+             JobSpec("j2", "grep", 1.0, submit_time=8.0),
+             JobSpec("j3", "terasort", 0.5, submit_time=9.0))
+    for mode in ("batch", "kernel"):
+        runs, labels = [], []
+        for label, opts in (("bulk", {"bulk": True, "bulk_min": 1}),
+                            ("scalar", {"bulk": False})):
+            runs.append(run_traced(
+                mode, "bino", script_fault([("crash", 6, 0.3, 0.0)]),
+                seed=4, gb=1.0, extra_jobs=extra, dispatch_opts=opts))
+            labels.append(f"{mode}/{label}")
+        assert_runs_equivalent(runs, labels)
+        assert len(runs[0].results) == 4
+
+
+# ---------------------------------------------------------------------------
 # 2. Hypothesis: random fault scripts
 # ---------------------------------------------------------------------------
 if HAVE_HYPOTHESIS:
@@ -344,6 +391,19 @@ if HAVE_HYPOTHESIS:
         degrade, links cut and racks partition mid-shuffle."""
         run_matrix(script, policy=policy, seed=seed, gb=NET_GB,
                    net="topo", racks=4, backends=("numpy",))
+
+    @given(script=_script, seed=st.integers(0, 7))
+    @settings(max_examples=max(_FUZZ_EXAMPLES // 2, 4), deadline=None)
+    @example(script=[("mof", 0, 0.9, 1.0), ("crash", 3, 0.4, 0.0)],
+             seed=2)
+    def test_random_scripts_equivalent_across_dispatch(script, seed):
+        """Random fault scripts through every dispatcher configuration
+        on a single job: the §19 gate under fuzz."""
+        runs = [run_traced("batch", "bino", script_fault(script),
+                           seed=seed, gb=1.0, dispatch_opts=opts)
+                for _label, opts in DISPATCH_VARIANTS]
+        assert_runs_equivalent(runs,
+                               [label for label, _ in DISPATCH_VARIANTS])
 
     @given(script=_script, seed=st.integers(0, 7))
     @settings(max_examples=max(_FUZZ_EXAMPLES // 2, 4), deadline=None)

@@ -295,7 +295,9 @@ def test_shuffle_mode_selection_and_default():
 def test_dispatcher_owns_pending_queue():
     sim = Simulation(policy="yarn", seed=0)
     job = sim.submit(JobSpec("j0", "terasort", 1.0))
-    assert sim.pending is sim.sched.pending
+    # `pending` is a compatibility view computed from the dispatcher's
+    # per-tenant queues (PR 9) — same contents, fresh list per call.
+    assert sim.pending == sim.sched.pending
     sim.engine.run(until=5.0, stop=lambda: False)
     assert job.maps  # job launched, queue drained into containers
     assert all(t.kind in (TaskKind.MAP, TaskKind.REDUCE)
