@@ -5,11 +5,12 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-fuzz test-net test-runtime test-kernel-drain test-obs \
-	test-dispatch \
+	test-dispatch test-predict \
 	lint bench bench-perf bench-perf-full bench-accel bench-accel-full \
 	bench-net bench-net-full bench-runtime bench-runtime-full \
 	bench-bulk bench-bulk-full bench-scorecard bench-scorecard-full \
-	bench-dispatch bench-dispatch-full
+	bench-dispatch bench-dispatch-full \
+	train-predictor bench-predictor bench-predictor-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -68,18 +69,26 @@ test-dispatch:
 test-obs:
 	$(PY) -m pytest -q tests/test_obs.py
 
+# Learned straggler prediction lane (DESIGN.md §20): corpus byte-
+# determinism, feature semantics vs hand-computed values, training
+# convergence/determinism on a synthetic separable corpus (jax, CPU),
+# PredictorPolicy protocol conformance + budget admission, and the new
+# policy's column of the engine/obs equivalence matrix.
+test-predict:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q tests/test_predict.py
+
 # Ruff config lives in pyproject.toml ([tool.ruff]). Scope = the layers
 # the shuffle refactor owns; widen as seed modules are modernized.
 # Degrades to a no-op warning where ruff isn't installed (the baked
 # container has no network; CI installs it).
 LINT_PATHS = src/repro/sim src/repro/net src/repro/core/arrays.py \
-	src/repro/accel src/repro/obs src/repro/runtime \
+	src/repro/accel src/repro/obs src/repro/runtime src/repro/predict \
 	benchmarks examples/cluster_sim.py examples/serve.py \
 	tests/test_shuffle.py \
 	tests/test_columnar.py tests/test_accel.py tests/test_cluster_index.py \
 	tests/test_engine.py tests/test_fuzz_equivalence.py tests/test_net.py \
 	tests/test_runtime.py tests/test_obs.py tests/test_dispatch.py \
-	tests/conftest.py
+	tests/test_predict.py tests/conftest.py
 
 lint:
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
@@ -157,3 +166,22 @@ bench-dispatch:
 
 bench-dispatch-full:
 	$(PY) -m benchmarks.run --only perf_dispatch
+
+# Learned straggler predictor (DESIGN.md §20). ``train-predictor``
+# regenerates the pinned corpus and sweep-trains a checkpoint under
+# artifacts/predictor (git-ignored — checkpoints are reproducible from
+# seed, not committed). The figure trains its own model in a tempdir and
+# races it against yarn/bino on held-out scenarios, asserting the recall
+# and false-positive gates.
+train-predictor:
+	mkdir -p artifacts/predictor
+	$(PY) -m repro.predict.dataset --out artifacts/predictor/corpus.npz
+	JAX_PLATFORMS=cpu $(PY) -m repro.predict.train \
+		--corpus artifacts/predictor/corpus.npz \
+		--out artifacts/predictor/ckpt
+
+bench-predictor:
+	JAX_PLATFORMS=cpu $(PY) -m benchmarks.run --only fig_predictor --quick
+
+bench-predictor-full:
+	JAX_PLATFORMS=cpu $(PY) -m benchmarks.run --only fig_predictor

@@ -1,0 +1,178 @@
+"""Learned straggler prediction vs LATE/bino (ISSUE 10; DESIGN.md §20).
+
+Trains the §20 predictor end-to-end inside the benchmark — corpus from
+the pinned fault scripts, sweep-trained MLP, threshold calibrated on the
+train split — then races the trained ``PredictorPolicy`` against the
+``yarn`` (LATE-style) and ``bino`` policies on held-out scenario
+scripts: the fig1/fig6 crash shapes plus a rack-degrade topology run.
+Per scenario it reports finish-time slowdown against each policy's own
+fault-free baseline, detection recall (scorecard ``mode="any"``), and
+wasted backup launches.
+
+Acceptance gates (asserted, not just printed):
+- predictor recall >= bino recall on every scenario with victims;
+- predictor false-positive rate (wasted backup launches per true
+  straggler, aggregated over the scenario set) <= yarn's;
+- the training corpus and threshold calibration are recorded in the
+  payload (train/eval split sizes, eval precision/recall) so the
+  BENCH_scale.json entry documents exactly which model was measured.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.fig_predictor [--quick]
+    PYTHONPATH=src python -m benchmarks.run --only fig_predictor --quick
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Dict, List
+
+from benchmarks.common import Row, bench_json_update, bench_quick
+from repro.obs import TraceRecorder, attempt_outcomes, scorecard
+from repro.obs.trace import END_COMPLETED
+from repro.sim import JobSpec, faults
+from repro.sim.mapreduce import Simulation
+
+# Held-out scenario scripts: fig_scorecard's crash shapes plus a
+# rack-degrade run on the topology net. Seeds differ from the corpus
+# runs (dataset.CORPUS_RUNS), so the evaluation never replays a
+# trajectory the model trained on.
+SCENARIOS = {
+    "clean": ([], {}),
+    "one_crash": ([("crash", 1, 0.2, 0.0)], {}),
+    "two_crashes": ([("crash", 1, 0.2, 0.0), ("crash", 2, 0.3, 0.0)], {}),
+    "rack_degrade": ([("degrade", 0, 0.25, 0.1), ("slow", 2, 0.3, 0.4)],
+                     {"net": "topo", "racks": 4}),
+}
+SEED = 1
+POLICIES = ("yarn", "bino", "predictor")
+
+
+def _train_model(tmp: str) -> Dict:
+    """Corpus + sweep-trained checkpoint under ``tmp``; returns train
+    metadata (threshold, split sizes, eval metrics). The full pipeline
+    is seconds-scale (corpus ~3 s, 400 full-batch steps ~6 s), so quick
+    mode trains the same model as full — thinning the corpus or the
+    step count demonstrably under-trains past the gates."""
+    from repro.predict.dataset import generate_corpus
+    from repro.predict.train import train
+    corpus = os.path.join(tmp, "corpus.npz")
+    ckpt = os.path.join(tmp, "ckpt")
+    generate_corpus(corpus, seed=0)
+    return train(corpus, ckpt, seed=0)
+
+
+def _run_scenario(policy: str, script, kw: Dict, ckpt: str) -> Dict:
+    rec = TraceRecorder()
+    sim = Simulation(policy=policy, seed=SEED, obs=rec, **kw)
+    if policy == "predictor":
+        sim.speculator.load_checkpoint(ckpt)
+    job = sim.submit(JobSpec("j0", "terasort", 2.0))
+    if script:
+        faults.apply_script(sim, job, script)
+    sim.run()
+    card = scorecard(rec, policy=policy, mode="any")
+    wasted_launches = sum(1 for o in attempt_outcomes(rec)
+                          if o["speculative"]
+                          and o["end_code"] != END_COMPLETED)
+    return {
+        "finish": round(sim.engine.now, 6),
+        "recall": card["recall"],
+        "victims": len(card["victims"]),
+        "n_backups": card["n_backups"],
+        "wasted_launches": wasted_launches,
+        "wasted_backup_work": card["wasted_backup_work"],
+    }
+
+
+def run() -> List[Row]:
+    quick = bench_quick()
+    rows: List[Row] = []
+    try:
+        import jax  # noqa: F401  — training needs it; inference does not
+    except Exception:
+        rows.append(("fig_predictor/skipped", 1.0,
+                     "jax unavailable: predictor training needs the jax "
+                     "lane"))
+        return rows
+
+    with tempfile.TemporaryDirectory() as tmp:
+        meta = _train_model(tmp)
+        ckpt = os.path.join(tmp, "ckpt")
+        per: Dict[str, Dict[str, Dict]] = {}
+        for name, (script, kw) in SCENARIOS.items():
+            per[name] = {p: _run_scenario(p, script, kw, ckpt)
+                         for p in POLICIES}
+        for name in SCENARIOS:
+            base = {p: per["clean"][p]["finish"] for p in POLICIES}
+            for p in POLICIES:
+                r = per[name][p]
+                sd = r["finish"] / base[p]
+                rows.append((
+                    f"fig_predictor/{name}_{p}_slowdown", round(sd, 4),
+                    f"recall={r['recall']} victims={r['victims']} "
+                    f"backups={r['n_backups']} "
+                    f"wasted={r['wasted_launches']}"))
+
+        # Gate 1: recall — the learned policy must catch everything the
+        # hand-built binocular policy catches.
+        for name in SCENARIOS:
+            if per[name]["predictor"]["recall"] < \
+                    per[name]["bino"]["recall"] - 1e-9:
+                raise AssertionError(
+                    f"{name}: predictor recall "
+                    f"{per[name]['predictor']['recall']} < bino "
+                    f"{per[name]['bino']['recall']}")
+        # Gate 2: false-positive rate — wasted backup launches per true
+        # straggler, aggregated over the scenario set, no worse than the
+        # always-speculating LATE baseline.
+        fp_rate = {}
+        for p in POLICIES:
+            wasted = sum(per[n][p]["wasted_launches"] for n in SCENARIOS)
+            victims = sum(per[n][p]["victims"] for n in SCENARIOS)
+            fp_rate[p] = wasted / max(victims, 1)
+        rows.append(("fig_predictor/fp_rate_predictor",
+                     round(fp_rate["predictor"], 4),
+                     f"yarn={fp_rate['yarn']:.4g} "
+                     f"bino={fp_rate['bino']:.4g}"))
+        if fp_rate["predictor"] > fp_rate["yarn"] + 1e-9:
+            raise AssertionError(
+                f"predictor wastes more backups per straggler than LATE: "
+                f"{fp_rate['predictor']:.4g} > {fp_rate['yarn']:.4g}")
+
+        payload = {
+            "seed": SEED,
+            "scenarios": {n: {"script": [list(s) for s in script],
+                              "results": per[n]}
+                          for n, (script, kw) in SCENARIOS.items()},
+            "fp_rate": {p: round(v, 6) for p, v in fp_rate.items()},
+            "model": {
+                "threshold": meta["threshold"],
+                "hidden": meta["hidden"],
+                "steps": meta["steps"],
+                "train_rows": meta["split"]["n_train"],
+                "eval_rows": meta["split"]["n_eval"],
+                "eval": meta["eval"],
+                "final_train_loss": meta["final_train_loss"],
+            },
+        }
+    path = bench_json_update("fig_predictor", payload,
+                             mode="quick" if quick else "full")
+    rows.append(("fig_predictor/json", 1.0, str(path)))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.quick and not args.full:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+    for name, value, derived in run():
+        print(f"{name},{value:.4g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,7 @@ FIGS = [
     "fig8_collective",
     "fig9_rollback",
     "fig_scorecard",
+    "fig_predictor",
     "perf_scale",
     "perf_shuffle",
     "perf_accel",
@@ -89,8 +90,9 @@ def main() -> None:
     jobs = max(1, args.jobs)
     # Modules that merge into BENCH_scale.json must not race each other's
     # read-modify-write; they run serially after the parallel batch.
-    writers = {"fig_scorecard", "perf_scale", "perf_shuffle", "perf_accel",
-               "perf_net", "perf_runtime", "perf_dispatch"}
+    writers = {"fig_scorecard", "fig_predictor", "perf_scale",
+               "perf_shuffle", "perf_accel", "perf_net", "perf_runtime",
+               "perf_dispatch"}
     parallel = [m for m in selected if m not in writers]
     by_mod = {}
     if jobs > 1 and len(parallel) > 1:

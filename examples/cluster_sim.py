@@ -24,10 +24,12 @@ from repro.sim import JobSpec, Simulation, faults
 
 def run(policy: str, gb: float, frac: float, seed: int,
         shuffle: str = "batch", assess_backend: str = "numpy",
-        net: str = "flat", racks: int = 0, obs=None):
+        net: str = "flat", racks: int = 0, obs=None, model=None):
     sim = Simulation(policy=policy, seed=seed, shuffle=shuffle,
                      assess_backend=assess_backend, net=net, racks=racks,
                      obs=obs)
+    if model is not None:
+        sim.speculator.load_checkpoint(model)
     job = sim.submit(JobSpec("demo", "terasort", gb))
     faults.crash_busiest_node_at_map_progress(sim, job, frac)
 
@@ -182,6 +184,15 @@ def main() -> None:
     ap.add_argument("--assess-backend", default="numpy",
                     choices=("numpy", "jax", "pallas"),
                     help="assessment-compute backend (DESIGN.md §13)")
+    ap.add_argument("--policy", default=None, choices=("predictor",),
+                    help="add a third policy column to the crash demo: "
+                         "the learned PredictorPolicy (DESIGN.md §20); "
+                         "requires --model")
+    ap.add_argument("--model", default=None, metavar="CKPT_DIR",
+                    help="trained predictor checkpoint directory "
+                         "(make train-predictor -> artifacts/predictor/"
+                         "ckpt); loads the calibrated threshold from its "
+                         "metadata")
     ap.add_argument("--net", default="flat",
                     choices=("flat", "topo", "fair"),
                     help="network model (DESIGN.md §15): flat per-NIC "
@@ -197,6 +208,9 @@ def main() -> None:
                          "and export a Chrome/Perfetto trace "
                          "(DESIGN.md §18; see examples/TRACES.md)")
     args = ap.parse_args()
+    if args.policy == "predictor" and not args.model:
+        ap.error("--policy predictor requires --model CKPT_DIR "
+                 "(make train-predictor)")
 
     # fault-free baseline
     sim0 = Simulation(policy="yarn", seed=args.seed, net=args.net,
@@ -209,14 +223,18 @@ def main() -> None:
           f"fault-free JCT {base:.0f}s) ===")
     yarn_sim = None
     recorder = None
-    for policy in ("yarn", "bino"):
+    policies = ("yarn", "bino") + \
+        (("predictor",) if args.policy == "predictor" else ())
+    for policy in policies:
         obs = None
         if args.trace and policy == "bino":
             from repro.obs import TraceRecorder
             obs = recorder = TraceRecorder()
+        model = args.model if policy == "predictor" else None
         res, timeline, sim = run(policy, args.gb, args.frac, args.seed,
                                  assess_backend=args.assess_backend,
-                                 net=args.net, racks=args.racks, obs=obs)
+                                 net=args.net, racks=args.racks, obs=obs,
+                                 model=model)
         if policy == "yarn":
             yarn_sim = sim
         print(f"\n--- {policy.upper()} ---  JCT {res.jct:.0f}s "

@@ -17,7 +17,7 @@ from repro.obs.metrics import (
     Timer,
     instrument_drain,
 )
-from repro.obs.scorecard import comparable_core, scorecard
+from repro.obs.scorecard import attempt_outcomes, comparable_core, scorecard
 from repro.obs.trace import (
     ACT_KILL,
     ACT_MARK_FAILED,
@@ -29,6 +29,7 @@ from repro.obs.trace import (
     K_ACTION,
     K_ATT_END,
     K_ATT_START,
+    K_BUDGET,
     K_CHECKPOINT,
     K_DETECT,
     K_DISPATCH,
@@ -42,6 +43,7 @@ from repro.obs.trace import (
     K_GLANCE_SPATIAL,
     K_GLANCE_TEMPORAL,
     K_LATE,
+    K_PREDICT,
     K_RAMP,
     K_ROLLBACK,
     K_THRESH,
@@ -58,10 +60,11 @@ __all__ = [
     "K_GLANCE_FAIL", "K_THRESH", "K_LATE", "K_ATT_START", "K_ATT_END",
     "K_DRAIN", "K_FLOW_OPEN", "K_FLOW_CLOSE", "K_FLOW_BULK", "K_FAULT",
     "K_ROLLBACK", "K_CHECKPOINT", "K_RAMP", "K_DISPATCH", "K_FETCH_FAIL",
+    "K_BUDGET", "K_PREDICT",
     "ACT_MARK_FAILED", "ACT_SPECULATE", "ACT_KILL",
     "END_COMPLETED", "END_FAILED", "END_KILLED",
     "MetricsRegistry", "Counter", "Gauge", "Histogram", "Timer",
     "instrument_drain",
     "to_chrome_trace", "write_chrome_trace", "trace_diff",
-    "scorecard", "comparable_core",
+    "scorecard", "comparable_core", "attempt_outcomes",
 ]

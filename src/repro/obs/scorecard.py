@@ -28,10 +28,12 @@ fires.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, List, Optional
 
 from repro.obs.trace import (
     END_COMPLETED,
+    END_FAILED,
+    END_KILLED,
     K_ACTION,
     K_ATT_END,
     K_DETECT,
@@ -39,6 +41,57 @@ from repro.obs.trace import (
     NODE_FAULT_CODES,
     TraceRecorder,
 )
+
+
+def attempt_outcomes(rec: TraceRecorder) -> List[Dict[str, Any]]:
+    """Per-attempt ground-truth table from the lifecycle + fault planes.
+
+    One row per ``K_ATT_END`` record, in emission order, classified
+    against the injected node faults:
+
+    - ``failed`` — the attempt ended FAILED (its node died under it);
+    - ``straggled`` — the attempt was reaped (ended KILLED — a sibling
+      won its race) on a node that had a fault injected before it
+      ended. The fault anchor matters: a KILLED attempt on a
+      never-faulted node merely *lost a race* (the winner launched
+      later and tied-or-beat it on equal hardware) and is ``clean`` —
+      labeling those as stragglers teaches a predictor that every
+      long-running tail task is slow (DESIGN.md §20);
+    - ``clean`` — everything else.
+
+    Exactly one of the three flags is set per row. This is the single
+    labeling code path shared by predictor dataset generation
+    (repro.predict.dataset) and the scorecard's wasted-backup
+    accounting — post-hoc trace joins only, never tick-time state
+    (DESIGN.md §20 leakage rule).
+    """
+    victims: Dict[int, float] = {}
+    for r in rec.by_kind(K_FAULT):
+        if int(r["b"]) in NODE_FAULT_CODES and int(r["a"]) >= 0:
+            victims.setdefault(int(r["a"]), float(r["time"]))
+    rows: List[Dict[str, Any]] = []
+    for r, aid in rec.iter_with_objs(K_ATT_END):
+        node = int(r["a"])
+        end_code = int(r["b"])
+        end = float(r["time"])
+        fault_time: Optional[float] = victims.get(node)
+        on_faulted = fault_time is not None and fault_time <= end
+        failed = end_code == END_FAILED
+        straggled = not failed and end_code == END_KILLED and on_faulted
+        rows.append({
+            "attempt_id": aid,
+            "node": node,
+            "end_code": end_code,
+            "start": float(r["f0"]),
+            "end": end,
+            "work": float(r["f1"]),
+            "speculative": bool(float(r["f2"])),
+            "fault_time": fault_time if on_faulted else None,
+            "failed": failed,
+            "straggled": straggled,
+            "clean": not failed and not straggled,
+        })
+    return rows
 
 
 def scorecard(rec: TraceRecorder, *, policy: str = "",
@@ -73,11 +126,11 @@ def scorecard(rec: TraceRecorder, *, policy: str = "",
     ttd = {i: detections[i] - victims[i] for i in tp}
     wasted = 0.0
     n_backups = 0
-    for r in rec.by_kind(K_ATT_END):
-        if float(r["f2"]):  # speculative attempt
+    for o in attempt_outcomes(rec):
+        if o["speculative"]:
             n_backups += 1
-            if int(r["b"]) != END_COMPLETED:
-                wasted += float(r["f1"])
+            if o["end_code"] != END_COMPLETED:
+                wasted += o["work"]
     return {
         "policy": policy,
         "mode": mode,

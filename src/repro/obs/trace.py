@@ -69,6 +69,9 @@ K_BUDGET = 20           # cluster-wide speculation-budget tick;
 #                         a = slots in use after admission, b = capacity,
 #                         f0 = candidates proposed, f1 = admitted,
 #                         f2 = denied this tick
+K_PREDICT = 21          # learned-policy straggler score; o = task id,
+#                         a = node idx, b = 1 if admitted for backup,
+#                         f0 = sigmoid score, f1 = decision threshold
 
 KIND_NAMES = {
     K_ACTION: "action", K_DETECT: "detect",
@@ -78,7 +81,7 @@ KIND_NAMES = {
     K_DRAIN: "drain", K_FLOW_OPEN: "flow_open", K_FLOW_CLOSE: "flow_close",
     K_FLOW_BULK: "flow_bulk", K_FAULT: "fault", K_ROLLBACK: "rollback",
     K_CHECKPOINT: "checkpoint", K_RAMP: "ramp", K_DISPATCH: "dispatch",
-    K_FETCH_FAIL: "fetch_fail", K_BUDGET: "budget",
+    K_FETCH_FAIL: "fetch_fail", K_BUDGET: "budget", K_PREDICT: "predict",
 }
 
 # action codes for K_ACTION.b / attempt-end state codes for K_ATT_END.b

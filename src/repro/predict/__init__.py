@@ -1,0 +1,34 @@
+"""repro.predict — learned straggler prediction (DESIGN.md §20).
+
+Dataset generation from traced sims (``repro.predict.dataset``), a
+small MLP with a jax training path and a numpy inference path
+(``model``/``train``), and a ``PredictorPolicy`` speculator that runs
+batched inference over the live ArraySnapshot columns each assessment
+tick, beside the fixed-threshold LATE/bino/budgeted/clone policies.
+
+Only the numpy-side surface is imported here; dataset/train are
+accessed as modules so the bare tier-1 lane never touches jax or the
+simulator transitively.
+"""
+from repro.predict.features import (
+    FEATURE_NAMES,
+    N_FEATURES,
+    extract_features,
+    node_progress_rate,
+)
+from repro.predict.model import (
+    checkpoint_metadata,
+    default_params,
+    forward_np,
+    load_params_np,
+    scores_np,
+)
+from repro.predict.policy import PredictorConfig, PredictorPolicy
+
+__all__ = [
+    "FEATURE_NAMES", "N_FEATURES", "extract_features",
+    "node_progress_rate",
+    "default_params", "forward_np", "scores_np", "load_params_np",
+    "checkpoint_metadata",
+    "PredictorConfig", "PredictorPolicy",
+]

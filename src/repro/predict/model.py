@@ -1,0 +1,158 @@
+"""Straggler-prediction MLP: jax init/training path, numpy inference path
+(DESIGN.md §20).
+
+The parameter tree is one flat dict so the two worlds stay trivially
+interchangeable:
+
+- ``w0/b0/w1/b1`` — the trained net (features → hidden → 1 logit);
+- ``mu/sd`` — corpus normalization statistics, computed on the *train*
+  split and carried as frozen leaves (never touched by the optimizer —
+  weight decay on ``sd`` would drive the normalizer to zero).
+
+``forward_np`` is the default inference path so ``PredictorPolicy``
+works in the bare tier-1 lane with no jax import; ``forward_jax`` is
+the same arithmetic for the training loop. Checkpoints go through
+``repro.checkpoint.manager`` (jax side); :func:`load_params_np` reads
+the same ``manifest.json`` + ``leaf_*.npy`` layout back with numpy
+alone, so a trained model loads in the bare lane too.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.predict.features import N_FEATURES
+
+N_HIDDEN = 16
+
+Params = Dict[str, np.ndarray]
+
+# Optimizer-visible leaves, in the flat dict. mu/sd are normalization
+# constants: restored, broadcast, never updated.
+TRAINED_LEAVES = ("w0", "b0", "w1", "b1")
+FROZEN_LEAVES = ("mu", "sd")
+
+
+def default_params(n_features: int = N_FEATURES,
+                   hidden: int = N_HIDDEN) -> Params:
+    """Checkpoint-less fallback: a zero net with a negative output bias.
+    Every score is sigmoid(-2) ≈ 0.12 — below any sane threshold — so an
+    untrained predictor degenerates to "reap + failure detection, never
+    speculate". Deterministic, and safe for smoke lanes without jax."""
+    return {
+        "w0": np.zeros((n_features, hidden)),
+        "b0": np.zeros(hidden),
+        "w1": np.zeros((hidden, 1)),
+        "b1": np.full(1, -2.0),
+        "mu": np.zeros(n_features),
+        "sd": np.ones(n_features),
+    }
+
+
+def init_params(seed: int, n_features: int = N_FEATURES,
+                hidden: int = N_HIDDEN) -> Params:
+    """Seeded jax init through the shared ParamFactory (fan-in normals),
+    mirroring repro.models.layers idiom. Requires jax."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.layers import ParamFactory, split_tree
+    f = ParamFactory(jax.random.PRNGKey(seed), jnp.float32)
+    params, _axes = split_tree({
+        "w0": f.normal((n_features, hidden), ("features", "hidden")),
+        "b0": f.zeros((hidden,), (None,)),
+        "w1": f.normal((hidden, 1), ("hidden", None)),
+        "b1": f.zeros((1,), (None,)),
+        "mu": f.zeros((n_features,), (None,)),
+        "sd": f.ones((n_features,), (None,)),
+    })
+    return params
+
+
+def forward_np(params: Params, X: np.ndarray) -> np.ndarray:
+    """Logits for a feature matrix — pure numpy, float64, the live
+    assessment-tick path (deterministic across platforms)."""
+    z = (np.asarray(X, dtype=np.float64) - np.asarray(params["mu"],
+                                                      dtype=np.float64)) \
+        / np.asarray(params["sd"], dtype=np.float64)
+    h = np.maximum(z @ np.asarray(params["w0"], dtype=np.float64)
+                   + np.asarray(params["b0"], dtype=np.float64), 0.0)
+    out = h @ np.asarray(params["w1"], dtype=np.float64) \
+        + np.asarray(params["b1"], dtype=np.float64)
+    return out[:, 0]
+
+
+def forward_jax(params, X):
+    """Same arithmetic as :func:`forward_np` on jnp arrays (training)."""
+    import jax.numpy as jnp
+    z = (X - params["mu"]) / params["sd"]
+    h = jnp.maximum(z @ params["w0"] + params["b0"], 0.0)
+    return (h @ params["w1"] + params["b1"])[:, 0]
+
+
+def sigmoid_np(logits: np.ndarray) -> np.ndarray:
+    out = np.empty_like(logits, dtype=np.float64)
+    pos = logits >= 0
+    out[pos] = 1.0 / (1.0 + np.exp(-logits[pos]))
+    e = np.exp(logits[~pos])
+    out[~pos] = e / (1.0 + e)
+    return out
+
+
+def scores_np(params: Params, X: np.ndarray) -> np.ndarray:
+    return sigmoid_np(forward_np(params, X))
+
+
+# ---------------------------------------------------------------------------
+# Bare-lane checkpoint loading (no jax import)
+# ---------------------------------------------------------------------------
+def load_params_np(ckpt_dir: str, step: Optional[int] = None) -> Params:
+    """Read a ``repro.checkpoint.manager`` checkpoint with numpy alone.
+
+    ``ckpt_dir`` is either one ``step_*`` directory (contains
+    ``manifest.json``) or a manager root (the newest ``step_*`` child is
+    taken, or the one matching ``step``). The manifest's ``leaves`` map
+    gives ``leaf_XXXXX.npy → flat key``; our param tree is one flat dict,
+    so the key path is the leaf name itself.
+    """
+    d = ckpt_dir
+    if not os.path.exists(os.path.join(d, "manifest.json")):
+        steps = sorted(
+            (int(name.split("_", 1)[1]), name)
+            for name in os.listdir(d) if name.startswith("step_"))
+        if not steps:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        if step is not None:
+            match = [name for s, name in steps if s == step]
+            if not match:
+                raise FileNotFoundError(
+                    f"no step_{step} checkpoint under {ckpt_dir}")
+            d = os.path.join(d, match[0])
+        else:
+            d = os.path.join(d, steps[-1][1])
+    with open(os.path.join(d, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    params: Params = {}
+    for fname, key in manifest["leaves"].items():
+        params[str(key)] = np.load(os.path.join(d, fname))
+    missing = [k for k in TRAINED_LEAVES + FROZEN_LEAVES if k not in params]
+    if missing:
+        raise ValueError(f"checkpoint {d} missing leaves: {missing}")
+    return params
+
+
+def checkpoint_metadata(ckpt_dir: str, step: Optional[int] = None) -> Dict:
+    """The training-time metadata blob (threshold, metrics, split)."""
+    d = ckpt_dir
+    if not os.path.exists(os.path.join(d, "manifest.json")):
+        steps = sorted(
+            (int(name.split("_", 1)[1]), name)
+            for name in os.listdir(d) if name.startswith("step_"))
+        if not steps:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        d = os.path.join(d, steps[-1][1])
+    with open(os.path.join(d, "manifest.json")) as fh:
+        return json.load(fh).get("metadata") or {}

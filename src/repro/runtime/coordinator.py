@@ -147,6 +147,12 @@ class RuntimeConfig:
     assess_columnar: bool = True      # feed policies ArraySnapshot columns
     assess_backend: Optional[str] = None   # repro.accel backend name
     verify_columnar: bool = False     # differential: reference ≡ columnar
+    # Alternative speculator under recovery="bino" plumbing: a callable
+    # ``host_ids -> Speculator`` (e.g. a trained PredictorPolicy,
+    # DESIGN.md §20). Learned policies (``learned = True``) skip the
+    # verify_columnar reference shadow — their verdicts legitimately
+    # differ from BinocularSpeculator's.
+    speculator_factory: Optional[Callable[[Sequence[str]], Any]] = None
 
     def glance(self) -> GlanceConfig:
         return GlanceConfig(
@@ -239,8 +245,11 @@ class Coordinator:
         if cfg.recovery == "bino":
             bc = BinoConfig(glance=cfg.glance(),
                             collective=CollectiveConfig(check_period=0.2))
-            self.speculator = BinocularSpeculator(
-                host_ids, bc, assess_backend=cfg.assess_backend)
+            if cfg.speculator_factory is not None:
+                self.speculator = cfg.speculator_factory(host_ids)
+            else:
+                self.speculator = BinocularSpeculator(
+                    host_ids, bc, assess_backend=cfg.assess_backend)
             if cfg.assess_columnar:
                 self.arr = ArraySnapshot(host_ids, n_containers=2)
                 # Runtime progress is message-driven: between reports an
@@ -248,15 +257,25 @@ class Coordinator:
                 # (now - last_sync)·node_speed must vanish. This keeps
                 # progress_at() ≡ the reference AttemptView.progress.
                 self.arr.node_speed[:] = 0.0
-            if cfg.verify_columnar and cfg.assess_columnar:
+            if cfg.verify_columnar and cfg.assess_columnar \
+                    and not getattr(self.speculator, "learned", False):
+                # Learned policies are never shadowed by the reference
+                # speculator: the differential gate checks columnar ≡
+                # object-walk *of the same policy*, and a PredictorPolicy
+                # has no object-walk twin (DESIGN.md §20).
                 self._ref_spec = BinocularSpeculator(host_ids, bc)
             if obs is not None:
                 # Policy-side decision records (K_LATE / K_GLANCE_* /
                 # K_THRESH / K_RAMP). Never wired into ``_ref_spec`` —
-                # the differential shadow would double-emit.
+                # the differential shadow would double-emit. Factory
+                # policies may lack glance/collective sub-assessors.
                 self.speculator.obs = obs
-                self.speculator.glance.obs = obs
-                self.speculator.collective.obs = obs
+                glance = getattr(self.speculator, "glance", None)
+                if glance is not None:
+                    glance.obs = obs
+                coll = getattr(self.speculator, "collective", None)
+                if coll is not None:
+                    coll.obs = obs
         self.reports: List[StepReport] = []
 
     # ------------------------------------------------------------------

@@ -463,6 +463,19 @@ class Simulation:
             self.speculator = CloneSmallJobs(
                 total_slots=n_workers * n_containers,
                 assess_backend=assess_backend)
+        elif policy == "predictor":
+            # Learned straggler nomination over the columnar mirror
+            # (DESIGN.md §20); untrained default params degenerate to
+            # reap + silent-window failure detection.
+            if self.arrays is None:
+                raise ValueError(
+                    "policy='predictor' requires columnar=True "
+                    "(features live in the ArraySnapshot mirror)")
+            from repro.predict.policy import PredictorPolicy
+            self.speculator = PredictorPolicy(
+                self.cluster.node_ids,
+                total_slots=n_workers * n_containers,
+                assess_backend=assess_backend)
         else:
             from repro.core.speculator import YarnLateSpeculator
             self.speculator = YarnLateSpeculator(

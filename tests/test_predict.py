@@ -1,0 +1,401 @@
+"""Learned straggler prediction: dataset, training, policy (ISSUE 10;
+DESIGN.md §20).
+
+Four layers, four gates:
+
+- **Dataset** — corpus generation is byte-deterministic from its seed
+  (fixed-timestamp zip writer; two runs, one sha256), and feature
+  extraction matches hand-computed values on a hand-built snapshot.
+- **Training** — the jax sweep converges on a synthetic separable
+  corpus and is deterministic end to end (identical metadata AND
+  identical checkpoint leaves across two runs from one seed); the
+  checkpoint round-trips through the numpy-only loader.
+- **Policy** — protocol conformance: admission never exceeds the
+  speculation budget, no nomination lands on a dead or marked node,
+  the silent-window detector declares a crashed node, the untrained
+  default never speculates, and ``assess`` schedules zero engine
+  events (inference is pure reads inside the existing tick).
+- **Equivalence** — predictor runs are byte-identical across all four
+  shuffle engines and under obs-on ≡ obs-off, with mid-run columnar
+  invariant sweeps (the fuzz-matrix smoke for the new policy).
+"""
+import hashlib
+import os
+
+import numpy as np
+import pytest
+
+from conftest import (
+    HAVE_JAX,
+    TraceResult,
+    assert_runs_equivalent,
+    check_invariants,
+    skip_no_jax,
+)
+from repro.core.types import MarkNodeFailed, SpeculateTask
+from repro.obs.trace import TraceRecorder
+from repro.predict.dataset import CORPUS_RUNS, generate_corpus, load_corpus
+from repro.predict.features import (
+    FEATURE_NAMES,
+    N_FEATURES,
+    candidate_rows,
+    extract_features,
+)
+from repro.predict.model import default_params
+from repro.predict.policy import PredictorPolicy
+from repro.sim import JobSpec, Simulation, faults
+
+# Two-script subset of the pinned corpus runs: fault-free (pure
+# negatives) + slow_straggler (positives — a *gradual* fault with an
+# observable window; a crash ends its attempts at the fault instant, so
+# under the time-aware label rule crash runs are all-negative and the
+# silent-window detector, not the model, owns them).
+SMALL_RUNS = (CORPUS_RUNS[0], CORPUS_RUNS[3])
+
+CRASH_AT_20 = [("crash", 1, 0.05, 0.0)]  # fires at t = 10 + 0.05*200
+
+
+def fire_params():
+    """A net that scores every candidate at sigmoid(5) ≈ 0.993 — the
+    always-speculate extreme for budget/filter conformance tests."""
+    p = default_params()
+    p["b1"] = np.full(1, 5.0)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Dataset
+# ---------------------------------------------------------------------------
+def _sha(path):
+    with open(path, "rb") as fh:
+        return hashlib.sha256(fh.read()).hexdigest()
+
+
+def test_corpus_byte_deterministic(tmp_path):
+    a, b, c = (str(tmp_path / f"{n}.npz") for n in "abc")
+    ma = generate_corpus(a, seed=0, runs=SMALL_RUNS)
+    mb = generate_corpus(b, seed=0, runs=SMALL_RUNS)
+    assert ma == mb
+    assert _sha(a) == _sha(b), "same seed must produce identical bytes"
+    generate_corpus(c, seed=1, runs=SMALL_RUNS)
+    assert _sha(a) != _sha(c), "distinct seeds must diverge"
+
+
+def test_corpus_contents(tmp_path):
+    path = str(tmp_path / "c.npz")
+    meta = generate_corpus(path, seed=0, runs=SMALL_RUNS)
+    corpus = load_corpus(path)
+    X, y = corpus["X"], corpus["y"]
+    assert X.shape == (meta["n_rows"], N_FEATURES)
+    assert X.dtype == np.float64 and y.dtype == np.int8
+    assert list(corpus["feature_names"]) == list(FEATURE_NAMES)
+    assert corpus["meta"] == meta
+    # the slow run must contribute positive labels, fault-free only
+    # negatives (run_idx 0 is fault_free, 1 is slow_straggler)
+    assert y[corpus["run_idx"] == 0].sum() == 0
+    assert y[corpus["run_idx"] == 1].sum() > 0
+    # leakage rule: injected oracles never appear as features
+    assert "node_speed" not in FEATURE_NAMES
+    assert "rack_factor" not in FEATURE_NAMES
+
+
+class FakeArr:
+    """Hand-built two-node snapshot for feature-value verification."""
+
+    def __init__(self):
+        self.node_ids = ["n0", "n1"]
+        self.node = np.array([0, 1, 0])
+        self.start = np.array([5.0, 10.0, 12.0])
+        self.kind = np.array([0, 1, 0])          # map, reduce, map
+        self.spec = np.array([False, True, False])
+        self.deps = np.array([0, 4, 0])
+        self.fetched = np.array([0, 3, 0])
+        self.sh_ready = np.array([0, 2, 0])
+        self.sh_inflight = np.array([0, 1, 0])
+        self.sh_fail = np.array([0.0, 1.0, 0.0])
+        self.node_hb = np.array([19.5, 14.0])
+        self.node_alive = np.array([True, True])
+        self.node_marked = np.array([False, False])
+        self.node_supp = np.array([0.0, 25.0])   # node1 suppressed at t=20
+        self.node_free = np.array([2, 0])
+        self.node_total = np.array([8, 8])
+        self.node_flows = np.array([3.0, 5.0])
+        self.node_link_up = np.array([True, False])
+        self.node_rack = np.array([0, 1])
+        self.rack_flows = np.array([4.0, 9.0])
+        self._progress = np.array([0.5, 0.25, 0.75])
+
+    def running_rows(self, now):
+        return np.arange(3)
+
+    def progress_at(self, now, rows):
+        return self._progress[rows]
+
+
+def test_extract_features_hand_computed():
+    arr = FakeArr()
+    X = extract_features(arr, 20.0, np.arange(3))
+    assert X.shape == (3, N_FEATURES)
+    # per-node ρ: node0 hosts rows 0 and 2, node1 hosts row 1
+    rho0 = (0.5 / 15.0 + 0.75 / 8.0) / 2.0
+    rho1 = 0.25 / 10.0
+    mean_rho = (rho0 + rho1) / 2.0
+    expect_row0 = [
+        0.5,               # progress
+        0.5 / 15.0,        # progress_rate
+        15.0,              # elapsed
+        0.0, 0.0,          # map, primary
+        0.5,               # node_silent = 20 - 19.5
+        1.0, 0.0, 0.0,     # alive, unmarked, no suppression window
+        2.0 / 8.0,         # node_free_frac
+        rho0, rho0 / mean_rho,
+        0.0, 0.0, 0.0,     # no shuffle deps (deps clamps to 1)
+        0.0,               # fail_cycles
+        3.0, 1.0, 4.0,     # node_flows, link up, rack0 flows
+    ]
+    np.testing.assert_allclose(X[0], expect_row0, rtol=1e-12)
+    expect_row1 = [
+        0.25, 0.25 / 10.0, 10.0,
+        1.0, 1.0,          # reduce, speculative
+        6.0,               # 20 - 14
+        1.0, 0.0, 1.0,     # alive, unmarked, suppression window open
+        0.0,               # no free containers
+        rho1, rho1 / mean_rho,
+        3.0 / 4.0, 2.0 / 4.0, 1.0 / 4.0, 1.0,
+        5.0, 0.0, 9.0,     # node1 flows, link down, rack1 flows
+    ]
+    np.testing.assert_allclose(X[1], expect_row1, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Policy protocol conformance
+# ---------------------------------------------------------------------------
+def _mid_run_snapshot(until=50.0, script=CRASH_AT_20):
+    """A live columnar snapshot mid-run under the neutral yarn policy
+    (which never marks nodes — the fresh PredictorPolicy under test owns
+    every verdict)."""
+    sim = Simulation(policy="yarn", seed=1)
+    job = sim.submit(JobSpec("j0", "terasort", 2.0))
+    if script:
+        faults.apply_script(sim, job, script)
+    sim.engine.run(until=until)
+    return sim, sim._snapshot()
+
+
+def test_policy_requires_columnar():
+    pol = PredictorPolicy(["n0"])
+    sim, snap = _mid_run_snapshot(script=[])
+    bare = snap.__class__(now=snap.now, nodes=snap.nodes, tasks=snap.tasks,
+                          fetch_failures=snap.fetch_failures, arrays=None)
+    with pytest.raises(ValueError, match="columnar"):
+        pol.assess(bare)
+
+
+def test_policy_admission_bounded_and_healthy_only():
+    sim, snap = _mid_run_snapshot()
+    arr = snap.arrays
+    pol = PredictorPolicy(sim.cluster.node_ids, fire_params(),
+                          total_slots=160)
+    heap_len, seq = len(sim.engine._heap), sim.engine._seq
+    actions = pol.assess(snap)
+    # inference is pure reads: no engine event scheduled, none consumed
+    assert (len(sim.engine._heap), sim.engine._seq) == (heap_len, seq)
+    specs = [a for a in actions if isinstance(a, SpeculateTask)]
+    assert specs, "always-fire net must nominate someone"
+    assert len(specs) <= pol.budget.capacity
+    # every nominated task runs on a live, unmarked node
+    pos = {nid: i for i, nid in enumerate(sim.cluster.node_ids)}
+    for act in specs:
+        task = sim._task(act.task_id)
+        hosts = [pos[a.node_id] for a in task.running_attempts()]
+        assert hosts, act.task_id
+        assert all(arr.node_alive[h] and not arr.node_marked[h]
+                   for h in hosts), act.task_id
+    # once-per-task: a second tick re-nominates nothing
+    again = [a for a in pol.assess(snap) if isinstance(a, SpeculateTask)]
+    assert not again
+
+
+def test_policy_detects_silent_node():
+    sim, snap = _mid_run_snapshot(until=40.0)   # crash at 20 → silent 20 s
+    pol = PredictorPolicy(sim.cluster.node_ids, default_params())
+    marks = [a for a in pol.assess(snap) if isinstance(a, MarkNodeFailed)]
+    assert [m.node_id for m in marks] == [sim.cluster.node_ids[1]]
+    # declared-once latch: no duplicate verdict next tick
+    assert not [a for a in pol.assess(snap)
+                if isinstance(a, MarkNodeFailed)]
+
+
+def test_candidate_rows_mid_run():
+    sim, snap = _mid_run_snapshot()
+    arr, now = snap.arrays, snap.now
+    rows = candidate_rows(arr, now)
+    assert len(rows)
+    assert not arr.spec[rows].any()
+    assert (now - arr.start[rows] >= 10.0).all()
+    assert arr.node_alive[arr.node[rows]].all()
+    tasks = [arr.task_ids[int(r)] for r in rows]
+    assert len(tasks) == len(set(tasks)), "one candidate per task"
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: engines × obs (fuzz-matrix smoke for the new policy)
+# ---------------------------------------------------------------------------
+def _run_predictor(mode, *, obs=None, params=None, script=CRASH_AT_20,
+                   seed=1, checks=None):
+    sim = Simulation(policy="predictor", seed=seed, shuffle=mode,
+                     record_actions=True, obs=obs)
+    if params is not None:
+        sim.speculator.params = params
+    launches = []
+    orig = sim._start_attempt
+
+    def logged(req, node_id):
+        launches.append((sim.engine.now, req.task.task_id, node_id,
+                         req.reason, req.speculative, req.rollback))
+        return orig(req, node_id)
+
+    sim._start_attempt = logged
+    job = sim.submit(JobSpec("j0", "terasort", 2.0))
+    if script:
+        faults.apply_script(sim, job, script)
+    if checks:
+        for t in checks:
+            sim.engine.at(float(t), check_invariants, sim)
+    results = sim.run()
+    return TraceResult(sim, job, launches, results)
+
+
+def test_predictor_obs_identity():
+    """obs-on ≡ obs-off byte identity under an actively-firing net, with
+    mid-run columnar verification on the observed run (§18.2)."""
+    base = _run_predictor("event", params=fire_params())
+    observed = _run_predictor("event", params=fire_params(),
+                              obs=TraceRecorder(),
+                              checks=(25.0, 45.0))
+    assert_runs_equivalent([base, observed], ["obs-off", "obs-on"])
+    assert any(spec for (_, _, _, _, spec, _) in base.launches), \
+        "fire net speculated nothing — the gate probed nothing"
+
+
+def test_predictor_engine_matrix():
+    """The new policy rides every shuffle engine byte-identically."""
+    runs, labels = [], []
+    for mode in ("rescan", "event", "batch", "kernel"):
+        runs.append(_run_predictor(
+            mode, params=fire_params(),
+            checks=(30.0,) if mode in ("batch", "kernel") else None))
+        labels.append(mode)
+    assert_runs_equivalent(runs, labels)
+
+
+def test_default_predictor_never_speculates():
+    """Checkpoint-less fallback degenerates to reap + detection."""
+    res = _run_predictor("event", script=[])
+    assert not any(spec for (_, _, _, _, spec, _) in res.launches)
+    assert res.results and res.results[0].n_spec_attempts == 0
+
+
+# ---------------------------------------------------------------------------
+# Training (jax lane)
+# ---------------------------------------------------------------------------
+def _synthetic_corpus(path, seed=0, n=600):
+    """Separable toy corpus in the real schema: positives sit at low
+    node_rho_rel and low progress_rate, like true stragglers."""
+    from repro.predict.dataset import _write_npz
+    import json
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0.5, 0.2, size=(n, N_FEATURES))
+    y = np.zeros(n, dtype=np.int8)
+    pos = rng.random(n) < 0.2
+    y[pos] = 1
+    X[pos, 1] = rng.normal(0.05, 0.02, size=int(pos.sum()))
+    X[~pos, 1] = rng.normal(1.0, 0.1, size=int((~pos).sum()))
+    X[pos, 11] = rng.normal(0.3, 0.05, size=int(pos.sum()))
+    X[~pos, 11] = rng.normal(1.0, 0.1, size=int((~pos).sum()))
+    meta = {"seed": seed, "synthetic": True, "n_rows": n,
+            "n_positive": int(y.sum()),
+            "feature_names": list(FEATURE_NAMES)}
+    _write_npz(path, {
+        "X": X.astype(np.float64), "y": y,
+        "run_idx": np.zeros(n, dtype=np.int32),
+        "feature_names": np.array(FEATURE_NAMES),
+        "meta_json": np.array([json.dumps(meta, sort_keys=True)]),
+    })
+
+
+@skip_no_jax
+def test_training_converges_and_is_deterministic(tmp_path):
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from repro.predict.model import (
+        checkpoint_metadata,
+        load_params_np,
+        scores_np,
+    )
+    from repro.predict.train import train
+    corpus = str(tmp_path / "syn.npz")
+    _synthetic_corpus(corpus)
+    meta_a = train(corpus, str(tmp_path / "ck_a"), seed=0, steps=150)
+    meta_b = train(corpus, str(tmp_path / "ck_b"), seed=0, steps=150)
+    assert meta_a == meta_b, "training must be deterministic from seed"
+    assert meta_a["eval"]["precision"] >= 0.9
+    assert meta_a["eval"]["recall"] >= 0.9
+    # numpy-only round trip: leaves identical across the two runs, and
+    # the calibrated threshold separates the synthetic classes
+    pa = load_params_np(str(tmp_path / "ck_a"))
+    pb = load_params_np(str(tmp_path / "ck_b"))
+    assert sorted(pa) == sorted(pb)
+    for k in pa:
+        np.testing.assert_array_equal(pa[k], pb[k])
+    thr = checkpoint_metadata(str(tmp_path / "ck_a"))["threshold"]
+    data = load_corpus(corpus)
+    scores = scores_np(pa, data["X"])
+    hit = scores > thr
+    assert (hit & (data["y"] == 1)).sum() > 0.9 * data["y"].sum()
+
+
+@skip_no_jax
+def test_trained_policy_loads_checkpoint(tmp_path):
+    from repro.predict.train import train
+    corpus = str(tmp_path / "syn.npz")
+    _synthetic_corpus(corpus)
+    meta = train(corpus, str(tmp_path / "ck"), seed=0, steps=150)
+    pol = PredictorPolicy(["n0", "n1"])
+    pol.load_checkpoint(str(tmp_path / "ck"))
+    assert pol.cfg.threshold == meta["threshold"]
+    assert pol.params["w0"].shape == (N_FEATURES, 16)
+
+
+# ---------------------------------------------------------------------------
+# Runtime coordinator: learned policies skip the reference shadow
+# ---------------------------------------------------------------------------
+@skip_no_jax
+def test_runtime_skips_ref_shadow_for_learned_policy():
+    """With ``verify_columnar=True`` a learned speculator must NOT be
+    shadow-diverged against the BinocularSpeculator reference — the
+    shadow is skipped (ISSUE 10 satellite; DESIGN.md §20). The default
+    bino path keeps its differential shadow."""
+    from repro.configs import get_config, reduced_config
+    from repro.runtime import FakeClock, RuntimeConfig, TrainerRuntime
+    from repro.train.loop import TrainConfig
+
+    def factory(host_ids):
+        return PredictorPolicy(host_ids, total_slots=8)
+
+    for spec_factory, expect_shadow in ((factory, False), (None, True)):
+        rt = RuntimeConfig(n_hosts=4, microbatches_per_shard=4,
+                           recovery="bino", compute_delay=0.02,
+                           verify_columnar=True,
+                           speculator_factory=spec_factory)
+        t = TrainerRuntime(reduced_config(get_config("qwen1.5-0.5b")),
+                           TrainConfig(), rt, seq_len=32,
+                           per_shard_batch=2, seed=0,
+                           clock=FakeClock(auto_advance=True))
+        try:
+            assert (t.coord._ref_spec is not None) == expect_shadow
+            if spec_factory is not None:
+                assert isinstance(t.coord.speculator, PredictorPolicy)
+            reports = t.run(2)
+            assert len(reports) == 2
+        finally:
+            t.shutdown()
